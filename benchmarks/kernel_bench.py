@@ -1,0 +1,62 @@
+"""ConvDK kernel micro-benchmarks (CPU interpret-mode wall times; correctness
++ harness shape — real perf is measured via the dry-run roofline on TPU).
+
+Emits ``name,us_per_call,derived`` CSV rows like benchmarks/run.py expects.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import (
+    causal_conv1d_ref, convdk_causal_conv1d, convdk_depthwise2d,
+    depthwise2d_ref,
+)
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def rows():
+    rng = np.random.default_rng(0)
+    out = []
+
+    # depthwise 2D: a MobileNet-ish layer
+    x = jnp.asarray(rng.normal(size=(1, 28, 28, 128)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(3, 3, 128)), jnp.float32)
+    us_k = _time(lambda: convdk_depthwise2d(x, w, interpret=True))
+    us_r = _time(lambda: depthwise2d_ref(x, w))
+    err = float(jnp.abs(convdk_depthwise2d(x, w, interpret=True)
+                        - depthwise2d_ref(x, w)).max())
+    out.append(("convdk_dw2d_28x28x128_interp", us_k, f"maxerr={err:.1e}"))
+    out.append(("lax_dw2d_28x28x128_ref", us_r, ""))
+
+    # causal conv1d: the Mamba-2 stem shape (per-device slice)
+    xs = jnp.asarray(rng.normal(size=(2, 1024, 256)), jnp.float32)
+    ws = jnp.asarray(rng.normal(size=(4, 256)), jnp.float32)
+    us_k = _time(lambda: convdk_causal_conv1d(xs, ws, interpret=True))
+    us_r = _time(lambda: causal_conv1d_ref(xs, ws))
+    err = float(jnp.abs(convdk_causal_conv1d(xs, ws, interpret=True)
+                        - causal_conv1d_ref(xs, ws)).max())
+    out.append(("convdk_conv1d_1024x256_interp", us_k, f"maxerr={err:.1e}"))
+    out.append(("lax_conv1d_1024x256_ref", us_r, ""))
+    return out
+
+
+def main():
+    for name, us, derived in rows():
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

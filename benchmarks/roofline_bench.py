@@ -1,0 +1,83 @@
+"""Roofline table from the dry-run sweep (results/dryrun/*.json).
+
+Prints the per-cell three-term roofline and the dominant bottleneck; used by
+EXPERIMENTS.md §Roofline.  Run the sweep first:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all --both-meshes
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+RESULTS = os.environ.get("DRYRUN_RESULTS", "results/dryrun")
+
+
+def load() -> List[Dict]:
+    recs = []
+    for p in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def table(recs=None, mesh="16x16", quiet=False) -> List[Dict]:
+    recs = recs or load()
+    rows = [r for r in recs if r.get("mesh") == mesh]
+    if not quiet:
+        print(f"\n== roofline, mesh {mesh} "
+              f"(t in ms/step on v5e: 197 TF/s bf16, 819 GB/s HBM, "
+              f"2x50 GB/s ICI) ==")
+        print(f"{'arch':22s} {'shape':12s} {'status':7s} {'t_comp':>8s} "
+              f"{'t_mem':>8s} {'t_coll':>8s} {'dominant':>10s} "
+              f"{'useful':>7s} {'frac':>6s}")
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        if r["status"] != "ok" or "roofline" not in r:
+            if not quiet:
+                why = r.get("reason", r.get("error", ""))[:40]
+                print(f"{r['arch']:22s} {r['shape']:12s} {r['status']:7s} "
+                      f"{why}")
+            continue
+        rl = r["roofline"]
+        uf = rl.get("useful_flops_fraction")
+        if not quiet:
+            print(f"{r['arch']:22s} {r['shape']:12s} {r['status']:7s} "
+                  f"{rl['t_compute_s']*1e3:8.1f} {rl['t_memory_s']*1e3:8.1f} "
+                  f"{rl['t_collective_s']*1e3:8.1f} {rl['dominant']:>10s} "
+                  f"{uf if uf is None else round(uf, 3)!s:>7s} "
+                  f"{rl['roofline_fraction']:6.3f}")
+    return rows
+
+
+def rows_csv() -> List[tuple]:
+    out = []
+    for r in load():
+        if r.get("status") == "ok" and "roofline" in r:
+            rl = r["roofline"]
+            name = f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}"
+            out.append((name, rl["bound_time_s"] * 1e6
+                        if "bound_time_s" in rl
+                        else max(rl["t_compute_s"], rl["t_memory_s"],
+                                 rl["t_collective_s"]) * 1e6,
+                        f"dom={rl['dominant']}"))
+    return out
+
+
+def main():
+    recs = load()
+    if not recs:
+        print("no dry-run results found; run repro.launch.dryrun first")
+        return
+    table(recs, "16x16")
+    ok = sum(1 for r in recs if r["status"] == "ok")
+    skip = sum(1 for r in recs if r["status"] == "skip")
+    err = sum(1 for r in recs if r["status"] == "error")
+    print(f"\ncells: {ok} ok, {skip} skip, {err} error "
+          f"(of {len(recs)} records)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Benchmark aggregator — one section per paper table/figure plus the
+framework-level harnesses.  Prints ``name,us_per_call,derived`` CSV.
+
+    PYTHONPATH=src python -m benchmarks.run
+"""
+
+from __future__ import annotations
+
+import time
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+
+    # --- paper tables (Figs. 7-8): analytical CIM model -------------------
+    t0 = time.perf_counter()
+    from benchmarks.cim_tables import run_all
+    results = run_all(quiet=True)
+    us = (time.perf_counter() - t0) * 1e6
+    for model, util in results["fig7a"].items():
+        print(f"fig7a_util_{model},{us:.0f},ws_convdk={util:.2f}%")
+    for model, red in results["fig7c"].items():
+        print(f"fig7c_buffer_reduction_{model},{us:.0f},"
+              f"ws={red['ws']:.1f}%;is={red['is']:.1f}%")
+    for model, red in results["fig7d"].items():
+        print(f"fig7d_energy_reduction_{model},{us:.0f},"
+              f"ws_total={red['ws_total']:.1f}%")
+    for model, red in results["fig7e"].items():
+        print(f"fig7e_latency_reduction_{model},{us:.0f},"
+              f"ws={red['ws']:.1f}%")
+    for model, red in results["fig8"].items():
+        print(f"fig8_buffer_latency_reduction_{model},{us:.0f},"
+              f"ws={red['ws']:.1f}%")
+
+    # --- ConvDK kernels ----------------------------------------------------
+    from benchmarks.kernel_bench import rows as kernel_rows
+    for name, us, derived in kernel_rows():
+        print(f"{name},{us:.1f},{derived}")
+
+    # --- roofline table (if the dry-run sweep has been run) ----------------
+    try:
+        from benchmarks.roofline_bench import load
+        recs = load()
+        for r in recs:
+            if r.get("status") == "ok" and "roofline" in r:
+                rl = r["roofline"]
+                bound = max(rl["t_compute_s"], rl["t_memory_s"],
+                            rl["t_collective_s"]) * 1e6
+                print(f"roofline_{r['arch']}_{r['shape']}_{r['mesh']},"
+                      f"{bound:.0f},dom={rl['dominant']};"
+                      f"frac={rl['roofline_fraction']:.3f}")
+    except Exception:
+        pass
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""Train a MobileNetV1-style depthwise-separable CNN whose DWConv layers run
+the ConvDK Pallas kernel (interpret mode on CPU) — the paper's own model
+family, end to end trainable through the paper's dataflow.
+
+    PYTHONPATH=src python examples/train_mobilenet_cim.py [--steps 60]
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import convdk_depthwise2d
+from repro.models.param import P, materialize
+
+
+def model_def(c0=16, n_blocks=3, n_classes=10):
+    p = {"stem": P((3, 3, 3, c0), (None, None, None, None))}
+    c = c0
+    for i in range(n_blocks):
+        p[f"dw{i}"] = P((3, 3, c), (None, None, None))
+        p[f"pw{i}"] = P((c, c * 2), (None, None), scale=2.0)
+        c *= 2
+    p["head"] = P((c, n_classes), (None, None))
+    return p
+
+
+def forward(params, x):
+    # stem: ordinary 3x3 conv stride 2
+    x = jax.lax.conv_general_dilated(
+        x, params["stem"], (2, 2), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    x = jax.nn.relu(x)
+    i = 0
+    while f"dw{i}" in params:
+        # depthwise stage: the ConvDK kernel (stride 2 shrinks the map)
+        x = convdk_depthwise2d(x, params[f"dw{i}"], stride=2,
+                               padding="SAME", interpret=True)
+        x = jax.nn.relu(x)
+        # pointwise stage: 1x1 conv = matmul over channels
+        x = jax.nn.relu(x @ params[f"pw{i}"])
+        i += 1
+    x = x.mean(axis=(1, 2))                      # global average pool
+    return x @ params["head"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    args = ap.parse_args()
+
+    params = materialize(model_def(), jax.random.key(0))
+    rng = np.random.default_rng(0)
+
+    def batch(step):
+        r = np.random.default_rng((0, step))
+        y = r.integers(0, 10, (32,))
+        x = r.normal(size=(32, 32, 32, 3)).astype(np.float32) * 0.1
+        # class-dependent blob so the task is learnable
+        for b, cls in enumerate(y):
+            x[b, cls:cls + 8, cls:cls + 8, :] += 1.0
+        return jnp.asarray(x), jnp.asarray(y)
+
+    @jax.jit
+    def step(params, x, y):
+        def loss_fn(p):
+            logits = forward(p, x)
+            logz = jax.nn.logsumexp(logits, -1)
+            gold = jnp.take_along_axis(logits, y[:, None], -1)[:, 0]
+            return (logz - gold).mean()
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params = jax.tree.map(lambda p, g: p - 0.5 * g, params, grads)
+        return params, loss
+
+    losses = []
+    for i in range(args.steps):
+        x, y = batch(i)
+        params, loss = step(params, x, y)
+        losses.append(float(loss))
+        if (i + 1) % 10 == 0:
+            print(f"step {i+1}: loss {losses[-1]:.3f}")
+    print(f"\nloss {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"({'DESCENDED' if losses[-1] < losses[0] * 0.7 else 'check'}) — "
+          f"DWConv stages ran the ConvDK Pallas kernel")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from .base import SHAPES, ArchSpec, ShapeCell, get_arch, list_archs
+from .specs import decode_state_specs, input_specs
+
+__all__ = ["SHAPES", "ArchSpec", "ShapeCell", "get_arch", "list_archs",
+           "input_specs", "decode_state_specs"]

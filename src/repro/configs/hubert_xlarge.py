@@ -1,0 +1,22 @@
+"""hubert-xlarge [arXiv:2106.07447]: 48L d_model=1280 16H (kv=16) d_ff=5120
+vocab=504.  Encoder-only audio backbone; the conv frame frontend is a STUB —
+input_specs provide precomputed frame embeddings (B, S, 1280) per assignment.
+Training objective: masked-unit prediction over the 504 k-means units."""
+
+from ..models.model import ModelConfig
+from .base import SKIP_ENC, ArchSpec, register
+
+CONFIG = ModelConfig(
+    name="hubert-xlarge", family="encoder",
+    n_layers=48, d_model=1280, n_heads=16, n_kv_heads=16, head_dim=80,
+    d_ff=5120, vocab=504,
+    act="gelu", glu=False,          # HuBERT uses plain GELU MLPs
+)
+
+SMOKE = ModelConfig(
+    name="hubert-smoke", family="encoder",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+    d_ff=128, vocab=32, act="gelu", glu=False, dtype="float32",
+)
+
+register(ArchSpec("hubert-xlarge", CONFIG, SMOKE, skips=dict(SKIP_ENC)))

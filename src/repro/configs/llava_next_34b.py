@@ -1,0 +1,21 @@
+"""llava-next-34b [hf:llava-hf]: 60L d_model=7168 56H (kv=8) head_dim=128
+d_ff=20480 vocab=64000 — VLM backbone only; the anyres vision tower is a
+STUB (input_specs provide 576 precomputed patch embeddings prepended to the
+text sequence, keeping the total length at the cell's seq_len)."""
+
+from ..models.model import ModelConfig
+from .base import SKIP_LONG, ArchSpec, register
+
+CONFIG = ModelConfig(
+    name="llava-next-34b", family="vlm",
+    n_layers=60, d_model=7168, n_heads=56, n_kv_heads=8, head_dim=128,
+    d_ff=20480, vocab=64000, n_img_tokens=576,
+)
+
+SMOKE = ModelConfig(
+    name="llava-smoke", family="vlm",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=128, vocab=64, n_img_tokens=8, dtype="float32",
+)
+
+register(ArchSpec("llava-next-34b", CONFIG, SMOKE, skips=dict(SKIP_LONG)))

@@ -1,0 +1,56 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) cell.
+
+The dry-run lowers against these (weak-type-correct, shardable, zero
+allocation).  Modality frontends are stubs per the assignment: hubert gets
+precomputed frame embeddings, llava gets precomputed patch embeddings.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.model import ModelConfig, init_decode_state
+from .base import ArchSpec, ShapeCell
+
+I32 = jnp.int32
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def input_specs(spec: ArchSpec, cell: ShapeCell,
+                cfg: ModelConfig = None) -> Dict[str, Any]:
+    """Batch ShapeDtypeStructs for one cell (without decode state)."""
+    cfg = cfg or spec.config
+    b, s = cell.global_batch, cell.seq_len
+    dt = cfg.adtype
+    if cfg.family == "encoder":
+        batch = {"embeds": _sds((b, s, cfg.d_model), dt)}
+        if cell.kind == "train":
+            batch["labels"] = _sds((b, s), I32)
+        return batch
+    if cfg.family == "vlm" and cell.kind != "decode":
+        n_img = cfg.n_img_tokens
+        batch = {
+            "tokens": _sds((b, s - n_img), I32),
+            "img_embeds": _sds((b, n_img, cfg.d_model), dt),
+        }
+        if cell.kind == "train":
+            batch["labels"] = _sds((b, s), I32)
+        return batch
+    if cell.kind == "decode":
+        return {"tokens": _sds((b,), I32)}
+    batch = {"tokens": _sds((b, s), I32)}
+    if cell.kind == "train":
+        batch["labels"] = _sds((b, s), I32)
+    return batch
+
+
+def decode_state_specs(cfg: ModelConfig, batch: int, s_max: int):
+    """Abstract decode-state pytree (shapes only, via eval_shape)."""
+    return jax.eval_shape(
+        lambda: init_decode_state(cfg, batch, s_max, cfg.adtype))

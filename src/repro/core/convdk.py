@@ -1,0 +1,226 @@
+"""Executable ConvDK (convolution with duplicated kernels) in pure JAX.
+
+This module *numerically executes* the paper's Algorithms 1-2 with the exact
+data movement of the CIM macro:
+
+* the kernel is duplicated ``N`` times along the stationary dimension (the
+  role of the Tile Memory, TM);
+* one IA strip is loaded once (the role of the Tile Register File, TRF) and
+  re-read at ``l = lcm(k,s)/s`` static shift offsets ``a``;
+* each shift cycle performs all block dot-products in parallel (the parallel
+  bitlines of the TM) and the multiplication-enable mask ``e_n`` selects the
+  blocks whose results are valid outputs for that shift (Theorem 1).
+
+The functions here are the *reference semantics* for the Pallas TPU kernels in
+``repro.kernels`` and are themselves validated against
+``jax.lax.conv_general_dilated`` oracles in the test-suite.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .schedule import ConvDKSchedule, make_schedule, duplication_number, shift_count
+
+
+# ---------------------------------------------------------------------------
+# 1-D ConvDK (Algorithm 1)
+# ---------------------------------------------------------------------------
+
+def convdk_1d(kernel: jax.Array, ia: jax.Array, sched: ConvDKSchedule) -> jax.Array:
+    """1-D ConvDK (Algorithm 1): ``z = kernel * ia`` with stride ``sched.s``.
+
+    Parameters
+    ----------
+    kernel : (k,) weights.
+    ia     : (sched.ia_len,) input-activation strip.
+    sched  : static schedule from ``make_schedule``.
+
+    Returns (sched.out_len,) strided convolution output.
+    """
+    k, N = sched.k, sched.N
+    if kernel.shape != (k,):
+        raise ValueError(f"kernel shape {kernel.shape} != ({k},)")
+    if ia.shape[-1] != sched.ia_len:
+        raise ValueError(f"ia length {ia.shape[-1]} != {sched.ia_len}")
+
+    z = jnp.zeros((sched.out_len,), dtype=jnp.result_type(kernel, ia))
+    for cyc in sched.cycles:  # static loop over l shift cycles
+        # Parallel block dot-products for shift a: the TM computes ALL N block
+        # results at once; block n sees IA window [a + n*k, a + n*k + k).
+        windows = jax.lax.dynamic_slice_in_dim(ia, cyc.a, N * k).reshape(N, k)
+        y = windows @ kernel  # (N,) — one inner product per bitline group
+        if cyc.ns:
+            # e_n mask: only blocks in cyc.ns are enabled; their results land
+            # at output indices cyc.ms (disjoint across cycles by Theorem 2).
+            z = z.at[np.asarray(cyc.ms)].set(y[np.asarray(cyc.ns)])
+    return z
+
+
+# ---------------------------------------------------------------------------
+# 2-D strip ConvDK (Eq. 7 — one (channel, output-row) strip in one tile)
+# ---------------------------------------------------------------------------
+
+def convdk_2d_strip(
+    kernel: jax.Array, ia_strip: jax.Array, sched: ConvDKSchedule
+) -> jax.Array:
+    """DWConv of one ``k_h x ia_len`` IA strip with a ``k_h x k_w`` kernel.
+
+    Implements Eq. (7) for a fixed channel c and output row h:
+        y_{n,a} = sum_j sum_i  K[j, i] * I[j, i + n*k_w + a]
+    All blocks n are evaluated in parallel per shift a (single TM read),
+    masked by e_n, scattered to output columns m.
+
+    ia_strip : (k_h, sched.ia_len)
+    kernel   : (k_h, k_w)
+    returns  : (sched.out_len,)
+    """
+    k, N = sched.k, sched.N
+    k_h = kernel.shape[0]
+    if kernel.shape != (k_h, k):
+        raise ValueError(f"kernel shape {kernel.shape} != ({k_h}, {k})")
+    if ia_strip.shape != (k_h, sched.ia_len):
+        raise ValueError(f"ia_strip shape {ia_strip.shape} != ({k_h}, {sched.ia_len})")
+
+    z = jnp.zeros((sched.out_len,), dtype=jnp.result_type(kernel, ia_strip))
+    for cyc in sched.cycles:
+        windows = jax.lax.dynamic_slice_in_dim(
+            ia_strip, cyc.a, N * k, axis=1
+        ).reshape(k_h, N, k)
+        y = jnp.einsum("jni,ji->n", windows, kernel)
+        if cyc.ns:
+            z = z.at[np.asarray(cyc.ms)].set(y[np.asarray(cyc.ns)])
+    return z
+
+
+# ---------------------------------------------------------------------------
+# Full depthwise Conv2D via ConvDK strips (Algorithm 2 orchestration)
+# ---------------------------------------------------------------------------
+
+def _strip_starts(out_w: int, per_strip: int, s: int):
+    """Static width-tiling: each strip produces ``per_strip`` output columns;
+    consecutive strips overlap by the kernel halo.  Returns (out_start, in_start)
+    pairs; the final strip is right-aligned so no partial strip is needed."""
+    starts = []
+    o = 0
+    while o < out_w:
+        o_eff = max(0, min(o, out_w - per_strip))  # right-align last strip
+        starts.append((o_eff, o_eff * s))
+        if o_eff + per_strip >= out_w:
+            break
+        o = o_eff + per_strip
+    return starts
+
+
+def dwconv2d_convdk(
+    x: jax.Array,
+    kernels: jax.Array,
+    stride: int = 1,
+    padding: str | int = "SAME",
+    t_w: Optional[int] = None,
+    trf_len: int = 180,
+) -> jax.Array:
+    """Depthwise Conv2D computed with the ConvDK dataflow (Algorithm 2).
+
+    The orchestration mirrors the macro: for every (channel, output row), a
+    ``k_h x strip`` IA slice is "loaded into the TRF" and consumed through the
+    ConvDK shift schedule.  Width larger than the TRF capacity is tiled into
+    overlapping strips (the BIG scheduler's partitioning).
+
+    Parameters
+    ----------
+    x        : (C, H, W) single-image ifmap (use vmap for batches).
+    kernels  : (C, k_h, k_w) one kernel per channel.
+    stride   : s (same for both dims, as in the paper's models).
+    padding  : "SAME", "VALID" or explicit symmetric int pad.
+    t_w      : TRF strip-width cap; default ``trf_len // k_h`` (paper's T_w).
+    """
+    C, H, W = x.shape
+    Ck, k_h, k_w = kernels.shape
+    if Ck != C:
+        raise ValueError(f"channel mismatch {Ck} != {C}")
+    s = stride
+
+    if padding == "SAME":
+        out_h = -(-H // s)
+        out_w = -(-W // s)
+        pad_h = max(0, (out_h - 1) * s + k_h - H)
+        pad_w = max(0, (out_w - 1) * s + k_w - W)
+        pads = ((pad_h // 2, pad_h - pad_h // 2), (pad_w // 2, pad_w - pad_w // 2))
+    elif padding == "VALID":
+        out_h = (H - k_h) // s + 1
+        out_w = (W - k_w) // s + 1
+        pads = ((0, 0), (0, 0))
+    else:
+        p = int(padding)
+        out_h = (H + 2 * p - k_h) // s + 1
+        out_w = (W + 2 * p - k_w) // s + 1
+        pads = ((p, p), (p, p))
+    xp = jnp.pad(x, ((0, 0),) + pads)
+    Wp = xp.shape[2]
+
+    if t_w is None:
+        t_w = trf_len // k_h
+    N = duplication_number(k_w, s, Wp, t_w)
+    if N < 1:
+        raise ValueError(f"strip too narrow: W={Wp}, t_w={t_w}, k_w={k_w}, s={s}")
+    sched = make_schedule(k_w, s, N)
+
+    starts = _strip_starts(out_w, sched.out_len, s)
+
+    def one_channel_row(xc: jax.Array, kc: jax.Array, h: int) -> jax.Array:
+        rows = jax.lax.dynamic_slice_in_dim(xc, h * s, k_h, axis=0)  # (k_h, Wp)
+        outs = []
+        for (o0, i0) in starts:
+            strip = jax.lax.dynamic_slice_in_dim(rows, i0, sched.ia_len, axis=1)
+            outs.append((o0, convdk_2d_strip(kc, strip, sched)))
+        row = jnp.zeros((out_w,), dtype=x.dtype)
+        for o0, z in outs:
+            take = min(sched.out_len, out_w - o0)
+            row = jax.lax.dynamic_update_slice_in_dim(row, z[:take], o0, axis=0)
+        return row
+
+    # The strip may read past the padded width on the final (right-aligned)
+    # tile when ia_len > Wp - i0; pad once on the right to cover it.
+    max_i0 = max(i0 for _, i0 in starts)
+    need = max_i0 + sched.ia_len
+    if need > Wp:
+        xp = jnp.pad(xp, ((0, 0), (0, 0), (0, need - Wp)))
+
+    rows_h = jnp.arange(out_h)
+    per_channel = jax.vmap(
+        lambda xc, kc: jax.vmap(lambda h: one_channel_row(xc, kc, h))(rows_h)
+    )
+    return per_channel(xp, kernels)  # (C, out_h, out_w)
+
+
+# ---------------------------------------------------------------------------
+# Oracle
+# ---------------------------------------------------------------------------
+
+def dwconv2d_oracle(
+    x: jax.Array, kernels: jax.Array, stride: int = 1, padding: str | int = "SAME"
+) -> jax.Array:
+    """Reference depthwise Conv2D via lax.conv_general_dilated (CHW single image)."""
+    C = x.shape[0]
+    lhs = x[None]  # (1, C, H, W)
+    rhs = kernels[:, None]  # (C, 1, k_h, k_w)  OIHW with groups=C
+    if padding == "SAME":
+        pad = "SAME"
+    elif padding == "VALID":
+        pad = "VALID"
+    else:
+        p = int(padding)
+        pad = ((p, p), (p, p))
+    out = jax.lax.conv_general_dilated(
+        lhs, rhs,
+        window_strides=(stride, stride),
+        padding=pad,
+        feature_group_count=C,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return out[0]

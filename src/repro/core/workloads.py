@@ -1,0 +1,151 @@
+"""Per-layer DWConv tables for the paper's five evaluation models.
+
+All tables are the canonical 224x224-input configurations from the
+respective papers:
+
+* MobileNetV1  [arXiv:1704.04861, Table 1]
+* MobileNetV2  [arXiv:1801.04381, Table 2]  (t = 6 expansion)
+* MobileNetV3-Large / -Small  [arXiv:1905.02244, Tables 1-2]
+* EfficientNet-B0  [arXiv:1905.11946, Table 1]
+
+Each entry is the depthwise stage of a block: (channels of the *expanded*
+tensor the DWConv runs on, ifmap H=W at that point, kernel k, stride s).
+Pointwise (1x1) convolutions are not listed: the paper evaluates DWConv
+dataflows only (PWConv uses the ordinary long-input-channel WS mapping).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+from .tiling import DWLayer
+
+
+def _dw(c: int, hw: int, k: int, s: int) -> DWLayer:
+    return DWLayer(c=c, h=hw, w=hw, k=k, s=s)
+
+
+MOBILENET_V1: List[DWLayer] = [
+    _dw(32, 112, 3, 1),
+    _dw(64, 112, 3, 2),
+    _dw(128, 56, 3, 1),
+    _dw(128, 56, 3, 2),
+    _dw(256, 28, 3, 1),
+    _dw(256, 28, 3, 2),
+    *[_dw(512, 14, 3, 1) for _ in range(5)],
+    _dw(512, 14, 3, 2),
+    _dw(1024, 7, 3, 1),
+]
+
+# MobileNetV2: expanded channels = t * c_in of the preceding block.
+MOBILENET_V2: List[DWLayer] = [
+    _dw(32, 112, 3, 1),     # first bottleneck, t = 1
+    _dw(96, 112, 3, 2),     # 16 -> 24, t = 6
+    _dw(144, 56, 3, 1),
+    _dw(144, 56, 3, 2),     # 24 -> 32
+    _dw(192, 28, 3, 1),
+    _dw(192, 28, 3, 1),
+    _dw(192, 28, 3, 2),     # 32 -> 64
+    *[_dw(384, 14, 3, 1) for _ in range(3)],
+    _dw(384, 14, 3, 1),     # 64 -> 96 stage (s = 1)
+    _dw(576, 14, 3, 1),
+    _dw(576, 14, 3, 1),
+    _dw(576, 14, 3, 2),     # 96 -> 160
+    _dw(960, 7, 3, 1),
+    _dw(960, 7, 3, 1),
+    _dw(960, 7, 3, 1),      # 160 -> 320 (s = 1)
+]
+
+# MobileNetV3-Large: (k, expanded size, s, ifmap hw)
+_V3L: List[Tuple[int, int, int, int]] = [
+    (3, 16, 1, 112),
+    (3, 64, 2, 112),
+    (3, 72, 1, 56),
+    (5, 72, 2, 56),
+    (5, 120, 1, 28),
+    (5, 120, 1, 28),
+    (3, 240, 2, 28),
+    (3, 200, 1, 14),
+    (3, 184, 1, 14),
+    (3, 184, 1, 14),
+    (3, 480, 1, 14),
+    (3, 672, 1, 14),
+    (5, 672, 2, 14),
+    (5, 960, 1, 7),
+    (5, 960, 1, 7),
+]
+MOBILENET_V3_LARGE: List[DWLayer] = [_dw(e, hw, k, s) for k, e, s, hw in _V3L]
+
+# MobileNetV3-Small
+_V3S: List[Tuple[int, int, int, int]] = [
+    (3, 16, 2, 112),
+    (3, 72, 2, 56),
+    (3, 88, 1, 28),
+    (5, 96, 2, 28),
+    (5, 240, 1, 14),
+    (5, 240, 1, 14),
+    (5, 120, 1, 14),
+    (5, 144, 1, 14),
+    (5, 288, 2, 14),
+    (5, 576, 1, 7),
+    (5, 576, 1, 7),
+]
+MOBILENET_V3_SMALL: List[DWLayer] = [_dw(e, hw, k, s) for k, e, s, hw in _V3S]
+
+# EfficientNet-B0: MBConv blocks, (k, expanded size, s, ifmap hw)
+_EFFB0: List[Tuple[int, int, int, int]] = [
+    (3, 32, 1, 112),     # MBConv1
+    (3, 96, 2, 112),     # stage 3 first
+    (3, 144, 1, 56),
+    (5, 144, 2, 56),     # stage 4 first
+    (5, 240, 1, 28),
+    (3, 240, 2, 28),     # stage 5 first
+    (3, 480, 1, 14),
+    (3, 480, 1, 14),
+    (5, 480, 1, 14),     # stage 6 (s = 1, 14x14)
+    (5, 672, 1, 14),
+    (5, 672, 1, 14),
+    (5, 672, 2, 14),     # stage 7 first
+    (5, 1152, 1, 7),
+    (5, 1152, 1, 7),
+    (5, 1152, 1, 7),
+    (3, 1152, 1, 7),     # stage 8
+]
+EFFICIENTNET_B0: List[DWLayer] = [_dw(e, hw, k, s) for k, e, s, hw in _EFFB0]
+
+
+NETWORKS: Dict[str, List[DWLayer]] = {
+    "mobilenet_v1": MOBILENET_V1,
+    "mobilenet_v2": MOBILENET_V2,
+    "mobilenet_v3_large": MOBILENET_V3_LARGE,
+    "mobilenet_v3_small": MOBILENET_V3_SMALL,
+    "efficientnet_b0": EFFICIENTNET_B0,
+}
+
+# Paper-reported bands (Sec. V / VII) used as reproduction gates.
+PAPER_BANDS = {
+    # Fig. 7(a): WS ConvDK TM utilization per model (percent)
+    "utilization": {
+        "mobilenet_v1": 86.15,
+        "mobilenet_v2": 86.76,
+        "mobilenet_v3_large": 84.00,
+        "mobilenet_v3_small": 86.97,
+        "efficientnet_b0": 85.94,
+    },
+    # Fig. 7(c): buffer-traffic reduction vs WS baseline, percent (min, max)
+    "buffer_traffic_reduction_ws": (77.4, 87.0),
+    # Fig. 7(d): total traffic-energy reduction vs baselines, percent
+    "energy_reduction_ws": (10.1, 17.9),
+    "energy_reduction_is": (12.8, 20.3),
+    # buffer-only energy reductions quoted in Sec. V-C
+    "buffer_energy_reduction_ws": (78.4, 87.2),
+    "buffer_energy_reduction_is": (81.2, 88.3),
+    # Fig. 7(e): total latency reduction, percent
+    "latency_reduction_ws": (15.6, 27.8),
+    "latency_reduction_is": (18.1, 29.3),
+    # Fig. 8: buffer-traffic *latency* reduction, percent
+    "buffer_latency_reduction_ws": (50.5, 58.7),
+    "buffer_latency_reduction_is": (47.1, 55.9),
+    # Fig. 8: baseline buffer-latency share of total latency, percent
+    "baseline_buffer_latency_share": (13.1, 16.8),
+}

@@ -1,0 +1,21 @@
+"""ConvDK Pallas TPU kernels — the paper's compute hot-spot (depthwise
+convolution) re-designed for the TPU memory hierarchy (DESIGN.md §Pillar B).
+"""
+
+from .ops import (
+    convdk_causal_conv1d,
+    convdk_depthwise2d,
+    stage_row_strips,
+    stage_seq_strips,
+)
+from .ref import causal_conv1d_ref, causal_conv1d_update_ref, depthwise2d_ref
+
+__all__ = [
+    "convdk_causal_conv1d",
+    "convdk_depthwise2d",
+    "stage_row_strips",
+    "stage_seq_strips",
+    "causal_conv1d_ref",
+    "causal_conv1d_update_ref",
+    "depthwise2d_ref",
+]

@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for the ConvDK Pallas kernels.
+
+These are the ground truth the kernels are swept against (shapes x dtypes x
+strides) in interpret mode.  They use only jnp / lax primitives.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def depthwise2d_ref(
+    x: jax.Array, w: jax.Array, stride: int = 1, padding: str = "SAME"
+) -> jax.Array:
+    """Depthwise Conv2D oracle.  x: (B, H, W, C) NHWC; w: (k_h, k_w, C)."""
+    k_h, k_w, c = w.shape
+    rhs = jnp.transpose(w, (2, 0, 1))[:, None]  # (C, 1, k_h, k_w) OIHW
+    out = jax.lax.conv_general_dilated(
+        x, rhs,
+        window_strides=(stride, stride),
+        padding=padding,
+        feature_group_count=c,
+        dimension_numbers=("NHWC", "OIHW", "NHWC"),
+    )
+    return out
+
+
+def causal_conv1d_ref(
+    x: jax.Array,
+    w: jax.Array,
+    bias: Optional[jax.Array] = None,
+    activation: Optional[str] = None,
+) -> jax.Array:
+    """Causal depthwise Conv1D oracle (the Mamba-2 / RecurrentGemma stem).
+
+    x: (B, L, D); w: (k, D); out[t] = sum_i w[i] * x[t - k + 1 + i].
+    """
+    k, d = w.shape
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        out = out + xp[:, i : i + x.shape[1], :] * w[i]
+    if bias is not None:
+        out = out + bias
+    if activation == "silu":
+        out = out * jax.nn.sigmoid(out)
+    return out
+
+
+def causal_conv1d_update_ref(
+    state: jax.Array,
+    x_t: jax.Array,
+    w: jax.Array,
+    bias: Optional[jax.Array] = None,
+    activation: Optional[str] = None,
+):
+    """Single-token decode step.  state: (B, k-1, D) last inputs; x_t: (B, D).
+
+    Returns (y_t, new_state).
+    """
+    k, d = w.shape
+    window = jnp.concatenate([state, x_t[:, None, :]], axis=1)  # (B, k, D)
+    y = jnp.einsum("bkd,kd->bd", window, w)
+    if bias is not None:
+        y = y + bias
+    if activation == "silu":
+        y = y * jax.nn.sigmoid(y)
+    return y, window[:, 1:, :]

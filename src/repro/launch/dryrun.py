@@ -1,0 +1,271 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. constructs abstract params / optimizer state / inputs
+     (ShapeDtypeStructs — zero allocation),
+  3. jits the train_step / prefill_step / serve_step with NamedShardings
+     from the logical-axis rule table,
+  4. ``.lower().compile()`` — any sharding mismatch, non-divisible dim, or
+     unsupported collective fails HERE, which is the point,
+  5. records memory_analysis / cost_analysis / per-collective bytes into a
+     JSON blob consumed by EXPERIMENTS.md §Dry-run and §Roofline.
+
+Roofline probes: XLA's cost model counts a ``while`` (scan) body ONCE,
+ignoring the trip count (verified by probe, DESIGN.md §Risks).  The
+scan-over-layers program is therefore lowered a second and third time at
+UNROLLED depth d1/d2 (with unchunked attention so no intra-layer scans
+remain); per-layer FLOPs/bytes/collective-bytes are the (d2 - d1) delta and
+the full-depth roofline is ``base + L * per_layer``.  Memory comes from the
+full scanned program (loop temp accounting is correct there).
+
+Run:  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-2b \
+          --shape train_4k [--multi-pod] [--out results/dryrun]
+      PYTHONPATH=src python -m repro.launch.dryrun --all --both-meshes
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from ..configs import SHAPES, get_arch, input_specs, list_archs
+from ..configs.base import ArchSpec, ShapeCell
+from ..configs.specs import decode_state_specs
+from ..models.model import ModelConfig, decode_state_axes, model_def
+from ..models.param import abstract, count_params, logical_axes
+from ..roofline.analysis import (
+    RooflineTerms, collective_bytes, model_flops_estimate,
+)
+from ..sharding import spec_for, tree_shardings
+from ..train.optim import OptState
+from ..train.step import (
+    TrainConfig, make_prefill_step, make_serve_step, make_train_step,
+)
+from .mesh import make_production_mesh
+
+
+def _batch_shardings(batch_abs: Dict[str, Any], mesh) -> Dict[str, Any]:
+    out = {}
+    for k, v in batch_abs.items():
+        logical = ["batch"] + [None] * (len(v.shape) - 1)
+        out[k] = NamedSharding(mesh, spec_for(logical, v.shape, mesh))
+    return out
+
+
+def _opt_axes(param_axes) -> OptState:
+    return OptState(step=(), m=param_axes, v=param_axes, err=None)
+
+
+def _active_params(cfg: ModelConfig, n_params: int) -> int:
+    """Active params per token for MODEL_FLOPS (MoE: only top-k experts)."""
+    if cfg.family != "moe":
+        return n_params
+    per_expert = 3 * cfg.d_model * cfg.d_ff_expert
+    n_moe_layers = cfg.n_layers - cfg.n_dense_prefix
+    inactive = (cfg.n_experts - cfg.top_k) * per_expert * n_moe_layers
+    return n_params - inactive
+
+
+def _lower_cell(cfg: ModelConfig, spec: ArchSpec, cell: ShapeCell, mesh):
+    """Build abstract inputs + shardings and return the lowered step."""
+    pdefs = model_def(cfg)
+    params_abs = abstract(pdefs, param_dtype=jnp.dtype(cfg.param_dtype))
+    p_axes = logical_axes(pdefs)
+    p_sh = tree_shardings(p_axes, params_abs, mesh)
+    batch_abs = input_specs(spec, cell, cfg)
+    b_sh = _batch_shardings(batch_abs, mesh)
+
+    if cell.kind == "train":
+        init_opt, train_step = make_train_step(cfg, TrainConfig())
+        opt_abs = jax.eval_shape(init_opt, params_abs)
+        o_sh = tree_shardings(_opt_axes(p_axes), opt_abs, mesh)
+        fn = jax.jit(train_step, in_shardings=(p_sh, o_sh, b_sh),
+                     out_shardings=(p_sh, o_sh, None),
+                     donate_argnums=(0, 1))
+        return fn.lower(params_abs, opt_abs, batch_abs)
+    if cell.kind == "prefill":
+        fn = jax.jit(make_prefill_step(cfg), in_shardings=(p_sh, b_sh))
+        return fn.lower(params_abs, batch_abs)
+    state_abs = decode_state_specs(cfg, cell.global_batch, cell.seq_len)
+    s_sh = tree_shardings(decode_state_axes(cfg), state_abs, mesh)
+    fn = jax.jit(make_serve_step(cfg),
+                 in_shardings=(p_sh, s_sh, b_sh["tokens"]),
+                 out_shardings=(None, s_sh), donate_argnums=(1,))
+    return fn.lower(params_abs, state_abs, batch_abs["tokens"])
+
+
+def _cost_of(compiled) -> Dict[str, float]:
+    cost = compiled.cost_analysis() or {}
+    coll = collective_bytes(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": float(sum(coll.values())),
+        "coll_by_kind": coll,
+    }
+
+
+def _probe_depths(cfg: ModelConfig) -> Tuple[ModelConfig, ModelConfig,
+                                             float, float, float]:
+    """Two reduced unrolled configs + (units1, units2, full_units)."""
+    # probes unroll layers AND disable chunked attention (q_chunk sentinel)
+    # so no intra-layer scan hides FLOPs from the cost model.
+    big = 1 << 30
+    if cfg.family == "hybrid":
+        pat = cfg.pattern or ("R", "R", "A")
+        blk = len(pat)
+        full_units = cfg.n_layers / blk          # blocks incl. fractional rem
+        c1 = dataclasses.replace(cfg, n_layers=blk, scan_layers=False,
+                                 q_chunk=big)
+        c2 = dataclasses.replace(cfg, n_layers=2 * blk, scan_layers=False,
+                                 q_chunk=big)
+        return c1, c2, 1.0, 2.0, full_units
+    pre = cfg.n_dense_prefix
+    c1 = dataclasses.replace(cfg, n_layers=pre + 1, scan_layers=False,
+                             q_chunk=big)
+    c2 = dataclasses.replace(cfg, n_layers=pre + 3, scan_layers=False,
+                             q_chunk=big)
+    return c1, c2, 1.0, 3.0, float(cfg.n_layers - pre)
+
+
+def roofline_probe(spec: ArchSpec, cell: ShapeCell, mesh) -> Dict[str, Any]:
+    """Depth-extrapolated per-device roofline costs for the full model."""
+    cfg = spec.config
+    c1, c2, u1, u2, full_u = _probe_depths(cfg)
+    costs = []
+    for c in (c1, c2):
+        lowered = _lower_cell(c, spec, cell, mesh)
+        costs.append(_cost_of(lowered.compile()))
+    per_unit = {k: (costs[1][k] - costs[0][k]) / (u2 - u1)
+                for k in ("flops", "bytes", "coll")}
+    base = {k: costs[0][k] - u1 * per_unit[k] for k in per_unit}
+    full = {k: base[k] + full_u * per_unit[k] for k in per_unit}
+    return {
+        "probe_depths": [c1.n_layers, c2.n_layers],
+        "per_unit": per_unit, "base": base, "full": full,
+        "probe_coll_by_kind": costs[1]["coll_by_kind"],
+    }
+
+
+def dryrun_cell(arch_id: str, shape_name: str, multi_pod: bool = False,
+                verbose: bool = True, probe: bool = True) -> Dict[str, Any]:
+    spec = get_arch(arch_id)
+    cell = SHAPES[shape_name]
+    rec: Dict[str, Any] = {
+        "arch": arch_id, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": cell.kind,
+    }
+    if not spec.applicable(shape_name):
+        rec["status"] = "skip"
+        rec["reason"] = spec.skips[shape_name]
+        return rec
+
+    cfg = spec.config
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    with jax.set_mesh(mesh):
+        rec["n_params"] = count_params(model_def(cfg))
+
+        lowered = _lower_cell(cfg, spec, cell, mesh)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        scan_cost = _cost_of(compiled)
+        mem = compiled.memory_analysis()
+        rec.update({
+            "status": "ok",
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "scan_cost_raw": scan_cost,          # scan body counted once
+            "hlo_bytes": len(compiled.as_text()),
+        })
+        if mem is not None:
+            for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                         "output_size_in_bytes", "alias_size_in_bytes"):
+                v = getattr(mem, attr, None)
+                if v is not None:
+                    rec.setdefault("memory_analysis", {})[attr] = int(v)
+
+        # roofline: single-pod only (the table's mesh), depth-extrapolated
+        if probe and not multi_pod:
+            pr = roofline_probe(spec, cell, mesh)
+            rec["probe"] = pr
+            if cell.kind == "decode":
+                tokens = cell.global_batch
+            else:
+                tokens = cell.global_batch * cell.seq_len
+            mf = model_flops_estimate(
+                _active_params(cfg, rec["n_params"]), tokens,
+                "train" if cell.kind == "train" else "serve")
+            terms = RooflineTerms(
+                flops_per_device=pr["full"]["flops"],
+                bytes_per_device=pr["full"]["bytes"],
+                collective_bytes_per_device=pr["full"]["coll"],
+                n_devices=n_dev, model_flops=mf,
+            )
+            rec["roofline"] = terms.to_dict()
+        if verbose:
+            dom = rec.get("roofline", {}).get("dominant", "-")
+            print(f"[dryrun] {arch_id} x {shape_name} x {rec['mesh']}: OK "
+                  f"(lower {t_lower:.0f}s, compile {t_compile:.0f}s, "
+                  f"dominant={dom})", flush=True)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--no-probe", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    cells = []
+    if args.all:
+        for arch in list_archs():
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch, args.shape))
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for arch, shape in cells:
+        for mp in meshes:
+            tag = f"{arch}__{shape}__{'multi' if mp else 'single'}"
+            path = os.path.join(args.out, tag + ".json")
+            if os.path.exists(path):
+                print(f"[dryrun] {tag}: cached", flush=True)
+                continue
+            try:
+                rec = dryrun_cell(arch, shape, multi_pod=mp,
+                                  probe=not args.no_probe)
+            except Exception as e:  # noqa: BLE001 — record, keep sweeping
+                rec = {"arch": arch, "shape": shape,
+                       "mesh": "2x16x16" if mp else "16x16",
+                       "status": "error", "error": repr(e),
+                       "traceback": traceback.format_exc()[-4000:]}
+                print(f"[dryrun] {tag}: ERROR {e}", flush=True)
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+from .model import (
+    ModelConfig,
+    decode_step,
+    forward,
+    init_decode_state,
+    model_def,
+)
+from .param import abstract, count_params, logical_axes, materialize
+
+__all__ = [
+    "ModelConfig", "decode_step", "forward", "init_decode_state",
+    "model_def", "abstract", "count_params", "logical_axes", "materialize",
+]

@@ -1,0 +1,304 @@
+"""Attention: MHA / GQA / MQA with RoPE, causal & sliding-window masks,
+chunked online-softmax for long context, and KV-cache decode.
+
+Shapes: activations are (B, S, D); heads live in (B, S, H, Dh) between the
+projections.  GQA repeats KV heads by ``H // KV`` inside the score einsum
+(no materialized repeat).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import shard
+from .common import apply_rope, dense, dense_def
+from .param import P
+
+NEG_INF = -2.0e38
+
+
+class AttnConfig(NamedTuple):
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    rope_theta: float = 10000.0
+    qkv_bias: bool = False
+    causal: bool = True
+    window: Optional[int] = None       # sliding-window size (local attention)
+    q_chunk: int = 2048
+    kv_chunk: int = 1024
+    # soft logit cap (Gemma-2-style); 0 disables
+    logit_cap: float = 0.0
+    # sequence-parallel attention (§Perf): shard q rows over "model" when
+    # the head counts cannot divide the model axis (MQA / 20-head / 24-head
+    # archs) — otherwise those cells replicate all attention compute+memory
+    # on every model shard.
+    seq_shard: bool = False
+
+
+def attn_def(cfg: AttnConfig) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "q": dense_def(d, h * hd, ("embed", "heads"), bias=cfg.qkv_bias),
+        "k": dense_def(d, kv * hd, ("embed", "kv_heads"), bias=cfg.qkv_bias),
+        "v": dense_def(d, kv * hd, ("embed", "kv_heads"), bias=cfg.qkv_bias),
+        "o": dense_def(h * hd, d, ("heads", "embed")),
+    }
+
+
+def _mask_bias(q_pos, k_pos, causal: bool, window: Optional[int]) -> jax.Array:
+    """(Sq, Sk) additive mask bias from position vectors."""
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        ok &= k_pos[None, :] > q_pos[:, None] - window
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def _sdpa(q, k, v, bias, scale, logit_cap):
+    """q (B,Sq,H,D), k (B,Sk,KV,D), v (B,Sk,KV,Dv) -> (B,Sq,H,Dv)."""
+    b, sq, h, d = q.shape
+    kv = k.shape[2]
+    dv = v.shape[-1]
+    g = h // kv
+    qg = q.reshape(b, sq, kv, g, d)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if logit_cap > 0:
+        scores = logit_cap * jnp.tanh(scores / logit_cap)
+    scores = scores + bias[None, None, None]
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, dv).astype(q.dtype)
+
+
+def _chunked_sdpa(q, k, v, q_pos, k_pos, causal, window, scale, logit_cap,
+                  q_chunk, kv_chunk):
+    """Online-softmax over KV chunks; peak memory O(Sq * kv_chunk).
+
+    Supports d_v != d_qk (MLA routes its concatenated [nope|rope] keys with
+    128-dim values through here).  Causal/window blocks that are fully
+    masked still execute (static grid) but their contribution is exactly
+    zero; the §Perf loop can skip them via a triangular grid if the cell is
+    compute-bound.
+    """
+    b, sq, h, d = q.shape
+    dv = v.shape[-1]
+    sk, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    n_q = -(-sq // q_chunk)
+    n_k = -(-sk // kv_chunk)
+    q_pad = n_q * q_chunk - sq
+    k_pad = n_k * kv_chunk - sk
+    if q_pad:
+        q = jnp.pad(q, ((0, 0), (0, q_pad), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, (0, q_pad), constant_values=-1)
+    if k_pad:
+        k = jnp.pad(k, ((0, 0), (0, k_pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, k_pad), (0, 0), (0, 0)))
+        # padded keys get position +inf-ish so causal mask kills them
+        k_pos = jnp.pad(k_pos, (0, k_pad), constant_values=2**30)
+
+    qc = q.reshape(b, n_q, q_chunk, kv, g, d).astype(jnp.float32)
+    kc = k.reshape(b, n_k, kv_chunk, kv, d).astype(jnp.float32)
+    vc = v.reshape(b, n_k, kv_chunk, kv, dv).astype(jnp.float32)
+    qp = q_pos.reshape(n_q, q_chunk)
+    kp = k_pos.reshape(n_k, kv_chunk)
+
+    def q_block(qi):
+        qb, qpb = qc[:, qi], qp[qi]                    # (B,Qc,KV,G,D), (Qc,)
+
+        def kv_step(carry, ki):
+            acc, m, l = carry
+            kb, vb, kpb = kc[:, ki], vc[:, ki], kp[ki]
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qb, kb) * scale
+            if logit_cap > 0:
+                s = logit_cap * jnp.tanh(s / logit_cap)
+            s = s + _mask_bias(qpb, kpb, causal, window)[None, None, None]
+            m_new = jnp.maximum(m, s.max(-1))
+            # guard fully-masked rows (m_new = -inf) against NaN
+            m_safe = jnp.maximum(m_new, -1e30)
+            p = jnp.exp(s - m_safe[..., None])
+            corr = jnp.exp(jnp.maximum(m, -1e30) - m_safe)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd", p, vb)
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((b, kv, g, q_chunk, dv), jnp.float32)
+        m0 = jnp.full((b, kv, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kv, g, q_chunk), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(jax.checkpoint(kv_step),
+                                      (acc0, m0, l0), jnp.arange(n_k))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]   # (B,KV,G,Qc,D)
+        return jnp.einsum("bkgqd->bqkgd", out)
+
+    # remat the per-q-block pass: without this, autodiff saves every
+    # (B,KV,G,Qc,Kc) score block across the KV scan — O(S^2) residuals that
+    # defeat the online-softmax memory bound.  Recompute them in bwd instead.
+    out = jax.lax.map(jax.checkpoint(q_block), jnp.arange(n_q))
+    out = jnp.moveaxis(out, 0, 1).reshape(b, n_q * q_chunk, h, dv)
+    return out[:, :sq].astype(q.dtype)
+
+
+def attention(
+    params: dict,
+    x: jax.Array,
+    cfg: AttnConfig,
+    positions: Optional[jax.Array] = None,
+    use_chunked: Optional[bool] = None,
+) -> jax.Array:
+    """Self-attention over x (B, S, D)."""
+    b, s, _ = x.shape
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    if positions is None:
+        positions = jnp.arange(s)
+    q = dense(params["q"], x).reshape(b, s, h, hd)
+    k = dense(params["k"], x).reshape(b, s, kvh, hd)
+    v = dense(params["v"], x).reshape(b, s, kvh, hd)
+    q = apply_rope(q, positions[None, :], cfg.rope_theta)
+    k = apply_rope(k, positions[None, :], cfg.rope_theta)
+    q = shard(q, "batch", None, "act_heads", None)
+    k = shard(k, "batch", None, "act_heads", None)
+    v = shard(v, "batch", None, "act_heads", None)
+
+    scale = hd ** -0.5
+    if use_chunked is None:
+        use_chunked = s > cfg.q_chunk
+
+    mesh = _seq_shard_mesh(cfg, s)
+    if mesh is not None:
+        out = _seq_parallel_sdpa(mesh, q, k, v, positions, cfg, scale,
+                                 use_chunked)
+    elif use_chunked:
+        out = _chunked_sdpa(q, k, v, positions, positions, cfg.causal,
+                            cfg.window, scale, cfg.logit_cap,
+                            cfg.q_chunk, cfg.kv_chunk)
+    else:
+        bias = _mask_bias(positions, positions, cfg.causal, cfg.window)
+        out = _sdpa(q, k, v, bias, scale, cfg.logit_cap)
+    out = shard(out, "batch", None, "act_heads", None)
+    return dense(params["o"], out.reshape(b, s, h * hd))
+
+
+def _seq_shard_mesh(cfg: AttnConfig, s: int):
+    """Return the mesh when sequence-parallel attention should engage."""
+    if not cfg.seq_shard:
+        return None
+    try:
+        am = jax.sharding.get_abstract_mesh()
+    except Exception:
+        return None
+    if am is None or am.empty or "model" not in am.shape:
+        return None
+    m = am.shape["model"]
+    if m <= 1 or s % m != 0:
+        return None
+    if cfg.n_kv_heads % m == 0:
+        return None   # heads shard fine; no need for SP
+    return am
+
+
+def _seq_parallel_sdpa(mesh, q, k, v, positions, cfg: AttnConfig, scale,
+                       use_chunked):
+    """Context parallelism: each "model" shard owns s/M query rows and the
+    full K/V (replicated); the causal mask follows the per-shard positions.
+    Communication: one all-gather of the (B,S,H,D) output downstream instead
+    of replicating the whole S x S score computation M times."""
+    from jax.sharding import PartitionSpec as PS
+
+    dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    m = mesh.shape["model"]
+    s_loc = q.shape[1] // m
+
+    def shard_fn(q_l, k_f, v_f, pos_l, pos_f):
+        if use_chunked and s_loc > cfg.q_chunk:
+            return _chunked_sdpa(q_l, k_f, v_f, pos_l, pos_f, cfg.causal,
+                                 cfg.window, scale, cfg.logit_cap,
+                                 cfg.q_chunk, cfg.kv_chunk)
+        bias = _mask_bias(pos_l, pos_f, cfg.causal, cfg.window)
+        return _sdpa(q_l, k_f, v_f, bias, scale, cfg.logit_cap)
+
+    return jax.shard_map(
+        shard_fn,
+        mesh=mesh,
+        in_specs=(PS(dp, "model"), PS(dp), PS(dp), PS("model"), PS()),
+        out_specs=PS(dp, "model"),
+    )(q, k, v, positions, positions)
+
+
+# ---------------------------------------------------------------------------
+# KV-cache decode
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    """Dense KV cache; for windowed attention it is a RING buffer of size
+    ``window`` (slot = pos % window), which is what keeps recurrentgemma's
+    524k-token decode cell at O(window) memory."""
+
+    k: jax.Array        # (B, S_cache, KV, Dh)
+    v: jax.Array
+    slot_pos: jax.Array  # (S_cache,) int32 — true position held per slot (-1 empty)
+    pos: jax.Array      # () int32 — next write position
+
+
+def init_kv_cache(batch: int, s_max: int, cfg: AttnConfig,
+                  dtype=jnp.bfloat16) -> KVCache:
+    s_cache = min(s_max, cfg.window) if cfg.window else s_max
+    shape = (batch, s_cache, cfg.n_kv_heads, cfg.head_dim)
+    return KVCache(
+        k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+        slot_pos=jnp.full((s_cache,), -1, jnp.int32),
+        pos=jnp.zeros((), jnp.int32),
+    )
+
+
+def decode_attention(
+    params: dict, x_t: jax.Array, cache: KVCache, cfg: AttnConfig
+) -> Tuple[jax.Array, KVCache]:
+    """One-token step.  x_t: (B, 1, D).  Returns (out (B,1,D), new cache).
+
+    Dense cache: write slot = pos.  Ring cache (windowed): slot = pos % W.
+    """
+    b = x_t.shape[0]
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    pos = cache.pos
+    q = dense(params["q"], x_t).reshape(b, 1, h, hd)
+    k = dense(params["k"], x_t).reshape(b, 1, kvh, hd)
+    v = dense(params["v"], x_t).reshape(b, 1, kvh, hd)
+    posv = pos[None, None]
+    q = apply_rope(q, jnp.broadcast_to(posv, (b, 1)), cfg.rope_theta)
+    k = apply_rope(k, jnp.broadcast_to(posv, (b, 1)), cfg.rope_theta)
+
+    s_cache = cache.k.shape[1]
+    slot = pos % s_cache if cfg.window else pos
+    k_all = jax.lax.dynamic_update_slice(
+        cache.k, k.astype(cache.k.dtype), (0, slot, 0, 0))
+    v_all = jax.lax.dynamic_update_slice(
+        cache.v, v.astype(cache.v.dtype), (0, slot, 0, 0))
+    slot_pos = jax.lax.dynamic_update_slice(
+        cache.slot_pos, pos[None], (slot,))
+    k_all = shard(k_all, "batch", None, "act_heads", None)
+    v_all = shard(v_all, "batch", None, "act_heads", None)
+
+    valid = (slot_pos >= 0) & (slot_pos <= pos)
+    if cfg.window is not None:
+        valid &= slot_pos > pos - cfg.window
+    bias = jnp.where(valid, 0.0, NEG_INF)               # (S_cache,)
+
+    g = h // kvh
+    qg = q.reshape(b, 1, kvh, g, hd)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                        k_all.astype(jnp.float32)) * hd ** -0.5
+    if cfg.logit_cap > 0:
+        scores = cfg.logit_cap * jnp.tanh(scores / cfg.logit_cap)
+    probs = jax.nn.softmax(scores + bias[None, None, None, None], axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v_all.astype(jnp.float32))
+    out = out.reshape(b, 1, h * hd).astype(x_t.dtype)
+    y = dense(params["o"], out)
+    return y, KVCache(k=k_all, v=v_all, slot_pos=slot_pos, pos=pos + 1)

@@ -1,0 +1,27 @@
+"""Feed-forward blocks: plain MLP and GLU variants (SwiGLU/GeGLU)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import shard
+from .common import act_fn, dense, dense_def
+
+
+def ffn_def(d: int, d_ff: int, act: str = "silu", glu: bool = True) -> dict:
+    p = {"up": dense_def(d, d_ff, ("embed", "ff")),
+         "down": dense_def(d_ff, d, ("ff", "embed"))}
+    if glu:
+        p["gate"] = dense_def(d, d_ff, ("embed", "ff"))
+    return p
+
+
+def ffn(params: dict, x: jax.Array, act: str = "silu") -> jax.Array:
+    up = dense(params["up"], x)
+    if "gate" in params:
+        up = act_fn(act)(dense(params["gate"], x)) * up
+    else:
+        up = act_fn(act)(up)
+    up = shard(up, "batch", None, "act_ff")
+    return dense(params["down"], up)

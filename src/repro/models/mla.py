@@ -1,0 +1,183 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+KV state is compressed into a ``kv_lora``-dim latent ``c_kv`` plus one shared
+RoPE key; queries go through a ``q_lora`` bottleneck.  The decode cache holds
+ONLY (c_kv, k_rope) — the latent cache that makes MLA's KV memory ~1/8 of
+GQA's.  Decode supports the ABSORBED form (W_uk folded into the query,
+W_uv folded into the output), so per-step FLOPs never expand the latents
+back to per-head K/V.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import shard
+from .common import apply_rope, dense, dense_def, rmsnorm, rmsnorm_def
+from .param import P
+
+NEG_INF = -2.0e38
+
+
+class MLAConfig(NamedTuple):
+    d_model: int
+    n_heads: int
+    q_lora: int
+    kv_lora: int
+    d_nope: int          # per-head non-rotary dim
+    d_rope: int          # rotary dim (shared key)
+    d_v: int             # per-head value dim
+    rope_theta: float = 10000.0
+    q_chunk: int = 2048
+    kv_chunk: int = 1024
+
+
+def mla_def(cfg: MLAConfig) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    dq = cfg.d_nope + cfg.d_rope
+    return {
+        "dq": dense_def(d, cfg.q_lora, ("embed", "lora")),
+        "q_norm": rmsnorm_def(cfg.q_lora),
+        "uq": dense_def(cfg.q_lora, h * dq, ("lora", "heads")),
+        "dkv": dense_def(d, cfg.kv_lora, ("embed", "lora")),
+        "kv_norm": rmsnorm_def(cfg.kv_lora),
+        "kr": dense_def(d, cfg.d_rope, ("embed", None)),
+        "uk": P((cfg.kv_lora, h, cfg.d_nope), ("lora", "heads", None)),
+        "uv": P((cfg.kv_lora, h, cfg.d_v), ("lora", "heads", None)),
+        "o": dense_def(h * cfg.d_v, d, ("heads", "embed")),
+    }
+
+
+def _project_q(params, x, cfg: MLAConfig, positions):
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    q = dense(params["uq"], rmsnorm(params["q_norm"], dense(params["dq"], x)))
+    q = q.reshape(b, s, h, cfg.d_nope + cfg.d_rope)
+    q_nope, q_rope = q[..., :cfg.d_nope], q[..., cfg.d_nope:]
+    q_rope = apply_rope(q_rope, positions[None, :], cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _project_kv_latent(params, x, cfg: MLAConfig, positions):
+    c_kv = rmsnorm(params["kv_norm"], dense(params["dkv"], x))  # (B,S,L)
+    k_rope = dense(params["kr"], x)[:, :, None, :]              # (B,S,1,dr)
+    k_rope = apply_rope(k_rope, positions[None, :], cfg.rope_theta)[:, :, 0]
+    return c_kv, k_rope
+
+
+def mla_attention(
+    params: dict, x: jax.Array, cfg: MLAConfig,
+    positions: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Full-sequence (training / prefill) MLA.  x: (B, S, D).
+
+    The two-part MLA score (nope + shared-rope) is folded into ONE standard
+    attention by concatenating [q_nope | q_rope] against
+    [k_nope | broadcast k_rope] (d_qk = d_nope + d_rope, d_v = d_v), so the
+    long-context path reuses the chunked online-softmax machinery —
+    without it the 32k deepseek cells materialize (B,H,S,S) f32 scores
+    (165-217 GB/device, §Perf).
+    """
+    from .attention import _chunked_sdpa, _mask_bias, _sdpa
+
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    if positions is None:
+        positions = jnp.arange(s)
+    q_nope, q_rope = _project_q(params, x, cfg, positions)
+    c_kv, k_rope = _project_kv_latent(params, x, cfg, positions)
+
+    # expand latents for training (absorbed path is decode-only)
+    k_nope = jnp.einsum("bsl,lhd->bshd", c_kv, params["uk"].astype(x.dtype))
+    v = jnp.einsum("bsl,lhd->bshd", c_kv, params["uv"].astype(x.dtype))
+    q_nope = shard(q_nope, "batch", None, "act_heads", None)
+    k_nope = shard(k_nope, "batch", None, "act_heads", None)
+    v = shard(v, "batch", None, "act_heads", None)
+
+    q_cat = jnp.concatenate([q_nope, q_rope], axis=-1)      # (B,S,H,dn+dr)
+    k_cat = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (b, s, h, cfg.d_rope))], axis=-1)
+    scale = (cfg.d_nope + cfg.d_rope) ** -0.5
+    if s > cfg.q_chunk:
+        out = _chunked_sdpa(q_cat, k_cat, v, positions, positions,
+                            True, None, scale, 0.0,
+                            cfg.q_chunk, cfg.kv_chunk)
+    else:
+        bias = _mask_bias(positions, positions, True, None)
+        out = _sdpa(q_cat, k_cat, v, bias, scale, 0.0)
+    out = out.reshape(b, s, h * cfg.d_v).astype(x.dtype)
+    return dense(params["o"], out)
+
+
+# ---------------------------------------------------------------------------
+# latent-cache decode (absorbed)
+# ---------------------------------------------------------------------------
+
+class MLACache(NamedTuple):
+    c_kv: jax.Array      # (B, S_max, kv_lora)
+    k_rope: jax.Array    # (B, S_max, d_rope)
+    pos: jax.Array
+
+
+def init_mla_cache(batch: int, s_max: int, cfg: MLAConfig,
+                   dtype=jnp.bfloat16) -> MLACache:
+    return MLACache(
+        c_kv=jnp.zeros((batch, s_max, cfg.kv_lora), dtype),
+        k_rope=jnp.zeros((batch, s_max, cfg.d_rope), dtype),
+        pos=jnp.zeros((), jnp.int32),
+    )
+
+
+def mla_decode(
+    params: dict, x_t: jax.Array, cache: MLACache, cfg: MLAConfig,
+    absorb: bool = True,
+) -> Tuple[jax.Array, MLACache]:
+    """One-token MLA step with the latent cache.  x_t: (B, 1, D)."""
+    b = x_t.shape[0]
+    h = cfg.n_heads
+    pos = cache.pos
+    posv = jnp.broadcast_to(pos[None, None], (b, 1))
+    q_nope, q_rope = _project_q(params, x_t, cfg, posv[0])
+    c_t, kr_t = _project_kv_latent(params, x_t, cfg, posv[0])
+
+    c_all = jax.lax.dynamic_update_slice(
+        cache.c_kv, c_t.astype(cache.c_kv.dtype), (0, pos, 0))
+    kr_all = jax.lax.dynamic_update_slice(
+        cache.k_rope, kr_t.astype(cache.k_rope.dtype), (0, pos, 0))
+
+    s_max = c_all.shape[1]
+    valid = jnp.arange(s_max) <= pos
+    bias = jnp.where(valid, 0.0, NEG_INF)
+    scale = (cfg.d_nope + cfg.d_rope) ** -0.5
+
+    if absorb:
+        # fold W_uk into q: (B,1,H,dn) x (L,H,dn) -> (B,H,L)
+        q_abs = jnp.einsum("bqhd,lhd->bhl", q_nope.astype(jnp.float32),
+                           params["uk"].astype(jnp.float32))
+        s_lat = jnp.einsum("bhl,bsl->bhs", q_abs,
+                           c_all.astype(jnp.float32))
+        s_rope = jnp.einsum("bqhd,bsd->bhs", q_rope.astype(jnp.float32),
+                            kr_all.astype(jnp.float32))
+        probs = jax.nn.softmax((s_lat + s_rope) * scale + bias[None, None],
+                               axis=-1)
+        o_lat = jnp.einsum("bhs,bsl->bhl", probs, c_all.astype(jnp.float32))
+        out = jnp.einsum("bhl,lhd->bhd", o_lat,
+                         params["uv"].astype(jnp.float32))
+    else:
+        k_nope = jnp.einsum("bsl,lhd->bshd", c_all.astype(jnp.float32),
+                            params["uk"].astype(jnp.float32))
+        v = jnp.einsum("bsl,lhd->bshd", c_all.astype(jnp.float32),
+                       params["uv"].astype(jnp.float32))
+        s_n = jnp.einsum("bqhd,bshd->bhs", q_nope.astype(jnp.float32), k_nope)
+        s_r = jnp.einsum("bqhd,bsd->bhs", q_rope.astype(jnp.float32),
+                         kr_all.astype(jnp.float32))
+        probs = jax.nn.softmax((s_n + s_r) * scale + bias[None, None], axis=-1)
+        out = jnp.einsum("bhs,bshd->bhd", probs, v)
+
+    out = out.reshape(b, 1, h * cfg.d_v).astype(x_t.dtype)
+    y = dense(params["o"], out)
+    return y, MLACache(c_kv=c_all, k_rope=kr_all, pos=pos + 1)

@@ -1,0 +1,511 @@
+"""Unified model assembly for all assigned architecture families.
+
+One ``ModelConfig`` describes any of: dense decoder LMs (gemma / phi3 /
+mistral-large / qwen1.5), MoE LMs (deepseek-v2 w/ MLA, granite), SSM
+(mamba2), hybrid (recurrentgemma RG-LRU + local attention), encoder-only
+(hubert) and VLM backbones (llava-next).
+
+Key structural choices (DESIGN.md §Pillar C):
+
+* **scan-over-layers**: per-layer params are stacked on a leading "layer"
+  axis and the stack runs under ``jax.lax.scan`` — HLO size is O(1) in
+  depth, which is what makes the 88-layer / 236B dry-run compile on a CPU
+  host with 512 virtual devices.  Heterogeneous stacks (recurrentgemma's
+  (R, R, A) pattern) scan over pattern blocks, remainder layers unrolled.
+* **remat**: the scan body is wrapped in ``jax.checkpoint`` per config.
+* Decode state is a per-layer-stacked pytree scanned in lock-step with the
+  layer params.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import shard
+from . import attention as attn_mod
+from . import mla as mla_mod
+from . import moe as moe_mod
+from . import rglru as rglru_mod
+from . import ssd as ssd_mod
+from .common import (
+    dense, dense_def, embed, embed_def, head_def, rmsnorm, rmsnorm_def,
+    unembed,
+)
+from .ffn import ffn, ffn_def
+from .param import P, stack_defs
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "dense"   # dense | moe | ssm | hybrid | encoder | vlm
+    n_layers: int = 2
+    d_model: int = 128
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    head_dim: int = 32
+    d_ff: int = 256
+    vocab: int = 256
+    act: str = "silu"
+    glu: bool = True
+    rope_theta: float = 10000.0
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    embed_scale: bool = False      # gemma-style sqrt(d) embedding scale
+    logit_cap: float = 0.0
+    # moe
+    n_experts: int = 0
+    n_experts_pad: int = 0
+    top_k: int = 0
+    d_ff_expert: int = 0
+    n_shared_experts: int = 0
+    n_dense_prefix: int = 0        # leading layers with dense FFN (deepseek)
+    capacity_factor: float = 1.25
+    # mla
+    use_mla: bool = False
+    q_lora: int = 0
+    kv_lora: int = 0
+    d_nope: int = 0
+    d_rope: int = 0
+    # ssm
+    d_state: int = 0
+    d_conv: int = 4
+    expand: int = 2
+    ssd_chunk: int = 256
+    # hybrid
+    window: int = 0
+    pattern: Tuple[str, ...] = ()
+    lru_width: int = 0
+    # vlm
+    n_img_tokens: int = 0
+    # execution
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    remat: bool = True
+    scan_layers: bool = True
+    use_convdk_kernel: bool = False
+    q_chunk: int = 2048
+    kv_chunk: int = 1024
+    mla_absorb: bool = True
+    # §Perf knobs (hillclimb; see EXPERIMENTS.md)
+    vocab_pad_multiple: int = 0    # pad vocab so logits shard on "model"
+    seq_shard_attn: bool = False   # sequence-parallel attention (shard_map)
+    seq_shard_resid: bool = False  # Megatron-SP: seq-shard the residual stream
+
+    # ---- derived ----
+    @property
+    def adtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.vocab_pad_multiple
+        return -(-self.vocab // m) * m if m else self.vocab
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def ssd_heads(self) -> int:
+        return self.d_inner // 64 if self.family == "ssm" else 0
+
+    def attn_cfg(self, window=None) -> attn_mod.AttnConfig:
+        return attn_mod.AttnConfig(
+            d_model=self.d_model, n_heads=self.n_heads,
+            n_kv_heads=self.n_kv_heads, head_dim=self.head_dim,
+            rope_theta=self.rope_theta, qkv_bias=self.qkv_bias,
+            causal=self.family != "encoder",
+            window=window, q_chunk=self.q_chunk, kv_chunk=self.kv_chunk,
+            logit_cap=self.logit_cap, seq_shard=self.seq_shard_attn,
+        )
+
+    def mla_cfg(self) -> mla_mod.MLAConfig:
+        return mla_mod.MLAConfig(
+            d_model=self.d_model, n_heads=self.n_heads, q_lora=self.q_lora,
+            kv_lora=self.kv_lora, d_nope=self.d_nope, d_rope=self.d_rope,
+            d_v=self.head_dim, rope_theta=self.rope_theta,
+            q_chunk=self.q_chunk, kv_chunk=self.kv_chunk,
+        )
+
+    def moe_cfg(self) -> moe_mod.MoEConfig:
+        return moe_mod.MoEConfig(
+            d_model=self.d_model, n_experts=self.n_experts,
+            n_experts_pad=self.n_experts_pad or self.n_experts,
+            top_k=self.top_k, d_ff=self.d_ff_expert, act=self.act,
+            capacity_factor=self.capacity_factor,
+        )
+
+    def ssd_cfg(self) -> ssd_mod.SSDConfig:
+        return ssd_mod.SSDConfig(
+            d_model=self.d_model, d_inner=self.d_inner,
+            n_heads=self.d_inner // 64, head_dim=64, d_state=self.d_state,
+            n_groups=1, d_conv=self.d_conv, chunk=self.ssd_chunk,
+            use_kernel=self.use_convdk_kernel,
+        )
+
+    def rglru_cfg(self) -> rglru_mod.RGLRUConfig:
+        return rglru_mod.RGLRUConfig(
+            d_model=self.d_model, width=self.lru_width or self.d_model,
+            d_conv=self.d_conv, use_kernel=self.use_convdk_kernel,
+        )
+
+    def layer_kinds(self) -> Tuple[str, ...]:
+        """Per-layer kind sequence, e.g. ('A',)*n or ('R','R','A')*m."""
+        if self.family == "hybrid":
+            pat = self.pattern or ("R", "R", "A")
+            reps = -(-self.n_layers // len(pat))
+            return (pat * reps)[: self.n_layers]
+        if self.family == "ssm":
+            return ("S",) * self.n_layers
+        return ("A",) * self.n_layers
+
+
+# ---------------------------------------------------------------------------
+# per-layer definitions
+# ---------------------------------------------------------------------------
+
+def _layer_def(cfg: ModelConfig, kind: str, moe: bool) -> dict:
+    d = cfg.d_model
+    if kind == "S":
+        return {"norm": rmsnorm_def(d), "ssd": ssd_mod.ssd_def(cfg.ssd_cfg())}
+    if kind == "R":
+        return {"norm": rmsnorm_def(d),
+                "rec": rglru_mod.rglru_def(cfg.rglru_cfg()),
+                "ln2": rmsnorm_def(d),
+                "ffn": ffn_def(d, cfg.d_ff, cfg.act, cfg.glu)}
+    # attention layer
+    p: Dict[str, Any] = {"ln1": rmsnorm_def(d)}
+    if cfg.use_mla:
+        p["attn"] = mla_mod.mla_def(cfg.mla_cfg())
+    else:
+        p["attn"] = attn_mod.attn_def(cfg.attn_cfg())
+    p["ln2"] = rmsnorm_def(d)
+    if moe:
+        p["moe"] = moe_mod.moe_def(cfg.moe_cfg())
+        if cfg.n_shared_experts:
+            p["shared"] = ffn_def(d, cfg.n_shared_experts * cfg.d_ff_expert,
+                                  cfg.act, cfg.glu)
+    else:
+        p["ffn"] = ffn_def(d, cfg.d_ff, cfg.act, cfg.glu)
+    return p
+
+
+def _apply_layer(lp: dict, x: jax.Array, cfg: ModelConfig, kind: str,
+                 positions, use_chunked=None) -> jax.Array:
+    if kind == "S":
+        return x + ssd_mod.ssd_block(lp["ssd"], rmsnorm(lp["norm"], x),
+                                     cfg.ssd_cfg())
+    if kind == "R":
+        h = x + rglru_mod.rglru_block(lp["rec"], rmsnorm(lp["norm"], x),
+                                      cfg.rglru_cfg())
+        return h + ffn(lp["ffn"], rmsnorm(lp["ln2"], h), cfg.act)
+    window = cfg.window if (cfg.family == "hybrid" and kind == "A"
+                            and cfg.window) else None
+    h = rmsnorm(lp["ln1"], x)
+    if cfg.use_mla:
+        h = mla_mod.mla_attention(lp["attn"], h, cfg.mla_cfg(), positions)
+    else:
+        h = attn_mod.attention(lp["attn"], h, cfg.attn_cfg(window),
+                               positions, use_chunked)
+    x = x + h
+    h = rmsnorm(lp["ln2"], x)
+    if "moe" in lp:
+        y = moe_mod.moe_apply(lp["moe"], h, cfg.moe_cfg())
+        if "shared" in lp:
+            y = y + ffn(lp["shared"], h, cfg.act)
+    else:
+        y = ffn(lp["ffn"], h, cfg.act)
+    return x + y
+
+
+# ---------------------------------------------------------------------------
+# whole-model definition
+# ---------------------------------------------------------------------------
+
+def _layer_groups(cfg: ModelConfig):
+    """Split layers into (prefix unrolled, scanned stack of identical
+    blocks, remainder unrolled).  Each group entry = (kinds_tuple, count)."""
+    kinds = cfg.layer_kinds()
+    n_prefix = cfg.n_dense_prefix
+    prefix = kinds[:n_prefix]
+    rest = kinds[n_prefix:]
+    if cfg.family == "hybrid":
+        pat = cfg.pattern or ("R", "R", "A")
+        blk = len(pat)
+        n_blocks = len(rest) // blk
+        rem = rest[n_blocks * blk:]
+        return prefix, pat, n_blocks, rem
+    return prefix, (rest[0],) if rest else (), len(rest), ()
+
+
+def model_def(cfg: ModelConfig) -> dict:
+    p: Dict[str, Any] = {"embed": embed_def(cfg.padded_vocab, cfg.d_model)}
+    prefix, pat, n_blocks, rem = _layer_groups(cfg)
+    moe = cfg.family == "moe"
+    if prefix:
+        p["prefix"] = [
+            _layer_def(cfg, k, moe=False) for k in prefix  # dense prefix
+        ]
+    if n_blocks:
+        block = {f"{i}_{k}": _layer_def(cfg, k, moe) for i, k in enumerate(pat)}
+        p["stack"] = stack_defs(block, n_blocks)
+    if rem:
+        p["rem"] = [_layer_def(cfg, k, moe) for k in rem]
+    p["final_norm"] = rmsnorm_def(cfg.d_model)
+    if not cfg.tie_embeddings:
+        p["head"] = head_def(cfg.d_model, cfg.padded_vocab)
+    if cfg.family == "vlm":
+        # frontend stub: precomputed patch embeddings get one projection
+        p["img_proj"] = dense_def(cfg.d_model, cfg.d_model, ("embed", None))
+    if cfg.family == "encoder":
+        # frontend stub: precomputed frame embeddings get one projection
+        p["frame_proj"] = dense_def(cfg.d_model, cfg.d_model, ("embed", None))
+    return p
+
+
+def _apply_block(lp: dict, x, cfg, pat, positions, use_chunked):
+    for i, k in enumerate(pat):
+        x = _apply_layer(lp[f"{i}_{k}"], x, cfg, k, positions, use_chunked)
+    return x
+
+
+def _mask_pad_logits(logits: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Vocab-padding mask: padded classes get -inf so CE / sampling ignore
+    them.  Elementwise on the sharded vocab dim — no resharding."""
+    if cfg.padded_vocab == cfg.vocab:
+        return logits
+    pad = jax.lax.broadcasted_iota(
+        jnp.int32, logits.shape, logits.ndim - 1) >= cfg.vocab
+    return jnp.where(pad, jnp.asarray(-1e30, logits.dtype), logits)
+
+
+def forward(
+    params: dict,
+    batch: Dict[str, jax.Array],
+    cfg: ModelConfig,
+    use_chunked: Optional[bool] = None,
+) -> jax.Array:
+    """Full-sequence forward -> logits (B, S, V).
+
+    batch: {"tokens": (B,S)} and/or {"embeds": (B,S,D)} and/or
+           {"img_embeds": (B,N,D)} (VLM: image embeds are prepended).
+    """
+    dt = cfg.adtype
+    if "embeds" in batch:
+        x = batch["embeds"].astype(dt)
+        if cfg.family == "encoder":
+            x = dense(params["frame_proj"], x)
+    else:
+        x = embed(params["embed"], batch["tokens"], dt)
+    if cfg.family == "vlm" and "img_embeds" in batch:
+        img = dense(params["img_proj"], batch["img_embeds"].astype(dt))
+        x = jnp.concatenate([img, x], axis=1)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, dt)
+    x = shard(x, "batch", "seq", "act_embed")
+
+    s = x.shape[1]
+    positions = jnp.arange(s)
+    prefix, pat, n_blocks, rem = _layer_groups(cfg)
+
+    for lp, k in zip(params.get("prefix", []), prefix):
+        x = _apply_layer(lp, x, cfg, k, positions, use_chunked)
+
+    if n_blocks:
+        seq_ax = "seq_model" if cfg.seq_shard_resid else "seq"
+
+        def body(x, lp):
+            x = _apply_block(lp, x, cfg, pat, positions, use_chunked)
+            return shard(x, "batch", seq_ax, "act_embed"), None
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        if cfg.scan_layers:
+            x, _ = jax.lax.scan(body, x, params["stack"])
+        else:
+            stacked = params["stack"]
+            for i in range(n_blocks):
+                lp = jax.tree.map(lambda a: a[i], stacked)
+                x, _ = body(x, lp)
+
+    for lp, k in zip(params.get("rem", []), rem):
+        x = _apply_layer(lp, x, cfg, k, positions, use_chunked)
+
+    x = rmsnorm(params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = unembed(params["embed"], x)
+    else:
+        logits = dense(params["head"], x)
+    logits = shard(logits, "batch", "seq", "act_vocab")
+    logits = _mask_pad_logits(logits, cfg)
+    if cfg.logit_cap > 0:
+        logits = cfg.logit_cap * jnp.tanh(logits / cfg.logit_cap)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# decode (single-token serve step)
+# ---------------------------------------------------------------------------
+
+def _layer_cache(cfg: ModelConfig, kind: str, batch: int, s_max: int, dtype):
+    if kind == "S":
+        return ssd_mod.init_ssd_state(batch, cfg.ssd_cfg(), dtype)
+    if kind == "R":
+        return rglru_mod.init_rglru_state(batch, cfg.rglru_cfg(), dtype)
+    if cfg.use_mla:
+        return mla_mod.init_mla_cache(batch, s_max, cfg.mla_cfg(), dtype)
+    window = cfg.window if (cfg.family == "hybrid" and cfg.window) else None
+    return attn_mod.init_kv_cache(batch, s_max, cfg.attn_cfg(window), dtype)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, s_max: int,
+                      dtype=jnp.bfloat16) -> dict:
+    """Per-layer cache pytree, stacked along the scan axis for the stack."""
+    prefix, pat, n_blocks, rem = _layer_groups(cfg)
+    state: Dict[str, Any] = {}
+    if prefix:
+        state["prefix"] = [_layer_cache(cfg, k, batch, s_max, dtype)
+                           for k in prefix]
+    if n_blocks:
+        block = {f"{i}_{k}": _layer_cache(cfg, k, batch, s_max, dtype)
+                 for i, k in enumerate(pat)}
+        state["stack"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_blocks,) + a.shape).copy(), block)
+    if rem:
+        state["rem"] = [_layer_cache(cfg, k, batch, s_max, dtype) for k in rem]
+    return state
+
+
+def _is_axes(x) -> bool:
+    return isinstance(x, tuple) and all(isinstance(e, (str, type(None)))
+                                        for e in x)
+
+
+def _layer_cache_axes(cfg: ModelConfig, kind: str):
+    """Logical sharding axes parallel to ``_layer_cache`` structures."""
+    if kind == "S":
+        return ssd_mod.SSDState(
+            conv_x=("batch", None, "dinner"),
+            conv_b=("batch", None, None),
+            conv_c=("batch", None, None),
+            ssm=("batch", "heads", None, None),
+        )
+    if kind == "R":
+        return rglru_mod.RGLRUState(conv=("batch", None, "dinner"),
+                                    h=("batch", "dinner"))
+    if cfg.use_mla:
+        return mla_mod.MLACache(c_kv=("batch", None, None),
+                                k_rope=("batch", None, None), pos=())
+    return attn_mod.KVCache(k=("batch", None, "kv_heads", None),
+                            v=("batch", None, "kv_heads", None),
+                            slot_pos=(None,), pos=())
+
+
+def decode_state_axes(cfg: ModelConfig) -> dict:
+    """Logical axes pytree matching ``init_decode_state`` exactly."""
+    prefix, pat, n_blocks, rem = _layer_groups(cfg)
+    axes: Dict[str, Any] = {}
+    if prefix:
+        axes["prefix"] = [_layer_cache_axes(cfg, k) for k in prefix]
+    if n_blocks:
+        block = {f"{i}_{k}": _layer_cache_axes(cfg, k)
+                 for i, k in enumerate(pat)}
+        axes["stack"] = jax.tree.map(lambda t: (None,) + t, block,
+                                     is_leaf=_is_axes)
+    if rem:
+        axes["rem"] = [_layer_cache_axes(cfg, k) for k in rem]
+    return axes
+
+
+def _decode_layer(lp: dict, x: jax.Array, cache, cfg: ModelConfig, kind: str):
+    if kind == "S":
+        y, nc = ssd_mod.ssd_decode_step(lp["ssd"], rmsnorm(lp["norm"], x),
+                                        cache, cfg.ssd_cfg())
+        return x + y, nc
+    if kind == "R":
+        y, nc = rglru_mod.rglru_decode_step(lp["rec"], rmsnorm(lp["norm"], x),
+                                            cache, cfg.rglru_cfg())
+        h = x + y
+        return h + ffn(lp["ffn"], rmsnorm(lp["ln2"], h), cfg.act), nc
+    h = rmsnorm(lp["ln1"], x)
+    if cfg.use_mla:
+        y, nc = mla_mod.mla_decode(lp["attn"], h, cache, cfg.mla_cfg(),
+                                   absorb=cfg.mla_absorb)
+    else:
+        window = cfg.window if (cfg.family == "hybrid" and cfg.window) else None
+        y, nc = attn_mod.decode_attention(lp["attn"], h, cache,
+                                          cfg.attn_cfg(window))
+    x = x + y
+    h = rmsnorm(lp["ln2"], x)
+    if "moe" in lp:
+        y = moe_mod.moe_apply(lp["moe"], h, cfg.moe_cfg())
+        if "shared" in lp:
+            y = y + ffn(lp["shared"], h, cfg.act)
+    else:
+        y = ffn(lp["ffn"], h, cfg.act)
+    return x + y, nc
+
+
+def decode_step(
+    params: dict, state: dict, batch_t: Dict[str, jax.Array], cfg: ModelConfig
+) -> Tuple[jax.Array, dict]:
+    """One serve step: next-token logits (B, V) + updated state."""
+    dt = cfg.adtype
+    if "embeds" in batch_t:
+        x = batch_t["embeds"].astype(dt)
+        if x.ndim == 2:
+            x = x[:, None]
+    else:
+        tok = batch_t["tokens"]
+        if tok.ndim == 1:
+            tok = tok[:, None]
+        x = embed(params["embed"], tok, dt)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, dt)
+    x = shard(x, "batch", None, "act_embed")
+
+    prefix, pat, n_blocks, rem = _layer_groups(cfg)
+    new_state: Dict[str, Any] = {}
+
+    if prefix:
+        caches = []
+        for lp, k, c in zip(params["prefix"], prefix, state["prefix"]):
+            x, nc = _decode_layer(lp, x, c, cfg, k)
+            caches.append(nc)
+        new_state["prefix"] = caches
+
+    if n_blocks:
+        def body(x, scanned):
+            lp, cache_blk = scanned
+            new_blk = {}
+            for i, k in enumerate(pat):
+                key = f"{i}_{k}"
+                x, nc = _decode_layer(lp[key], x, cache_blk[key], cfg, k)
+                new_blk[key] = nc
+            return x, new_blk
+
+        x, new_stack = jax.lax.scan(body, x, (params["stack"], state["stack"]))
+        new_state["stack"] = new_stack
+
+    if rem:
+        caches = []
+        for lp, k, c in zip(params["rem"], rem, state["rem"]):
+            x, nc = _decode_layer(lp, x, c, cfg, k)
+            caches.append(nc)
+        new_state["rem"] = caches
+
+    x = rmsnorm(params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = unembed(params["embed"], x)
+    else:
+        logits = dense(params["head"], x)
+    logits = shard(logits, "batch", None, "act_vocab")
+    logits = _mask_pad_logits(logits, cfg)
+    if cfg.logit_cap > 0:
+        logits = cfg.logit_cap * jnp.tanh(logits / cfg.logit_cap)
+    return logits[:, 0], new_state

@@ -1,0 +1,154 @@
+"""Mixture-of-Experts with sort-based capacity dispatch and expert
+parallelism.
+
+Design (DESIGN.md §Risks):
+
+* Dispatch is SORT-based (argsort by expert id + rank-within-expert via
+  cummax), not GShard one-hot einsum — the one-hot dispatch tensor is
+  O(T * E * C) and explodes at 160-expert / 65k-token shards.
+* Expert parallelism runs under ``jax.shard_map`` over the "model" mesh
+  axis: activations arrive batch-sharded (replicated across "model"), each
+  model shard owns E/M experts, computes its local experts' contributions
+  for ALL its tokens, and a single psum over "model" combines — the same
+  collective cost as a tensor-parallel FFN all-reduce, with zero all_to_all.
+* Experts are padded to a multiple of the model-axis size (router logits of
+  padding experts are masked to -inf), e.g. granite's 40 -> 48.
+* Per-expert capacity C = ceil(cf * T * k / E) bounds the buffer; overflow
+  tokens fall into a discard slot (standard capacity-drop semantics).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import shard
+from .common import act_fn
+from .param import P
+
+
+class MoEConfig(NamedTuple):
+    d_model: int
+    n_experts: int          # real experts
+    n_experts_pad: int      # padded for mesh divisibility
+    top_k: int
+    d_ff: int               # per-expert hidden
+    act: str = "silu"
+    capacity_factor: float = 1.25
+    router_dtype: str = "float32"
+
+
+def moe_def(cfg: MoEConfig) -> dict:
+    e, d, f = cfg.n_experts_pad, cfg.d_model, cfg.d_ff
+    return {
+        "router": P((d, e), ("embed", None)),
+        "gate": P((e, d, f), ("experts", "embed", "ff")),
+        "up": P((e, d, f), ("experts", "embed", "ff")),
+        "down": P((e, f, d), ("experts", "ff", "embed")),
+    }
+
+
+def _capacity(tokens: int, cfg: MoEConfig) -> int:
+    cap = math.ceil(cfg.capacity_factor * tokens * cfg.top_k
+                    / cfg.n_experts)
+    return max(cfg.top_k, -(-cap // 8) * 8)   # round up to 8
+
+
+def _moe_local(x, router_w, w_gate, w_up, w_down, *, cfg: MoEConfig,
+               e_start, capacity: int):
+    """Local-shard MoE: x (T, D); w_* hold E_loc experts starting at e_start.
+
+    Returns this shard's partial output (T, D) — caller psums over "model".
+    """
+    t, d = x.shape
+    e_loc = w_gate.shape[0]
+    k = cfg.top_k
+
+    # --- routing (fp32 for numerics) ---
+    logits = x.astype(jnp.float32) @ router_w.astype(jnp.float32)  # (T, E_pad)
+    if cfg.n_experts_pad > cfg.n_experts:
+        pad_mask = jnp.arange(cfg.n_experts_pad) >= cfg.n_experts
+        logits = jnp.where(pad_mask[None, :], -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, k)                         # (T, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # --- sort-based dispatch ---
+    flat_e = top_e.reshape(-1)                                     # (T*k,)
+    order = jnp.argsort(flat_e, stable=True)
+    se = flat_e[order]
+    st = order // k                                                # token ids
+    sw = top_w.reshape(-1)[order]
+    idx = jnp.arange(t * k)
+    starts = jnp.where(jnp.concatenate([jnp.array([True]),
+                                        se[1:] != se[:-1]]), idx, 0)
+    rank = idx - jax.lax.cummax(starts)                            # pos in expert
+
+    local = (se >= e_start) & (se < e_start + e_loc) & (rank < capacity)
+    slot = jnp.where(local, (se - e_start) * capacity + rank,
+                     e_loc * capacity)                             # discard slot
+    gathered = x[st] * local[:, None].astype(x.dtype)
+    buf = jnp.zeros((e_loc * capacity + 1, d), x.dtype).at[slot].add(gathered)
+    buf = buf[:-1].reshape(e_loc, capacity, d)
+
+    # --- expert FFNs (grouped GEMMs) ---
+    act = act_fn(cfg.act)
+    hg = jnp.einsum("ecd,edf->ecf", buf, w_gate.astype(x.dtype))
+    hu = jnp.einsum("ecd,edf->ecf", buf, w_up.astype(x.dtype))
+    h = act(hg) * hu
+    y = jnp.einsum("ecf,efd->ecd", h, w_down.astype(x.dtype))
+
+    # --- combine ---
+    yflat = jnp.concatenate(
+        [y.reshape(e_loc * capacity, d), jnp.zeros((1, d), y.dtype)], axis=0)
+    contrib = yflat[slot] * (sw * local).astype(y.dtype)[:, None]
+    out = jnp.zeros((t, d), x.dtype).at[st].add(contrib)
+    return out
+
+
+def moe_apply(params: dict, x: jax.Array, cfg: MoEConfig) -> jax.Array:
+    """x: (B, S, D) -> (B, S, D).  Expert-parallel over the "model" axis when
+    a mesh context is active; plain local execution otherwise."""
+    b, s, d = x.shape
+    xf = x.reshape(b * s, d)
+
+    mesh = None
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        if am is not None and not am.empty and "model" in am.shape:
+            mesh = am
+    except Exception:
+        mesh = None
+
+    if mesh is None or mesh.shape["model"] == 1:
+        cap = _capacity(xf.shape[0], cfg)
+        out = _moe_local(xf, params["router"], params["gate"], params["up"],
+                         params["down"], cfg=cfg, e_start=0, capacity=cap)
+        return out.reshape(b, s, d)
+
+    m = mesh.shape["model"]
+    assert cfg.n_experts_pad % m == 0, (cfg.n_experts_pad, m)
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    t_local = xf.shape[0] // math.prod(mesh.shape[a] for a in dp_axes)
+    cap = _capacity(t_local, cfg)
+
+    from jax.sharding import PartitionSpec as PS
+
+    def shard_fn(xl, rw, wg, wu, wd):
+        e_start = jax.lax.axis_index("model") * (cfg.n_experts_pad // m)
+        out = _moe_local(xl, rw, wg, wu, wd, cfg=cfg,
+                         e_start=e_start, capacity=cap)
+        return jax.lax.psum(out, "model")
+
+    out = jax.shard_map(
+        shard_fn,
+        mesh=mesh,
+        in_specs=(PS(dp_axes, None), PS(None, None),
+                  PS("model", None, None), PS("model", None, None),
+                  PS("model", None, None)),
+        out_specs=PS(dp_axes, None),
+    )(xf, params["router"], params["gate"], params["up"], params["down"])
+    return out.reshape(b, s, d)

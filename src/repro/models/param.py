@@ -1,0 +1,107 @@
+"""Parameter-definition trees.
+
+Models declare their parameters once as a tree of ``P`` leaves (shape +
+logical sharding axes + initializer).  From that single declaration we derive:
+
+* ``materialize``    — real initialized params (training / smoke tests),
+* ``abstract``       — ShapeDtypeStructs (the multi-pod dry-run never
+                       allocates),
+* ``logical_axes``   — the parallel tree of logical-axis tuples consumed by
+                       ``repro.sharding`` to build NamedShardings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class P:
+    """One parameter declaration.
+
+    shape : tensor shape.
+    axes  : logical axis names, one per dim (None = never sharded).
+    init  : "normal" (trunc-normal fan-in scaled), "zeros", "ones",
+            "embed" (scaled by 1), or "constant".
+    scale : overrides the init scale.
+    """
+
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"
+    scale: Optional[float] = None
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+ParamTree = Any  # nested dict of P (defs) or jax.Array (materialized)
+
+
+def _fan_in(shape: Tuple[int, ...]) -> int:
+    # convention: the LAST axis is the output features axis
+    return int(np.prod(shape[:-1])) if len(shape) > 1 else shape[0]
+
+
+def _init_leaf(p: P, key: jax.Array, param_dtype) -> jax.Array:
+    dtype = param_dtype or p.dtype
+    if p.init == "zeros":
+        return jnp.zeros(p.shape, dtype)
+    if p.init == "ones":
+        return jnp.ones(p.shape, dtype)
+    if p.init == "constant":
+        return jnp.full(p.shape, p.scale or 0.0, dtype)
+    if p.init == "embed":
+        scale = p.scale if p.scale is not None else 1.0
+        return (jax.random.normal(key, p.shape, jnp.float32) * scale).astype(dtype)
+    # trunc-normal, fan-in scaled (LeCun)
+    scale = p.scale if p.scale is not None else 1.0
+    std = scale / np.sqrt(max(1, _fan_in(p.shape)))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, p.shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def _is_def(x) -> bool:
+    return isinstance(x, P)
+
+
+def materialize(tree: ParamTree, key: jax.Array, param_dtype=None) -> ParamTree:
+    """Initialize every leaf with an independent fold of ``key``."""
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=_is_def)
+    keys = jax.random.split(key, len(leaves))
+    out = [_init_leaf(p, k, param_dtype) for p, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract(tree: ParamTree, param_dtype=None) -> ParamTree:
+    """ShapeDtypeStructs for the dry-run — no device allocation."""
+    return jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, param_dtype or p.dtype),
+        tree, is_leaf=_is_def,
+    )
+
+
+def logical_axes(tree: ParamTree) -> ParamTree:
+    """Parallel tree of logical-axis tuples."""
+    return jax.tree.map(lambda p: p.axes, tree, is_leaf=_is_def)
+
+
+def count_params(tree: ParamTree) -> int:
+    leaves = jax.tree.leaves(tree, is_leaf=_is_def)
+    return sum(int(np.prod(p.shape)) for p in leaves)
+
+
+def stack_defs(tree: ParamTree, n: int, axis_name: Optional[str] = "layer") -> ParamTree:
+    """Prepend a scan ('layer') dimension of size ``n`` to every leaf —
+    the parameter layout for scan-over-layers stacks."""
+    return jax.tree.map(
+        lambda p: P((n,) + p.shape, (axis_name,) + p.axes,
+                    init=p.init, scale=p.scale, dtype=p.dtype),
+        tree, is_leaf=_is_def,
+    )

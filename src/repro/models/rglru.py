@@ -1,0 +1,124 @@
+"""Griffin / RecurrentGemma recurrent block (arXiv:2402.19427).
+
+Block:  x -> { gate branch: GeLU(W_y x) }
+             { rec  branch: RG-LRU(ConvDK-conv1d(W_x x)) }
+        out = W_o(gate * rec)
+
+RG-LRU:  r_t = sigmoid(W_a u_t + b_a)          (recurrence gate)
+         i_t = sigmoid(W_i u_t + b_i)          (input gate)
+         log a_t = -c * softplus(Lambda) * r_t  (c = 8)
+         h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+The sequence recurrence runs as a parallel associative scan (O(log L)
+depth); decode is the O(1) single-step update — this is why the
+``long_500k`` cell is linear for recurrentgemma.  The temporal conv (width
+4) is the paper-technique hot-spot (ConvDK kernel / shift-add path).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.ops import convdk_causal_conv1d
+from ..kernels.ref import causal_conv1d_ref, causal_conv1d_update_ref
+from ..sharding import shard
+from .common import dense, dense_def
+from .param import P
+
+_C = 8.0
+_EPS = 1e-6
+
+
+class RGLRUConfig(NamedTuple):
+    d_model: int
+    width: int            # lru width
+    d_conv: int = 4
+    use_kernel: bool = False
+
+
+def rglru_def(cfg: RGLRUConfig) -> dict:
+    d, w = cfg.d_model, cfg.width
+    return {
+        "in_x": dense_def(d, w, ("embed", "dinner")),
+        "in_y": dense_def(d, w, ("embed", "dinner")),
+        "conv": {"w": P((cfg.d_conv, w), ("dconv", "dinner")),
+                 "b": P((w,), ("dinner",), init="zeros")},
+        "gate_a": dense_def(w, w, ("dinner", None)),
+        "gate_i": dense_def(w, w, ("dinner", None)),
+        "lam": P((w,), (None,), init="constant", scale=1.1),
+        "out": dense_def(w, d, ("dinner", "embed")),
+    }
+
+
+def _gates(params, u):
+    r = jax.nn.sigmoid(dense(params["gate_a"], u).astype(jnp.float32))
+    i = jax.nn.sigmoid(dense(params["gate_i"], u).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), _EPS))
+    return a, beta * i * u.astype(jnp.float32)
+
+
+def rglru_scan(params, u: jax.Array,
+               init_h: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """u: (B, L, W) -> (h (B,L,W), final h (B,W)) via associative scan."""
+    a, b = _gates(params, u)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a2 * a1, a2 * b1 + b2
+
+    if init_h is not None:
+        b = b.at[:, 0].add(a[:, 0] * init_h.astype(jnp.float32))
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(u.dtype), h[:, -1]
+
+
+def rglru_block(params: dict, x: jax.Array, cfg: RGLRUConfig) -> jax.Array:
+    """Full recurrent block (training / prefill).  x: (B, L, D)."""
+    gate = jax.nn.gelu(dense(params["in_y"], x), approximate=True)
+    u = dense(params["in_x"], x)
+    if cfg.use_kernel:
+        u = convdk_causal_conv1d(u, params["conv"]["w"], params["conv"]["b"])
+    else:
+        u = causal_conv1d_ref(u, params["conv"]["w"].astype(u.dtype),
+                              params["conv"]["b"].astype(u.dtype))
+    u = shard(u, "batch", None, "act_ff")
+    h, _ = rglru_scan(params, u)
+    return dense(params["out"], gate * h)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+class RGLRUState(NamedTuple):
+    conv: jax.Array      # (B, d_conv-1, W)
+    h: jax.Array         # (B, W) float32
+
+
+def init_rglru_state(batch: int, cfg: RGLRUConfig,
+                     dtype=jnp.bfloat16) -> RGLRUState:
+    return RGLRUState(
+        conv=jnp.zeros((batch, cfg.d_conv - 1, cfg.width), dtype),
+        h=jnp.zeros((batch, cfg.width), jnp.float32),
+    )
+
+
+def rglru_decode_step(
+    params: dict, x_t: jax.Array, state: RGLRUState, cfg: RGLRUConfig
+) -> Tuple[jax.Array, RGLRUState]:
+    """One token.  x_t: (B, 1, D).  O(1) state update."""
+    gate = jax.nn.gelu(dense(params["in_y"], x_t)[:, 0], approximate=True)
+    u = dense(params["in_x"], x_t)[:, 0]
+    u, new_conv = causal_conv1d_update_ref(
+        state.conv, u, params["conv"]["w"].astype(u.dtype),
+        params["conv"]["b"].astype(u.dtype))
+    a, b = _gates(params, u[:, None])
+    h = a[:, 0] * state.h + b[:, 0]
+    y = dense(params["out"], (gate * h.astype(gate.dtype))[:, None])
+    return y, RGLRUState(conv=new_conv, h=h)

@@ -1,0 +1,253 @@
+"""Mamba-2 SSD (state-space duality) block — chunked algorithm
+(arXiv:2405.21060, Sec. 6).
+
+The sequence is split into chunks of ``Q``; intra-chunk terms are dense
+(quadratic within the chunk, MXU-friendly), inter-chunk terms flow through a
+parallel associative scan over the (decay, state) pairs — O(log n_chunks)
+depth, constant state (B, H, P, N).  Decode is a single-token recurrence on
+that same state, which is what makes the ``long_500k`` cell linear-time.
+
+The depthwise causal conv stem is the paper-technique hot-spot: it runs the
+ConvDK Pallas kernel when ``use_kernel`` (CPU tests use interpret mode; the
+XLA shift-add path is used in dry-run lowering for clean HLO).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.ops import convdk_causal_conv1d
+from ..kernels.ref import causal_conv1d_ref, causal_conv1d_update_ref
+from ..sharding import shard
+from .common import dense, dense_def, rmsnorm, rmsnorm_def
+from .param import P
+
+
+class SSDConfig(NamedTuple):
+    d_model: int
+    d_inner: int
+    n_heads: int          # d_inner // head_dim
+    head_dim: int
+    d_state: int
+    n_groups: int = 1
+    d_conv: int = 4
+    chunk: int = 256
+    use_kernel: bool = False
+
+
+def ssd_def(cfg: SSDConfig) -> dict:
+    d, di, gn = cfg.d_model, cfg.d_inner, cfg.n_groups * cfg.d_state
+    h = cfg.n_heads
+    # z/x/B/C/dt are SEPARATE projections: a fused (d, 2di+2gn+h) matmul
+    # shards its output as one axis whose split boundaries straddle the
+    # model shards, costing a collective-permute chain per layer (§Perf,
+    # mamba2 iteration 3).  Separate outputs shard cleanly; XLA still fuses
+    # the shared input reads.
+    return {
+        "in_z": dense_def(d, di, ("embed", "dinner")),
+        "in_x": dense_def(d, di, ("embed", "dinner")),
+        "in_b": dense_def(d, gn, ("embed", None)),
+        "in_c": dense_def(d, gn, ("embed", None)),
+        "in_dt": dense_def(d, h, ("embed", None)),
+        "conv_x": {"w": P((cfg.d_conv, di), ("dconv", "dinner")),
+                   "b": P((di,), ("dinner",), init="zeros")},
+        "conv_b": {"w": P((cfg.d_conv, gn), ("dconv", None)),
+                   "b": P((gn,), (None,), init="zeros")},
+        "conv_c": {"w": P((cfg.d_conv, gn), ("dconv", None)),
+                   "b": P((gn,), (None,), init="zeros")},
+        "a_log": P((h,), (None,), init="constant", scale=0.0),
+        "d_skip": P((h,), (None,), init="ones"),
+        "dt_bias": P((h,), (None,), init="zeros"),
+        "norm": rmsnorm_def(di),
+        "out_proj": dense_def(di, d, ("dinner", "embed")),
+    }
+
+
+def _conv(p, x, use_kernel: bool):
+    if use_kernel:
+        return convdk_causal_conv1d(x, p["w"], p["b"], activation="silu")
+    return causal_conv1d_ref(x, p["w"].astype(x.dtype),
+                             p["b"].astype(x.dtype), activation="silu")
+
+
+def ssd_chunked(
+    x: jax.Array,       # (B, L, H, P)
+    dt: jax.Array,      # (B, L, H)  — post-softplus
+    a: jax.Array,       # (H,)       — negative decay rates
+    bm: jax.Array,      # (B, L, G, N)
+    cm: jax.Array,      # (B, L, G, N)
+    chunk: int,
+    init_state: Optional[jax.Array] = None,   # (B, H, P, N)
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B,L,H,P), final_state (B,H,P,N))."""
+    b, l, h, p = x.shape
+    g, n = bm.shape[2], bm.shape[3]
+    q = min(chunk, l)
+    pad = (-l) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bm = jnp.pad(bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cm = jnp.pad(cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = x.shape[1] // q
+    hg = h // g  # heads per group
+
+    xc = x.reshape(b, nc, q, h, p).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, q, h).astype(jnp.float32)
+    bc = bm.reshape(b, nc, q, g, n).astype(jnp.float32)
+    cc = cm.reshape(b, nc, q, g, n).astype(jnp.float32)
+
+    da = dtc * a.astype(jnp.float32)                  # (B,nc,Q,H) <= 0
+    cs = jnp.cumsum(da, axis=2)                       # decay log to t (incl.)
+    seg = jnp.exp(cs[:, :, -1])                       # (B,nc,H) chunk decay
+
+    # Heads are grouped as (G, HG) so B/C (per-group) are consumed by the
+    # einsums WITHOUT jnp.repeat onto the model-sharded head axis — the
+    # repeat forced a collective-permute of (B,L,H,N) every layer (§Perf,
+    # mamba2 iteration 2).
+    xg = xc.reshape(b, nc, q, g, hg, p)
+    dtg = dtc.reshape(b, nc, q, g, hg)
+    csg = cs.reshape(b, nc, q, g, hg)
+
+    # ---- intra-chunk (dense, MXU) ----
+    cb = jnp.einsum("bcqgn,bctgn->bcgqt", cc, bc)     # (B,nc,G,Q_q,Q_t)
+    cst = csg.transpose(0, 1, 3, 4, 2)                # (B,nc,G,HG,Q)
+    decay = jnp.exp(cst[..., :, None] - cst[..., None, :])
+    # decay[..., q, t] = exp(cs[q] - cs[t]); causal within the chunk
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    decay = jnp.where(tri[None, None, None, None], decay, 0.0)
+    w_qt = decay * dtg.transpose(0, 1, 3, 4, 2)[..., None, :]
+    y_intra = jnp.einsum("bcgqt,bcghqt,bctghp->bcqghp", cb, w_qt, xg)
+
+    # ---- chunk-local states ----
+    # state_c = sum_t exp(cs_last - cs[t]) * dt[t] * B[t] (x) x[t]
+    sdec = jnp.exp(cs[:, :, -1:, :] - cs)             # (B,nc,Q,H)
+    sdt = (sdec * dtc).reshape(b, nc, q, g, hg)
+    state = jnp.einsum("bcqgh,bcqgn,bcqghp->bcghpn", sdt, bc, xg)
+    state = state.reshape(b, nc, h, p, n)
+
+    # ---- inter-chunk associative scan over (decay, state) pairs ----
+    def combine(e1, e2):
+        a1, s1 = e1
+        a2, s2 = e2
+        return a2 * a1, a2[..., None, None] * s1 + s2
+
+    if init_state is not None:
+        init32 = init_state.astype(jnp.float32)
+        state = state.at[:, 0].add(seg[:, 0][..., None, None] * init32)
+    _, sc_s = jax.lax.associative_scan(combine, (seg, state), axis=1)
+    # S_prev for chunk c = accumulated state through chunk c-1
+    first = (jnp.zeros_like(sc_s[:, :1]) if init_state is None
+             else init32[:, None])
+    s_prev = jnp.concatenate([first, sc_s[:, :-1]], axis=1)  # (B,nc,H,P,N)
+
+    # ---- inter-chunk output ----
+    qdec = jnp.exp(csg)                                # (B,nc,Q,G,HG)
+    s_prev_g = s_prev.reshape(b, nc, g, hg, p, n)
+    y_inter = jnp.einsum("bcqgn,bcqgh,bcghpn->bcqghp", cc, qdec, s_prev_g)
+
+    y = (y_intra + y_inter).reshape(b, nc * q, h, p)[:, :l]
+    return y.astype(x.dtype), sc_s[:, -1].astype(x.dtype)
+
+
+def ssd_block(
+    params: dict, x: jax.Array, cfg: SSDConfig
+) -> jax.Array:
+    """Full Mamba-2 block (training / prefill).  x: (B, L, D)."""
+    b, l, d = x.shape
+    di, h, p = cfg.d_inner, cfg.n_heads, cfg.head_dim
+    gn = cfg.n_groups * cfg.d_state
+
+    z = dense(params["in_z"], x)
+    xr = dense(params["in_x"], x)
+    br = dense(params["in_b"], x)
+    cr = dense(params["in_c"], x)
+    dt = dense(params["in_dt"], x)
+    xr = _conv(params["conv_x"], xr, cfg.use_kernel)
+    br = _conv(params["conv_b"], br, cfg.use_kernel)
+    cr = _conv(params["conv_c"], cr, cfg.use_kernel)
+    xr = shard(xr, "batch", None, "act_ff")
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    xh = xr.reshape(b, l, h, p)
+    bm = br.reshape(b, l, cfg.n_groups, cfg.d_state)
+    cm = cr.reshape(b, l, cfg.n_groups, cfg.d_state)
+
+    y, _ = ssd_chunked(xh, dt, a, bm, cm, cfg.chunk)
+    y = y + params["d_skip"].astype(y.dtype)[None, None, :, None] * xh
+    y = y.reshape(b, l, di)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z))
+    return dense(params["out_proj"], y)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+class SSDState(NamedTuple):
+    conv_x: jax.Array    # (B, d_conv-1, d_inner)
+    conv_b: jax.Array    # (B, d_conv-1, G*N)
+    conv_c: jax.Array    # (B, d_conv-1, G*N)
+    ssm: jax.Array       # (B, H, P, N)
+
+
+def init_ssd_state(batch: int, cfg: SSDConfig, dtype=jnp.bfloat16) -> SSDState:
+    gn = cfg.n_groups * cfg.d_state
+    return SSDState(
+        conv_x=jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner), dtype),
+        conv_b=jnp.zeros((batch, cfg.d_conv - 1, gn), dtype),
+        conv_c=jnp.zeros((batch, cfg.d_conv - 1, gn), dtype),
+        ssm=jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.d_state),
+                      jnp.float32),
+    )
+
+
+def ssd_decode_step(
+    params: dict, x_t: jax.Array, state: SSDState, cfg: SSDConfig
+) -> Tuple[jax.Array, SSDState]:
+    """One token.  x_t: (B, 1, D) -> (y (B,1,D), new state).  O(1) in L."""
+    b = x_t.shape[0]
+    di, h, p = cfg.d_inner, cfg.n_heads, cfg.head_dim
+    gn = cfg.n_groups * cfg.d_state
+
+    z = dense(params["in_z"], x_t)[:, 0]
+    xr = dense(params["in_x"], x_t)[:, 0]
+    br = dense(params["in_b"], x_t)[:, 0]
+    cr = dense(params["in_c"], x_t)[:, 0]
+    dt = dense(params["in_dt"], x_t)[:, 0]
+
+    def step_conv(pr, st, u):
+        y, ns = causal_conv1d_update_ref(
+            st, u, pr["w"].astype(u.dtype), pr["b"].astype(u.dtype),
+            activation="silu")
+        return y, ns
+
+    xr, ncx = step_conv(params["conv_x"], state.conv_x, xr)
+    br, ncb = step_conv(params["conv_b"], state.conv_b, br)
+    cr, ncc = step_conv(params["conv_c"], state.conv_c, cr)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))  # (B,H)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    xh = xr.reshape(b, h, p).astype(jnp.float32)
+    bm = br.reshape(b, cfg.n_groups, cfg.d_state).astype(jnp.float32)
+    cm = cr.reshape(b, cfg.n_groups, cfg.d_state).astype(jnp.float32)
+    hg = h // cfg.n_groups
+    bmh = jnp.repeat(bm, hg, axis=1)                   # (B,H,N)
+    cmh = jnp.repeat(cm, hg, axis=1)
+
+    decay = jnp.exp(dt * a)                            # (B,H)
+    new_ssm = (decay[..., None, None] * state.ssm
+               + (dt[..., None] * xh)[..., None] * bmh[:, :, None, :])
+    y = jnp.einsum("bhpn,bhn->bhp", new_ssm, cmh)
+    y = y + params["d_skip"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(b, di)
+    y = rmsnorm(params["norm"], (y * jax.nn.silu(z.astype(jnp.float32))
+                                 ).astype(x_t.dtype))
+    out = dense(params["out_proj"], y[:, None])
+    return out, SSDState(conv_x=ncx, conv_b=ncb, conv_c=ncc, ssm=new_ssm)

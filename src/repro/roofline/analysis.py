@@ -1,0 +1,141 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh) cell, all in seconds-per-step on the
+TARGET hardware (TPU v5e):
+
+    compute    = HLO_FLOPs_per_device / peak_FLOPs        (197 TFLOP/s bf16)
+    memory     = HLO_bytes_per_device / HBM_bw            (819 GB/s)
+    collective = collective_bytes_per_device / link_bw    (~50 GB/s/link ICI)
+
+``cost_analysis()`` provides per-device FLOPs and bytes; collective bytes
+are NOT in cost_analysis, so ``collective_bytes`` parses the post-SPMD HLO
+text and sums the output-shape bytes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute.  The dominant term is the
+bottleneck the §Perf loop iterates on; MODEL_FLOPS / HLO_FLOPs measures how
+much compiled compute is "useful" (catches remat/redundancy waste).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+# TPU v5e hardware constants (assignment-specified)
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW_PER_LINK = 50e9            # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g. "f32[256,1024]{1,0}" or "bf16[8,128]"
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum output-shape bytes per collective kind from post-SPMD HLO text."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        for kind in _COLLECTIVES:
+            # "%x = f32[..]{..} all-reduce(" — kind appears as the op name
+            marker = f" {kind}("
+            if marker in stripped or stripped.startswith(f"{kind}("):
+                lhs = stripped.split(marker)[0]
+                # shape expression sits between '=' and the op name
+                if "=" in lhs:
+                    lhs = lhs.split("=", 1)[1]
+                out[kind] += _shape_bytes(lhs)
+                break
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    n_devices: int
+    ici_links: int = 2          # 2D torus: >=2 links usable per sharded axis
+    model_flops: Optional[float] = None   # 6*N*D (or 6*N_active*D)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes_per_device / (ICI_BW_PER_LINK
+                                                   * self.ici_links)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_fraction(self) -> Optional[float]:
+        if not self.model_flops:
+            return None
+        total = self.flops_per_device * self.n_devices
+        return self.model_flops / total if total else None
+
+    @property
+    def roofline_fraction(self) -> float:
+        """How close the dominant term pins us to the ridge: the fraction of
+        the bound time that is useful compute."""
+        if self.bound_time == 0:
+            return 0.0
+        return self.t_compute / self.bound_time
+
+    def to_dict(self) -> Dict:
+        return {
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "n_devices": self.n_devices,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops_estimate(n_params_active: int, tokens: int,
+                         kind: str = "train") -> float:
+    """MODEL_FLOPS = 6*N*D for training, 2*N*D for inference forward."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_params_active * tokens

@@ -1,0 +1,100 @@
+"""Batched serving engine: prefill + decode with per-family caches.
+
+The engine jits one prefill function and one decode function per model and
+runs greedy/sampled generation over a batch of prompts.  Cache layouts are
+family-native (dense KV, MLA latent, sliding-window ring, SSM/LRU constant
+state) — chosen by ``init_decode_state``.
+
+BIG/LITTLE-inspired admission (the paper's scheduler idea lifted to
+serving, DESIGN.md §Pillar C): requests are bucketed by prompt length and
+a bucket is launched either as one BIG batch (few long prompts — prefill
+dominated) or as packed LITTLE batches (many short prompts share one decode
+batch so the state memory stays fully utilized), mirroring how the CIM
+scheduler packs small channels into one TRF.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.model import (
+    ModelConfig, decode_step, forward, init_decode_state,
+)
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_new_tokens: int = 32
+    greedy: bool = True
+    temperature: float = 1.0
+    # LITTLE-packing: prompts shorter than this share a packed batch
+    little_threshold: int = 256
+    eos_id: Optional[int] = None
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, serve_cfg: ServeConfig = None):
+        self.cfg = cfg
+        self.params = params
+        self.scfg = serve_cfg or ServeConfig()
+        self._prefill = jax.jit(self._prefill_fn)
+        self._step = jax.jit(self._step_fn)
+
+    # -- jitted bodies ------------------------------------------------------
+    def _prefill_fn(self, params, tokens, state):
+        """Run the prompt through decode steps via scan (exactly matches the
+        step-by-step cache semantics for every family)."""
+        def body(st, tok):
+            logits, st = decode_step(params, st, {"tokens": tok}, self.cfg)
+            return st, logits
+
+        state, logits = jax.lax.scan(body, state, tokens.T)
+        return state, logits[-1]
+
+    def _step_fn(self, params, state, tok, rng):
+        logits, state = decode_step(params, state, {"tokens": tok}, self.cfg)
+        if self.scfg.greedy:
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            nxt = jax.random.categorical(
+                rng, logits / self.scfg.temperature).astype(jnp.int32)
+        return state, nxt
+
+    # -- public API ----------------------------------------------------------
+    def generate(self, prompts: np.ndarray, rng: Optional[jax.Array] = None
+                 ) -> np.ndarray:
+        """prompts: (B, S_prompt) int32 -> (B, max_new_tokens) int32."""
+        b, s_prompt = prompts.shape
+        total = s_prompt + self.scfg.max_new_tokens
+        state = init_decode_state(self.cfg, b, total,
+                                  jnp.dtype(self.cfg.dtype))
+        state, last_logits = self._prefill(
+            self.params, jnp.asarray(prompts, jnp.int32), state)
+        tok = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
+        rng = rng if rng is not None else jax.random.key(0)
+
+        outs = [tok]
+        for i in range(self.scfg.max_new_tokens - 1):
+            rng, sub = jax.random.split(rng)
+            state, tok = self._step(self.params, state, tok, sub)
+            outs.append(tok)
+        return np.stack([np.asarray(t) for t in outs], axis=1)
+
+    def schedule(self, requests: List[np.ndarray]) -> List[List[int]]:
+        """BIG/LITTLE admission: group request indices into launch batches."""
+        little, big = [], []
+        for i, r in enumerate(requests):
+            (little if len(r) < self.scfg.little_threshold else big).append(i)
+        batches = []
+        if little:
+            # LITTLE: pack many short prompts into shared batches of 8+
+            for j in range(0, len(little), 8):
+                batches.append(little[j:j + 8])
+        for i in big:
+            batches.append([i])      # BIG: long prompts run alone
+        return batches

@@ -1,0 +1,135 @@
+"""Logical-axis sharding rules -> NamedSharding / PartitionSpec.
+
+One rule table maps logical axis names (used in every ``P`` declaration and
+every activation constraint) to physical mesh axes.  ``spec_for`` drops a
+rule whenever the tensor dim is not divisible by the mesh-axis size (e.g.
+MQA's single KV head can never shard over the 16-way model axis) — the same
+policy GSPMD would need spelled out by hand, centralized here.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+MeshAxes = Union[str, Tuple[str, ...], None]
+
+# logical axis -> mesh axes.  "batch" spreads over pod+data (pure DP across
+# pods, DP/FSDP within a pod); params FSDP-shard on "data" via "embed".
+DEFAULT_RULES: Dict[str, MeshAxes] = {
+    # activations
+    "batch": ("pod", "data"),
+    "seq": None,                # sequence sharding: enabled per-cell (SP)
+    "act_embed": None,
+    "act_heads": "model",
+    "act_ff": "model",
+    "act_experts": "model",
+    "act_vocab": "model",       # logits: never materialize full-vocab rows
+    "seq_model": "model",       # Megatron-SP residual stream (§Perf)
+    # params
+    "embed": "data",            # FSDP axis
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "ff": "model",
+    "experts": "model",
+    "dinner": "model",          # mamba/griffin inner width
+    "layer": None,
+    "lora": None,
+    "dstate": None,
+    "dconv": None,
+    "window": None,
+}
+
+
+def _axis_size(mesh: Mesh, axes: MeshAxes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = 1
+    for a in axes:
+        size *= mesh.shape.get(a, 1)
+    return size
+
+
+def _present(mesh: Mesh, axes: MeshAxes) -> MeshAxes:
+    """Keep only mesh axes that exist in this mesh (pod axis is optional)."""
+    if axes is None:
+        return None
+    if isinstance(axes, str):
+        return axes if axes in mesh.shape else None
+    kept = tuple(a for a in axes if a in mesh.shape)
+    return kept if kept else None
+
+
+def spec_for(
+    logical: Sequence[Optional[str]],
+    shape: Sequence[int],
+    mesh: Mesh,
+    rules: Optional[Dict[str, MeshAxes]] = None,
+) -> PartitionSpec:
+    """PartitionSpec for one tensor, dropping non-divisible rules."""
+    rules = rules or DEFAULT_RULES
+    entries = []
+    used: set = set()
+    for name, dim in zip(logical, shape):
+        axes = _present(mesh, rules.get(name)) if name else None
+        if axes is not None:
+            ax_tuple = (axes,) if isinstance(axes, str) else tuple(axes)
+            # each mesh axis may appear at most once in a spec
+            ax_tuple = tuple(a for a in ax_tuple if a not in used)
+            size = 1
+            for a in ax_tuple:
+                size *= mesh.shape[a]
+            if ax_tuple and size > 1 and dim % size == 0:
+                used.update(ax_tuple)
+                entries.append(ax_tuple if len(ax_tuple) > 1 else ax_tuple[0])
+                continue
+        entries.append(None)
+    return PartitionSpec(*entries)
+
+
+def tree_shardings(
+    axes_tree: Any,
+    shape_tree: Any,
+    mesh: Mesh,
+    rules: Optional[Dict[str, MeshAxes]] = None,
+):
+    """NamedShardings for a whole param tree (axes tree parallel to shapes)."""
+    def one(axes, shaped):
+        return NamedSharding(mesh, spec_for(axes, shaped.shape, mesh, rules))
+    return jax.tree.map(
+        one, axes_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+def shard(x: jax.Array, *logical: Optional[str], rules=None) -> jax.Array:
+    """Activation sharding constraint by logical axes.
+
+    No-op outside a mesh context (CPU unit tests), so model code can call it
+    unconditionally.
+    """
+    mesh = None
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        if am is not None and not am.empty:
+            mesh = am
+    except Exception:
+        mesh = None
+    if mesh is None:
+        return x
+    spec = spec_for(logical, x.shape, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def batch_spec(mesh: Mesh) -> PartitionSpec:
+    axes = _present(mesh, DEFAULT_RULES["batch"])
+    if axes is None:
+        return PartitionSpec()
+    return PartitionSpec(axes)

@@ -1,0 +1,119 @@
+"""Sharded, mesh-agnostic checkpointing with elastic restore.
+
+Format: one directory per step::
+
+    ckpt_dir/step_000123/
+      manifest.json            # leaf index: name -> shape/dtype/file, extras
+      arrays/<leaf-name>.npy   # one file per pytree leaf
+
+Leaves are saved as full (unsharded) host arrays — mesh-AGNOSTIC by
+construction, so a checkpoint written from a (16, 16) mesh restores onto a
+(2, 16, 16) mesh (or a single CPU) unchanged: ``restore`` re-places every
+leaf with the *target* mesh's NamedSharding (elastic scaling).  For
+multi-host deployment the same manifest format extends to per-shard files
+keyed by shard index; the single-controller container exercises the
+full-array path.
+
+Fault-tolerance contract used by the train loop:
+* atomic publish — arrays are written into a tmp dir, renamed at the end;
+  a crash mid-save never corrupts the latest checkpoint;
+* ``latest_step`` scans for the newest complete manifest (restart picks it
+  up after a node failure);
+* SIGTERM triggers an emergency save at the next step boundary (see
+  ``launch/train.py``).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _leaf_names(tree) -> Dict[str, Any]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        out[name] = leaf
+    return out
+
+
+def save(ckpt_dir: str, step: int, tree: Any,
+         extras: Optional[Dict[str, Any]] = None) -> str:
+    """Atomically save a pytree (params / opt state / data state bundle)."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:09d}")
+    tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_save_")
+    arrays_dir = os.path.join(tmp, "arrays")
+    os.makedirs(arrays_dir)
+
+    manifest = {"step": step, "leaves": {}, "extras": extras or {}}
+    for name, leaf in _leaf_names(tree).items():
+        if leaf is None:
+            manifest["leaves"][name] = {"none": True}
+            continue
+        arr = np.asarray(jax.device_get(leaf))
+        fname = name.replace("/", "__") + ".npy"
+        np.save(os.path.join(arrays_dir, fname), arr)
+        manifest["leaves"][name] = {
+            "shape": list(arr.shape), "dtype": str(arr.dtype), "file": fname}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for d in os.listdir(ckpt_dir):
+        if d.startswith("step_") and os.path.exists(
+                os.path.join(ckpt_dir, d, "manifest.json")):
+            steps.append(int(d[5:]))
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like: Any,
+            shardings: Optional[Any] = None) -> Tuple[Any, Dict[str, Any]]:
+    """Restore into the structure of ``like``; re-place onto ``shardings``
+    (a parallel pytree of NamedSharding) when given — the elastic path."""
+    base = os.path.join(ckpt_dir, f"step_{step:09d}")
+    with open(os.path.join(base, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    names = _leaf_names(like)
+    shard_map_ = _leaf_names(shardings) if shardings is not None else {}
+    loaded = {}
+    for name, leaf in names.items():
+        entry = manifest["leaves"].get(name)
+        if entry is None:
+            raise KeyError(f"checkpoint missing leaf {name!r}")
+        if entry.get("none"):
+            loaded[name] = None
+            continue
+        arr = np.load(os.path.join(base, "arrays", entry["file"]))
+        want = tuple(getattr(leaf, "shape", arr.shape))
+        if tuple(arr.shape) != want:
+            raise ValueError(f"{name}: ckpt shape {arr.shape} != {want}")
+        sh = shard_map_.get(name)
+        loaded[name] = (jax.device_put(arr, sh) if sh is not None
+                        else jax.numpy.asarray(arr))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    for path, _ in flat:
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        out.append(loaded[name])
+    tree = jax.tree_util.tree_unflatten(jax.tree.structure(like), out)
+    return tree, manifest["extras"]

@@ -1,0 +1,172 @@
+"""Optimizers: AdamW and Adafactor-style factored second moment, with
+global-norm clipping, cosine LR schedule, and optional int8 gradient
+compression with error feedback.
+
+No optax dependency — pure JAX, pytree-structured states, so optimizer
+state shapes flow through ``jax.eval_shape`` for the dry-run and through the
+sharded checkpointer unchanged (optimizer moments inherit the parameter's
+NamedSharding).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    factored: bool = False        # Adafactor-style V for >=2D params
+    compress_grads: bool = False  # int8 + error feedback
+
+
+def cosine_lr(cfg: OptimConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(1.0, cfg.warmup_steps)
+    frac = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(1.0, cfg.decay_steps - cfg.warmup_steps),
+                    0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    decayed = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos
+    return cfg.peak_lr * jnp.minimum(warm, decayed)
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: Any                 # first moment (pytree)
+    v: Any                 # second moment (pytree; factored tuples when on)
+    err: Any               # compression error-feedback buffers (or None tree)
+
+
+def _v_init(p: jax.Array, factored: bool):
+    if factored and p.ndim >= 2:
+        return (jnp.zeros(p.shape[:-1], jnp.float32),
+                jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32))
+    return jnp.zeros(p.shape, jnp.float32)
+
+
+def _v_update(v, g2, b2: float, factored: bool):
+    if factored and isinstance(v, tuple):
+        vr, vc = v
+        vr = b2 * vr + (1 - b2) * g2.mean(-1)
+        vc = b2 * vc + (1 - b2) * g2.mean(-2)
+        return (vr, vc)
+    return b2 * v + (1 - b2) * g2
+
+
+def _v_rsqrt(v, g: jax.Array, eps: float, factored: bool):
+    if factored and isinstance(v, tuple):
+        vr, vc = v
+        # rank-1 reconstruction: V ~ vr vc^T / mean(vr)
+        denom = jnp.maximum(vr.mean(-1, keepdims=True), 1e-30)
+        vhat = (vr[..., None] * vc[..., None, :]) / denom[..., None]
+        return g * jax.lax.rsqrt(vhat + eps)
+    return g * jax.lax.rsqrt(v + eps)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+# ---------------------------------------------------------------------------
+# int8 gradient compression with error feedback
+# ---------------------------------------------------------------------------
+
+def compress_int8(g: jax.Array, err: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Quantize (g + err) to int8 with a per-tensor scale; returns
+    (q, scale, new_err).  new_err carries the quantization residual forward
+    (error feedback), so the bias vanishes over steps."""
+    g32 = g.astype(jnp.float32) + err
+    scale = jnp.maximum(jnp.abs(g32).max(), 1e-30) / 127.0
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return q, scale, g32 - deq
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+# ---------------------------------------------------------------------------
+# optimizer factory
+# ---------------------------------------------------------------------------
+
+def make_optimizer(cfg: OptimConfig):
+    """Returns (init_fn, update_fn).
+
+    update_fn(grads, state, params) -> (new_params, new_state, metrics)
+    """
+
+    def init_fn(params) -> OptState:
+        m = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        v = jax.tree.map(lambda p: _v_init(p, cfg.factored), params)
+        err = (jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+               if cfg.compress_grads else None)
+        return OptState(step=jnp.zeros((), jnp.int32), m=m, v=v, err=err)
+
+    def update_fn(grads, state: OptState, params):
+        metrics = {}
+        # --- optional int8 compression with error feedback ---
+        if cfg.compress_grads:
+            packed = jax.tree.map(compress_int8, grads, state.err)
+            leaves, treedef = jax.tree.flatten(
+                packed, is_leaf=lambda x: isinstance(x, tuple)
+                and len(x) == 3 and hasattr(x[0], "dtype"))
+            grads = jax.tree.unflatten(
+                treedef, [decompress_int8(q, s) for (q, s, _) in leaves])
+            new_err = jax.tree.unflatten(treedef, [e for (_, _, e) in leaves])
+        else:
+            new_err = None
+
+        # --- clip by global norm ---
+        gnorm = global_norm(grads)
+        metrics["grad_norm"] = gnorm
+        scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+        step = state.step + 1
+        lr = cosine_lr(cfg, step)
+        metrics["lr"] = lr
+        bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+        bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            m_new = cfg.b1 * m + (1 - cfg.b1) * g
+            v_new = _v_update(v, jnp.square(g), cfg.b2, cfg.factored)
+            mh = m_new / bc1
+            if cfg.factored and isinstance(v_new, tuple):
+                vh = (v_new[0] / bc2, v_new[1] / bc2)
+            else:
+                vh = v_new / bc2
+            delta = _v_rsqrt(vh, mh, cfg.eps, cfg.factored)
+            p_new = (p.astype(jnp.float32)
+                     - lr * (delta + cfg.weight_decay * p.astype(jnp.float32)))
+            return p_new.astype(p.dtype), m_new, v_new
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state.m)
+        flat_v = jax.tree.flatten(
+            state.v, is_leaf=lambda x: isinstance(x, tuple))[0]
+        out = [upd(p, g, m, v)
+               for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+        new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+        new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+        return new_params, OptState(step=step, m=new_m, v=new_v,
+                                    err=new_err), metrics
+
+    return init_fn, update_fn

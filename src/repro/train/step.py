@@ -1,0 +1,90 @@
+"""Train / serve step builders — the functions the launcher jits and the
+dry-run lowers.
+
+``make_train_step`` closes over the model config and optimizer; supports
+microbatch gradient accumulation (a ``lax.scan`` over microbatches, grads
+accumulated in fp32) so the global batch never has to fit activations at
+once.  ``make_serve_step`` is the single-token decode step (greedy or
+sampled) the ``decode_*``/``long_*`` cells lower.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.common import softmax_cross_entropy
+from ..models.model import ModelConfig, decode_step, forward
+from .optim import OptimConfig, make_optimizer
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optim: OptimConfig = OptimConfig()
+    microbatches: int = 1
+
+
+def compute_loss(params, batch: Dict[str, jax.Array], cfg: ModelConfig):
+    logits = forward(params, batch, cfg)
+    labels = batch["labels"]
+    if labels.shape[1] == logits.shape[1]:
+        # next-token shift for LM families; encoder predicts in place
+        if cfg.family == "encoder":
+            return softmax_cross_entropy(logits, labels)
+        return softmax_cross_entropy(logits[:, :-1], labels[:, 1:])
+    # vlm with text-only labels: image positions carry no loss
+    n_img = logits.shape[1] - labels.shape[1]
+    logits = logits[:, n_img:]
+    return softmax_cross_entropy(logits[:, :-1], labels[:, 1:])
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig = TrainConfig()):
+    init_opt, update = make_optimizer(tcfg.optim)
+    n_micro = tcfg.microbatches
+
+    def train_step(params, opt_state, batch):
+        if n_micro <= 1:
+            loss, grads = jax.value_and_grad(compute_loss)(params, batch, cfg)
+        else:
+            def micro(i, carry):
+                acc, loss_acc = carry
+                mb = jax.tree.map(
+                    lambda x: jax.lax.dynamic_slice_in_dim(
+                        x, i * (x.shape[0] // n_micro),
+                        x.shape[0] // n_micro, axis=0),
+                    batch)
+                l, g = jax.value_and_grad(compute_loss)(params, mb, cfg)
+                acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32) / n_micro, acc, g)
+                return acc, loss_acc + l / n_micro
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, loss = jax.lax.fori_loop(
+                0, n_micro, lambda i, c: micro(i, c), (zeros, 0.0))
+        new_params, new_opt, metrics = update(grads, opt_state, params)
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    return init_opt, train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        logits = forward(params, batch, cfg)
+        return jnp.argmax(logits[:, -1], axis=-1)
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, greedy: bool = True):
+    def serve_step(params, state, tokens, rng: Optional[jax.Array] = None):
+        logits, new_state = decode_step(params, state, {"tokens": tokens}, cfg)
+        if greedy or rng is None:
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            nxt = jax.random.categorical(rng, logits).astype(jnp.int32)
+        return nxt, new_state
+    return serve_step

@@ -1,0 +1,118 @@
+"""ConvDK executors must equal strided-convolution oracles exactly.
+
+The CIM dataflow computes the SAME arithmetic as a plain depthwise conv,
+just in a different order (duplicated kernels + shifted strip reads), so on
+float32 the results must match to machine-epsilon-level tolerance.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.convdk import (
+    convdk_1d,
+    convdk_2d_strip,
+    dwconv2d_convdk,
+    dwconv2d_oracle,
+)
+from repro.core.schedule import make_schedule
+
+PAPER_KS = [(3, 1), (3, 2), (5, 1), (5, 2)]
+
+
+def _conv1d_oracle(kernel, ia, stride):
+    k = kernel.shape[0]
+    out_len = (ia.shape[0] - k) // stride + 1
+    idx = np.arange(out_len)[:, None] * stride + np.arange(k)[None, :]
+    return (ia[idx] * kernel[None, :]).sum(-1)
+
+
+@pytest.mark.parametrize("k,s", PAPER_KS)
+@pytest.mark.parametrize("N", [1, 2, 5, 19])
+def test_convdk_1d_matches_oracle(k, s, N):
+    sched = make_schedule(k, s, N)
+    rng = np.random.default_rng(42 + k * 10 + s + N)
+    kernel = jnp.asarray(rng.normal(size=(k,)), jnp.float32)
+    ia = jnp.asarray(rng.normal(size=(sched.ia_len,)), jnp.float32)
+    got = convdk_1d(kernel, ia, sched)
+    want = _conv1d_oracle(np.asarray(kernel), np.asarray(ia), s)[: sched.out_len]
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("k,s", PAPER_KS)
+@pytest.mark.parametrize("k_h", [1, 3, 5])
+def test_convdk_2d_strip_matches_oracle(k, s, k_h):
+    N = 4
+    sched = make_schedule(k, s, N)
+    rng = np.random.default_rng(7)
+    kernel = jnp.asarray(rng.normal(size=(k_h, k)), jnp.float32)
+    strip = jnp.asarray(rng.normal(size=(k_h, sched.ia_len)), jnp.float32)
+    got = convdk_2d_strip(kernel, strip, sched)
+    # oracle: valid 2D conv of the strip, stride s along width only
+    want = np.zeros(sched.out_len, np.float32)
+    for m in range(sched.out_len):
+        want[m] = float(
+            (np.asarray(strip)[:, m * s : m * s + k] * np.asarray(kernel)).sum()
+        )
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("k,s", PAPER_KS)
+@pytest.mark.parametrize("padding", ["SAME", "VALID"])
+def test_dwconv2d_convdk_matches_lax(k, s, padding):
+    C, H, W = 8, 17, 23
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(C, H, W)), jnp.float32)
+    kern = jnp.asarray(rng.normal(size=(C, k, k)), jnp.float32)
+    got = dwconv2d_convdk(x, kern, stride=s, padding=padding)
+    want = dwconv2d_oracle(x, kern, stride=s, padding=padding)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_dwconv2d_narrow_ifmap_little_regime():
+    """W << T_w (the LITTLE scheduler regime): still exact."""
+    C, H, W = 16, 7, 7
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.normal(size=(C, H, W)), jnp.float32)
+    kern = jnp.asarray(rng.normal(size=(C, 3, 3)), jnp.float32)
+    got = dwconv2d_convdk(x, kern, stride=1, padding="SAME")
+    want = dwconv2d_oracle(x, kern, stride=1, padding="SAME")
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_dwconv2d_jit_and_grad():
+    """ConvDK is an ordinary differentiable JAX computation."""
+    C, H, W = 4, 12, 12
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(C, H, W)), jnp.float32)
+    kern = jnp.asarray(rng.normal(size=(C, 3, 3)), jnp.float32)
+
+    f = jax.jit(lambda x, k: dwconv2d_convdk(x, k, stride=1, padding="SAME").sum())
+    g = jax.grad(f, argnums=1)(x, kern)
+    f_ref = lambda x, k: dwconv2d_oracle(x, k, stride=1, padding="SAME").sum()
+    g_ref = jax.grad(f_ref, argnums=1)(x, kern)
+    np.testing.assert_allclose(g, g_ref, rtol=1e-4, atol=1e-4)
+
+
+@given(
+    ks=st.sampled_from(PAPER_KS),
+    C=st.integers(1, 6),
+    H=st.integers(6, 30),
+    W=st.integers(6, 40),
+    seed=st.integers(0, 2**16),
+)
+@settings(max_examples=25, deadline=None)
+def test_dwconv2d_hypothesis(ks, C, H, W, seed):
+    k, s = ks
+    if H < k or W < k:
+        return
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(C, H, W)), jnp.float32)
+    kern = jnp.asarray(rng.normal(size=(C, k, k)), jnp.float32)
+    got = dwconv2d_convdk(x, kern, stride=s, padding="SAME")
+    want = dwconv2d_oracle(x, kern, stride=s, padding="SAME")
+    assert got.shape == want.shape
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)

@@ -1,0 +1,148 @@
+"""Pallas ConvDK kernels vs pure-jnp oracles: shape/dtype/stride sweeps in
+interpret mode (kernel bodies execute on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import (
+    causal_conv1d_ref,
+    causal_conv1d_update_ref,
+    convdk_causal_conv1d,
+    convdk_depthwise2d,
+    depthwise2d_ref,
+)
+
+TOL = {jnp.float32: dict(rtol=1e-5, atol=1e-5),
+       jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+def _rand(rng, shape, dtype):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# depthwise Conv2D
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k", [3, 5])
+@pytest.mark.parametrize("stride", [1, 2])
+@pytest.mark.parametrize("padding", ["SAME", "VALID"])
+def test_dw2d_matches_ref(k, stride, padding):
+    rng = np.random.default_rng(k * 10 + stride)
+    b, h, w_in, c = 2, 14, 19, 24
+    x = _rand(rng, (b, h, w_in, c), jnp.float32)
+    w = _rand(rng, (k, k, c), jnp.float32)
+    got = convdk_depthwise2d(x, w, stride=stride, padding=padding, interpret=True)
+    want = depthwise2d_ref(x, w, stride=stride, padding=padding)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(got, want, **TOL[jnp.float32])
+
+
+@pytest.mark.parametrize("shape", [(1, 7, 7, 8), (2, 28, 28, 32),
+                                   (1, 12, 33, 130), (3, 9, 8, 3)])
+def test_dw2d_shape_sweep(shape):
+    rng = np.random.default_rng(1)
+    b, h, w_in, c = shape
+    x = _rand(rng, shape, jnp.float32)
+    w = _rand(rng, (3, 3, c), jnp.float32)
+    got = convdk_depthwise2d(x, w, stride=1, padding="SAME", interpret=True)
+    want = depthwise2d_ref(x, w, stride=1, padding="SAME")
+    np.testing.assert_allclose(got, want, **TOL[jnp.float32])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dw2d_dtypes(dtype):
+    rng = np.random.default_rng(5)
+    x = _rand(rng, (2, 16, 16, 16), dtype)
+    w = _rand(rng, (3, 3, 16), dtype)
+    got = convdk_depthwise2d(x, w, stride=2, padding="SAME", interpret=True)
+    want = depthwise2d_ref(x.astype(jnp.float32), w.astype(jnp.float32),
+                           stride=2, padding="SAME")
+    np.testing.assert_allclose(np.asarray(got, np.float32), want, **TOL[dtype])
+
+
+def test_dw2d_tile_h_invariance():
+    """The strip tiling (IB->TRF staging granularity) must not change values."""
+    rng = np.random.default_rng(7)
+    x = _rand(rng, (1, 23, 17, 8), jnp.float32)
+    w = _rand(rng, (3, 3, 8), jnp.float32)
+    outs = [
+        convdk_depthwise2d(x, w, stride=1, padding="SAME", tile_h=th,
+                           interpret=True)
+        for th in (1, 4, 8, 16)
+    ]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise Conv1D (Mamba-2 / RecurrentGemma stem)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k", [2, 3, 4])
+@pytest.mark.parametrize("l", [8, 100, 515])
+def test_conv1d_matches_ref(k, l):
+    rng = np.random.default_rng(k + l)
+    b, d = 2, 40
+    x = _rand(rng, (b, l, d), jnp.float32)
+    w = _rand(rng, (k, d), jnp.float32)
+    bias = _rand(rng, (d,), jnp.float32)
+    got = convdk_causal_conv1d(x, w, bias, tile_l=64, interpret=True)
+    want = causal_conv1d_ref(x, w, bias)
+    np.testing.assert_allclose(got, want, **TOL[jnp.float32])
+
+
+@pytest.mark.parametrize("activation", [None, "silu"])
+def test_conv1d_fused_activation(activation):
+    rng = np.random.default_rng(3)
+    x = _rand(rng, (1, 37, 16), jnp.float32)
+    w = _rand(rng, (4, 16), jnp.float32)
+    got = convdk_causal_conv1d(x, w, None, activation=activation,
+                               tile_l=16, interpret=True)
+    want = causal_conv1d_ref(x, w, None, activation=activation)
+    np.testing.assert_allclose(got, want, **TOL[jnp.float32])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_conv1d_dtypes(dtype):
+    rng = np.random.default_rng(9)
+    x = _rand(rng, (2, 64, 128), dtype)
+    w = _rand(rng, (4, 128), dtype)
+    got = convdk_causal_conv1d(x, w, None, tile_l=32, interpret=True)
+    want = causal_conv1d_ref(x.astype(jnp.float32), w.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(got, np.float32), want, **TOL[dtype])
+
+
+def test_conv1d_decode_step_consistent_with_prefill():
+    """Streaming decode (update ref) must continue the prefill exactly."""
+    rng = np.random.default_rng(11)
+    b, l, d, k = 2, 20, 12, 4
+    x = _rand(rng, (b, l, d), jnp.float32)
+    w = _rand(rng, (k, d), jnp.float32)
+    full = causal_conv1d_ref(x, w)
+
+    state = jnp.zeros((b, k - 1, d))
+    ys = []
+    for t in range(l):
+        y, state = causal_conv1d_update_ref(state, x[:, t], w)
+        ys.append(y)
+    stream = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(stream, full, rtol=1e-5, atol=1e-5)
+
+
+def test_conv1d_grad_flows():
+    rng = np.random.default_rng(13)
+    x = _rand(rng, (1, 32, 8), jnp.float32)
+    w = _rand(rng, (4, 8), jnp.float32)
+
+    def loss(w):
+        return convdk_causal_conv1d(x, w, None, tile_l=16, interpret=True).sum()
+
+    def loss_ref(w):
+        return causal_conv1d_ref(x, w).sum()
+
+    g = jax.grad(loss)(w)
+    g_ref = jax.grad(loss_ref)(w)
+    np.testing.assert_allclose(g, g_ref, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,123 @@
+"""Property tests for the ConvDK schedule — Theorems 1 & 2 of the paper.
+
+Theorem 2 is the load-bearing claim: for every valid (k, s, N), the shift
+cycles a = 0..l-1 jointly produce EVERY output index m in [0, out_len)
+EXACTLY ONCE.  We test it exhaustively over the paper's realistic (k, s)
+space and by hypothesis over a wider space.
+"""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.schedule import (
+    ConvDKConditionError,
+    block_period,
+    check_conditions,
+    covered_outputs,
+    duplication_number,
+    is_exact_cover,
+    make_schedule,
+    shift_count,
+    solve_m1_n1,
+)
+
+# (k, s) pairs used by MobileNet/EfficientNet DWConv layers.
+PAPER_KS = [(3, 1), (3, 2), (5, 1), (5, 2)]
+# Wider valid space: odd k, s < k, gcd(k, s) = 1.
+VALID_KS = [
+    (k, s)
+    for k in (3, 5, 7, 9, 11, 13)
+    for s in range(1, k)
+    if math.gcd(k, s) == 1
+]
+
+
+def test_paper_worked_example():
+    """Sec. III-A worked example: k=3, s=2, N=30 -> n1=1, m1=2, 3 cycles of
+    15 sub-cycles with the exact n and m progressions printed in the paper."""
+    sched = make_schedule(3, 2, 30)
+    assert (sched.m1, sched.n1) == (2, 1)
+    assert sched.l == 3 and sched.p == 2
+    c0, c1, c2 = sched.cycles
+    assert c0.ns == tuple(range(0, 30, 2)) and c0.ms == tuple(range(0, 45, 3))
+    assert c1.ns == tuple(range(1, 30, 2)) and c1.ms == tuple(range(2, 45, 3))
+    assert c2.ns == tuple(range(0, 30, 2)) and c2.ms == tuple(range(1, 44, 3))
+    assert all(len(c.ns) == 15 for c in sched.cycles)
+    assert is_exact_cover(sched)
+    assert sched.out_len == 45  # m in [0, 44]
+
+
+@pytest.mark.parametrize("k,s", VALID_KS)
+@pytest.mark.parametrize("N", [1, 2, 3, 7, 30])
+def test_exact_cover_theorem2(k, s, N):
+    sched = make_schedule(k, s, N)
+    assert is_exact_cover(sched), (k, s, N)
+
+
+@pytest.mark.parametrize("k,s", VALID_KS)
+def test_eq6_invariant_theorem1(k, s):
+    """Every emitted (a, n, m) satisfies m*s = n*k + a (Eq. 6)."""
+    sched = make_schedule(k, s, 11)
+    for cyc in sched.cycles:
+        for n, m in zip(cyc.ns, cyc.ms):
+            assert m * sched.s == n * sched.k + cyc.a
+
+
+@pytest.mark.parametrize("k,s", VALID_KS)
+def test_m1_n1_least_solution(k, s):
+    m1, n1 = solve_m1_n1(k, s)
+    assert m1 * s == n1 * k + 1
+    # minimality
+    for m in range(m1):
+        assert (m * s - 1) % k != 0 or m * s < 1
+
+
+def test_conditions_reject_invalid():
+    with pytest.raises(ConvDKConditionError):
+        check_conditions(4, 1)  # even k
+    with pytest.raises(ConvDKConditionError):
+        check_conditions(3, 3)  # s not < k
+    with pytest.raises(ConvDKConditionError):
+        check_conditions(9, 3)  # gcd != 1 -> Condition 2 unsolvable
+    with pytest.raises(ConvDKConditionError):
+        make_schedule(3, 1, 0)  # N must be >= 1
+
+
+@given(
+    ks=st.sampled_from(VALID_KS),
+    N=st.integers(min_value=1, max_value=64),
+)
+@settings(max_examples=200, deadline=None)
+def test_exact_cover_hypothesis(ks, N):
+    k, s = ks
+    sched = make_schedule(k, s, N)
+    ms = covered_outputs(sched)
+    assert len(ms) == len(set(ms))
+    assert set(ms) == set(range(sched.out_len))
+    # Each sub-cycle produces exactly one output -> totals match.
+    assert sched.total_subcycles == sched.out_len
+
+
+@given(ks=st.sampled_from(VALID_KS), N=st.integers(1, 64))
+@settings(max_examples=100, deadline=None)
+def test_lengths(ks, N):
+    k, s = ks
+    sched = make_schedule(k, s, N)
+    assert sched.ia_len == N * k + sched.l - 1
+    assert sched.out_len == ((N - 1) * k + sched.l - 1) // s + 1
+    assert sched.l == shift_count(k, s) and sched.p == block_period(k, s)
+    assert sched.tm_rows_used == N * k
+
+
+def test_duplication_number_eq8():
+    # Paper Fig. 4(a): k_w = 3, s = 1, T_w = 60 -> N = (60 - 3 + 1)//3 = 19
+    assert duplication_number(3, 1, width=224, t_w=60) == 19
+    # Paper Fig. 5: W = 24 < T_w -> N = (24 - 3 + 1)//3 = 7
+    assert duplication_number(3, 1, width=24, t_w=60) == 7
+    # stride-2 3x3: l = 3 -> N = (60 - 3 + 1)//3 = 19
+    assert duplication_number(3, 2, width=112, t_w=60) == 19
+    # 5x5 s=1 on T_w = 36 (k_h = 5): l = 5 -> (36 - 5 + 1)//5 = 6
+    assert duplication_number(5, 1, width=112, t_w=36) == 6
+    assert duplication_number(3, 1, width=2, t_w=60) == 0

@@ -1,0 +1,51 @@
+"""Hypothesis property tests on the BIG/LITTLE scheduler invariants."""
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.tiling import DWLayer, MacroConfig, plan_layer
+
+MACRO = MacroConfig()
+
+layer_st = st.builds(
+    DWLayer,
+    c=st.integers(1, 1024),
+    h=st.integers(7, 224),
+    w=st.integers(7, 224),
+    k=st.sampled_from([3, 5]),
+    s=st.sampled_from([1, 2]),
+)
+
+
+@given(layer=layer_st)
+@settings(max_examples=200, deadline=None)
+def test_plan_invariants(layer):
+    plan = plan_layer(layer, MACRO)
+    # 1. every output column is produced exactly once across strips
+    assert plan.strip_out_total == layer.out_w
+    # 2. the stationary memory never overflows
+    assert 0 < plan.tm_rows_used <= MACRO.tm_words
+    # 3. the streaming register file never overflows (per tile):
+    #    n_ch channel strips of the main schedule
+    ia_main = plan.strips[0].sched.ia_len
+    assert plan.n_ch * layer.k * ia_main <= MACRO.trf_words
+    # 4. regime selection matches the paper's rule
+    t_w = MACRO.t_w(layer.k)
+    assert plan.mode == ("BIG" if layer.padded_w > t_w else "LITTLE")
+    # 5. BIG never packs channels
+    if plan.mode == "BIG":
+        assert plan.n_ch == 1
+    # 6. parallelism accounting is consistent
+    assert 1 <= plan.tiles_active <= MACRO.n_tiles
+    assert plan.rounds >= 1
+    assert plan.jobs * 1 >= plan.rounds  # jobs fill at least `rounds` waves
+
+
+@given(layer=layer_st)
+@settings(max_examples=100, deadline=None)
+def test_strip_schedules_are_valid(layer):
+    plan = plan_layer(layer, MACRO)
+    for sp in plan.strips:
+        # each strip schedule covers its claimed outputs
+        assert sp.out_cols <= sp.sched.out_len
+        # strip fits the TRF rows allotted to one channel
+        assert layer.k * sp.sched.ia_len <= MACRO.trf_words

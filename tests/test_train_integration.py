@@ -1,0 +1,167 @@
+"""End-to-end training integration: loss descends, checkpoints restore
+bit-exactly, elastic restore works onto a different mesh, SIGTERM-style
+emergency save works, optimizer variants behave."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.data.pipeline import DataConfig, DataState, make_batch
+from repro.launch.mesh import make_local_mesh
+from repro.launch.train import Trainer
+from repro.models.model import ModelConfig
+from repro.train import checkpoint as ckpt
+from repro.train.optim import (
+    OptimConfig, compress_int8, decompress_int8, make_optimizer,
+)
+from repro.train.step import TrainConfig, make_train_step
+
+CFG = ModelConfig(name="ti", family="dense", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+                  vocab=64, dtype="float32")
+
+
+def _mk_trainer(tmp, steps_lr=200, microbatches=1, **opt_kw):
+    dcfg = DataConfig(vocab=CFG.vocab, seq_len=32, global_batch=8)
+    tcfg = TrainConfig(
+        optim=OptimConfig(peak_lr=3e-3, warmup_steps=5, decay_steps=steps_lr,
+                          **opt_kw),
+        microbatches=microbatches)
+    return Trainer(CFG, tcfg, dcfg, ckpt_dir=tmp, mesh=None)
+
+
+def test_loss_descends(tmp_path):
+    tr = _mk_trainer(str(tmp_path))
+    losses = tr.run(steps=30, ckpt_every=0, log_every=0)
+    assert losses[-1] < losses[0] * 0.9, (losses[0], losses[-1])
+
+
+def test_checkpoint_resume_exact(tmp_path):
+    d = str(tmp_path / "ck")
+    tr = _mk_trainer(d)
+    tr.run(steps=10, ckpt_every=5, log_every=0)
+    # continue to 15 from the step-10 checkpoint in a fresh trainer
+    tr2 = _mk_trainer(d)
+    assert tr2.maybe_restore() and tr2.step == 10
+    losses_resumed = tr2.run(steps=15, ckpt_every=0, log_every=0)
+
+    # reference: train 15 straight without interruption
+    tr3 = _mk_trainer(str(tmp_path / "ref"))
+    losses_straight = tr3.run(steps=15, ckpt_every=0, log_every=0)
+    np.testing.assert_allclose(losses_resumed[-1], losses_straight[-1],
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_elastic_restore_different_mesh(tmp_path):
+    """Save without a mesh, restore onto a local mesh (and vice versa)."""
+    d = str(tmp_path / "ck")
+    tr = _mk_trainer(d)
+    tr.run(steps=3, ckpt_every=3, log_every=0)
+
+    mesh = make_local_mesh()
+    dcfg = DataConfig(vocab=CFG.vocab, seq_len=32, global_batch=8)
+    tcfg = TrainConfig(optim=OptimConfig(peak_lr=3e-3, warmup_steps=5,
+                                         decay_steps=200))
+    tr2 = Trainer(CFG, tcfg, dcfg, ckpt_dir=d, mesh=mesh)
+    assert tr2.maybe_restore() and tr2.step == 3
+    losses = tr2.run(steps=6, ckpt_every=0, log_every=0)
+    assert np.isfinite(losses).all()
+
+
+def test_emergency_save_on_sigterm_flag(tmp_path):
+    d = str(tmp_path / "ck")
+    tr = _mk_trainer(d)
+    tr._sigterm = True                      # simulate SIGTERM delivery
+    tr.run(steps=50, ckpt_every=0, log_every=0)
+    assert ckpt.latest_step(d) == 1         # saved at first boundary, exited
+
+
+def test_atomic_checkpoint_publish(tmp_path):
+    d = str(tmp_path / "ck")
+    tr = _mk_trainer(d)
+    tr.run(steps=2, ckpt_every=2, log_every=0)
+    entries = os.listdir(d)
+    assert all(not e.startswith(".tmp") for e in entries), entries
+
+
+def test_microbatch_accumulation_matches_full_batch():
+    dcfg = DataConfig(vocab=CFG.vocab, seq_len=32, global_batch=8)
+    batch_np, _ = make_batch(dcfg, DataState(seed=1, step=0))
+    batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+
+    from repro.models.param import materialize
+    from repro.models.model import model_def
+    params = materialize(model_def(CFG), jax.random.key(0))
+
+    outs = {}
+    for n_micro in (1, 2, 4):
+        tcfg = TrainConfig(optim=OptimConfig(peak_lr=1e-3, clip_norm=1e9),
+                           microbatches=n_micro)
+        init_opt, train_step = make_train_step(CFG, tcfg)
+        opt = init_opt(params)
+        new_p, _, m = jax.jit(train_step)(params, opt, batch)
+        outs[n_micro] = (m["loss"], new_p)
+    np.testing.assert_allclose(outs[1][0], outs[2][0], rtol=1e-4)
+    l1 = jax.tree.leaves(outs[1][1])
+    for a, b in zip(l1, jax.tree.leaves(outs[4][1])):
+        np.testing.assert_allclose(a, b, rtol=2e-3, atol=2e-5)
+
+
+def test_int8_compression_error_feedback():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(size=(64, 64)), jnp.float32)
+    err = jnp.zeros_like(g)
+    # repeated compression of a CONSTANT gradient: error feedback makes the
+    # running mean of dequantized grads converge to the true gradient
+    total = jnp.zeros_like(g)
+    for i in range(32):
+        q, s, err = compress_int8(g, err)
+        total = total + decompress_int8(q, s)
+    mean = total / 32
+    rel = float(jnp.abs(mean - g).max() / jnp.abs(g).max())
+    assert rel < 0.02, rel
+
+
+def test_compressed_training_descends(tmp_path):
+    tr = _mk_trainer(str(tmp_path), compress_grads=True)
+    losses = tr.run(steps=25, ckpt_every=0, log_every=0)
+    assert losses[-1] < losses[0] * 0.95
+
+
+def test_factored_second_moment_descends(tmp_path):
+    tr = _mk_trainer(str(tmp_path), factored=True)
+    losses = tr.run(steps=25, ckpt_every=0, log_every=0)
+    assert losses[-1] < losses[0] * 0.95
+
+
+def test_factored_state_is_smaller():
+    from repro.models.param import materialize
+    from repro.models.model import model_def
+    params = materialize(model_def(CFG), jax.random.key(0))
+
+    def nbytes(tree):
+        return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+    full = make_optimizer(OptimConfig(factored=False))[0](params)
+    fact = make_optimizer(OptimConfig(factored=True))[0](params)
+    assert nbytes(fact.v) < 0.2 * nbytes(full.v)
+
+
+def test_step_retry_on_transient_failure(tmp_path, monkeypatch):
+    tr = _mk_trainer(str(tmp_path))
+    real_step = tr.train_step
+    calls = {"n": 0}
+
+    def flaky(*a, **k):
+        calls["n"] += 1
+        if calls["n"] == 2:              # fail once on the second step
+            raise RuntimeError("transient host failure")
+        return real_step(*a, **k)
+
+    tr.train_step = flaky
+    losses = tr.run(steps=3, ckpt_every=0, max_retries=2, log_every=0)
+    assert len(losses) == 3 and calls["n"] == 4  # 3 ok + 1 failed attempt
