@@ -2,19 +2,29 @@
 + harness shape — real perf is measured via the dry-run roofline on TPU).
 
 Emits ``name,us_per_call,derived`` CSV rows like benchmarks/run.py expects.
+
+``--fused`` additionally prints the fused-vs-staged-vs-XLA separable-block
+comparison: per-layer modeled HBM traffic for every MobileNet-V2 separable
+block (autotuned schedules) plus interpret-mode wall times on one block.
+Exits nonzero if any layer's fused traffic is not strictly below staged.
 """
 
 from __future__ import annotations
 
+import argparse
+import sys
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.autotune import get_fused_schedule
+from repro.core.workloads import MOBILENET_V2_SEPARABLE
 from repro.kernels import (
     causal_conv1d_ref, convdk_causal_conv1d, convdk_depthwise2d,
-    depthwise2d_ref,
+    convdk_fused_separable, convdk_separable_staged, depthwise2d_ref,
+    separable_ref,
 )
 
 
@@ -41,6 +51,18 @@ def rows():
     out.append(("convdk_dw2d_28x28x128_interp", us_k, f"maxerr={err:.1e}"))
     out.append(("lax_dw2d_28x28x128_ref", us_r, ""))
 
+    # fused separable block: same layer + 1x1 projection to 64 channels
+    wp = jnp.asarray(rng.normal(size=(128, 64)), jnp.float32)
+    us_f = _time(lambda: convdk_fused_separable(x, w, wp, interpret=True))
+    us_s = _time(lambda: convdk_separable_staged(x, w, wp, interpret=True))
+    us_x = _time(lambda: separable_ref(x, w, wp))
+    err = float(jnp.abs(convdk_fused_separable(x, w, wp, interpret=True)
+                        - separable_ref(x, w, wp)).max())
+    out.append(("convdk_fused_sep_28x28x128to64_interp", us_f,
+                f"maxerr={err:.1e}"))
+    out.append(("convdk_staged_sep_28x28x128to64_interp", us_s, ""))
+    out.append(("xla_sep_28x28x128to64_ref", us_x, ""))
+
     # causal conv1d: the Mamba-2 stem shape (per-device slice)
     xs = jnp.asarray(rng.normal(size=(2, 1024, 256)), jnp.float32)
     ws = jnp.asarray(rng.normal(size=(4, 256)), jnp.float32)
@@ -53,7 +75,30 @@ def rows():
     return out
 
 
+def fused_traffic_report() -> bool:
+    """Modeled HBM traffic, fused vs staged, every MobileNet-V2 separable
+    block (batch 1, f32).  Returns True iff fused < staged for ALL layers."""
+    print("layer,c_in,hw,s,c_out,tile_h,fused_bytes,staged_bytes,saving_pct")
+    ok = True
+    for i, (layer, c_out) in enumerate(MOBILENET_V2_SEPARABLE):
+        sch = get_fused_schedule(1, layer.h, layer.w, layer.c, c_out,
+                                 layer.k, layer.s)
+        f, s = sch.traffic.total_bytes, sch.staged_traffic.total_bytes
+        ok &= f < s
+        print(f"mbv2_dw{i},{layer.c},{layer.h},{layer.s},{c_out},"
+              f"{sch.tile_h},{f},{s},{100 * sch.modeled_saving:.1f}")
+    print(f"# fused strictly below staged on all layers: {ok}")
+    return ok
+
+
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fused", action="store_true",
+                    help="print the fused-vs-staged MobileNet-V2 HBM "
+                         "traffic comparison (exit 1 if fused loses a layer)")
+    args = ap.parse_args()
+    if args.fused:
+        sys.exit(0 if fused_traffic_report() else 1)
     for name, us, derived in rows():
         print(f"{name},{us:.1f},{derived}")
 

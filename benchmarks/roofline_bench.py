@@ -29,8 +29,8 @@ def table(recs=None, mesh="16x16", quiet=False) -> List[Dict]:
     rows = [r for r in recs if r.get("mesh") == mesh]
     if not quiet:
         print(f"\n== roofline, mesh {mesh} "
-              f"(t in ms/step on v5e: 197 TF/s bf16, 819 GB/s HBM, "
-              f"2x50 GB/s ICI) ==")
+              "(t in ms/step on v5e: 197 TF/s bf16, 819 GB/s HBM, "
+              "2x50 GB/s ICI) ==")
         print(f"{'arch':22s} {'shape':12s} {'status':7s} {'t_comp':>8s} "
               f"{'t_mem':>8s} {'t_coll':>8s} {'dominant':>10s} "
               f"{'useful':>7s} {'frac':>6s}")

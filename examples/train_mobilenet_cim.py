@@ -1,8 +1,14 @@
-"""Train a MobileNetV1-style depthwise-separable CNN whose DWConv layers run
-the ConvDK Pallas kernel (interpret mode on CPU) — the paper's own model
-family, end to end trainable through the paper's dataflow.
+"""Train a MobileNetV1-style depthwise-separable CNN whose separable blocks
+run the FUSED ConvDK Pallas kernel (DW taps + mid-block ReLU + 1x1 PW in one
+VMEM residency; interpret mode on CPU) — the paper's own model family, end
+to end trainable through the paper's dataflow with one HBM read per block.
 
     PYTHONPATH=src python examples/train_mobilenet_cim.py [--steps 60]
+    PYTHONPATH=src python examples/train_mobilenet_cim.py --staged  # A/B
+
+``--staged`` flips the routing flag in ``repro.configs.base`` back to the
+two-kernel pipeline (stage_row_strips -> DW kernel -> HBM -> PW matmul) so
+the two executables can be compared on the same run.
 """
 
 import argparse
@@ -11,7 +17,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import convdk_depthwise2d
+from repro.configs.base import kernel_config, set_kernel_config
+from repro.models.common import separable_block, separable_def
 from repro.models.param import P, materialize
 
 
@@ -19,8 +26,7 @@ def model_def(c0=16, n_blocks=3, n_classes=10):
     p = {"stem": P((3, 3, 3, c0), (None, None, None, None))}
     c = c0
     for i in range(n_blocks):
-        p[f"dw{i}"] = P((3, 3, c), (None, None, None))
-        p[f"pw{i}"] = P((c, c * 2), (None, None), scale=2.0)
+        p[f"sep{i}"] = separable_def(c, c * 2, k=3)
         c *= 2
     p["head"] = P((c, n_classes), (None, None))
     return p
@@ -33,13 +39,11 @@ def forward(params, x):
         dimension_numbers=("NHWC", "HWIO", "NHWC"))
     x = jax.nn.relu(x)
     i = 0
-    while f"dw{i}" in params:
-        # depthwise stage: the ConvDK kernel (stride 2 shrinks the map)
-        x = convdk_depthwise2d(x, params[f"dw{i}"], stride=2,
-                               padding="SAME", interpret=True)
-        x = jax.nn.relu(x)
-        # pointwise stage: 1x1 conv = matmul over channels
-        x = jax.nn.relu(x @ params[f"pw{i}"])
+    while f"sep{i}" in params:
+        # DW + ReLU + PW + ReLU: ONE fused ConvDK kernel per block (the
+        # staged two-kernel path when --staged flips the config flag)
+        x = separable_block(params[f"sep{i}"], x, stride=2,
+                            dw_act="relu", act="relu")
         i += 1
     x = x.mean(axis=(1, 2))                      # global average pool
     return x @ params["head"]
@@ -48,10 +52,13 @@ def forward(params, x):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--staged", action="store_true",
+                    help="route separable blocks through the staged "
+                         "two-kernel pipeline instead of the fused kernel")
     args = ap.parse_args()
+    set_kernel_config(fused_separable=not args.staged, interpret=True)
 
     params = materialize(model_def(), jax.random.key(0))
-    rng = np.random.default_rng(0)
 
     def batch(step):
         r = np.random.default_rng((0, step))
@@ -81,9 +88,10 @@ def main():
         losses.append(float(loss))
         if (i + 1) % 10 == 0:
             print(f"step {i+1}: loss {losses[-1]:.3f}")
+    path = "fused" if kernel_config().fused_separable else "staged"
     print(f"\nloss {losses[0]:.3f} -> {losses[-1]:.3f} "
           f"({'DESCENDED' if losses[-1] < losses[0] * 0.7 else 'check'}) — "
-          f"DWConv stages ran the ConvDK Pallas kernel")
+          f"separable blocks ran the {path} ConvDK Pallas pipeline")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,48 @@
+"""Version-compat shims over fast-moving JAX APIs.
+
+The repo targets the installed JAX (CI pins a floor, not an exact version);
+the sharding surface in particular moved between 0.4.x and 0.5+:
+
+* ``jax.sharding.AxisType`` + ``jax.make_mesh(..., axis_types=...)`` —
+  absent before ~0.4.38; meshes there are implicitly "auto" everywhere.
+* ``jax.set_mesh`` — newer spelling of the mesh context; older releases use
+  the ``Mesh`` object's own context manager.
+
+Everything that builds or activates a mesh goes through this module so the
+suite collects and runs on any supported JAX.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Sequence, Tuple
+
+import jax
+
+try:  # jax >= ~0.4.38
+    from jax.sharding import AxisType  # type: ignore[attr-defined]
+except ImportError:  # pragma: no cover - exercised on old JAX in CI matrix
+    AxisType = None
+
+
+def make_mesh(shape: Sequence[int], axes: Tuple[str, ...]):
+    """``jax.make_mesh`` with Auto axis_types where the API supports them."""
+    if AxisType is not None:
+        try:
+            return jax.make_mesh(tuple(shape), tuple(axes),
+                                 axis_types=(AxisType.Auto,) * len(axes))
+        except TypeError:  # make_mesh predates the axis_types kwarg
+            pass
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+@contextlib.contextmanager
+def activate_mesh(mesh):
+    """Enter a mesh context: ``jax.set_mesh`` when available, else the
+    legacy ``Mesh`` context manager."""
+    if hasattr(jax, "set_mesh"):
+        with jax.set_mesh(mesh):
+            yield mesh
+    else:
+        with mesh:
+            yield mesh

@@ -16,9 +16,47 @@ Skips (DESIGN.md §Arch-applicability):
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 from ..models.model import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvKernelConfig:
+    """Routing policy for depthwise-separable conv blocks.
+
+    ``fused_separable`` routes ``models.common.separable_block`` through the
+    single-pass ``kernels.convdk_fused_separable`` (in-kernel strip staging,
+    DW+PW in one VMEM residency); off = the staged two-kernel pipeline.
+    ``autotune`` picks ``tile_h`` per layer shape from the HBM traffic model
+    (``core.autotune``); off = the fixed ``tile_h`` default.
+    ``interpret`` forces Pallas interpret mode (None = auto: interpret on
+    CPU backends, compiled Mosaic on TPU).
+    """
+
+    fused_separable: bool = True
+    autotune: bool = True
+    tile_h: int = 8
+    interpret: Optional[bool] = None
+
+
+_KERNEL_CONFIG = ConvKernelConfig()
+
+
+def kernel_config() -> ConvKernelConfig:
+    """The process-wide conv-kernel routing config."""
+    return _KERNEL_CONFIG
+
+
+def set_kernel_config(**overrides) -> ConvKernelConfig:
+    """Replace fields of the global conv-kernel config (returns the new one).
+
+    Example: ``set_kernel_config(fused_separable=False)`` to A/B the staged
+    pipeline in benchmarks.
+    """
+    global _KERNEL_CONFIG
+    _KERNEL_CONFIG = dataclasses.replace(_KERNEL_CONFIG, **overrides)
+    return _KERNEL_CONFIG
 
 
 @dataclasses.dataclass(frozen=True)

@@ -7,7 +7,7 @@ precomputed frame embeddings, llava gets precomputed patch embeddings.
 
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

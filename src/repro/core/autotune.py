@@ -1,0 +1,163 @@
+"""Per-layer schedule selection for the fused separable ConvDK kernel.
+
+MIREDO-style per-layer solving: instead of one fixed ``tile_h`` for every
+separable block, each layer shape gets its own fused schedule, chosen by the
+analytical HBM traffic model in ``core.perfmodel`` (primary) with an optional
+measured fallback sweep (ground truth when the model cannot separate
+candidates, or when ``mode="benchmark"`` is requested).
+
+The selection is cached per layer shape — schedule solving is trace-time
+work and must never re-run inside a jitted step.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from functools import lru_cache
+from typing import Optional, Sequence, Tuple
+
+from .perfmodel import (
+    HBMTraffic,
+    SeparableShape,
+    fused_separable_traffic,
+    pick_channel_block,
+    staged_separable_traffic,
+)
+
+
+@dataclass(frozen=True)
+class TPUConfig:
+    """Budget knobs for fused-schedule selection on one core."""
+
+    vmem_bytes: int = 16 * 1024 * 1024   # per-core VMEM budget
+    c_block: int = 128                   # lane width
+    tile_h_candidates: Tuple[int, ...] = (1, 2, 4, 8, 16, 32)
+
+
+@dataclass(frozen=True)
+class FusedSchedule:
+    """One selected schedule for ``convdk_fused_separable``."""
+
+    tile_h: int
+    ci_block: int
+    co_block: int
+    traffic: HBMTraffic          # modeled fused HBM traffic at this tile_h
+    staged_traffic: HBMTraffic   # modeled staged-pipeline traffic (baseline)
+
+    @property
+    def modeled_saving(self) -> float:
+        """Fraction of staged HBM bytes the fused schedule avoids."""
+        base = self.staged_traffic.total_bytes
+        return 1.0 - self.traffic.total_bytes / base if base else 0.0
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _blocks(c: int, cap: int) -> int:
+    return min(cap, _round_up(c, 8))
+
+
+def vmem_footprint_bytes(shape: SeparableShape, tile_h: int,
+                         tpu: TPUConfig) -> int:
+    """Modeled VMEM residency of one fused grid cell (per-strip staging).
+
+    Counts the staged input window, the f32 DW accumulator, the f32 PW
+    scratch accumulator and both weight blocks — the production budget a
+    DMA'd (``ANY``-space input) rendering of the kernel must respect.
+    """
+    ci = pick_channel_block(shape.c_in, tpu.c_block)
+    co = _blocks(shape.c_out, tpu.c_block)
+    tile_h = max(1, min(tile_h, shape.out_h))
+    in_rows = (tile_h - 1) * shape.s + shape.k
+    x_win = in_rows * shape.padded_w * ci * shape.dtype_bytes
+    dw_acc = tile_h * shape.out_w * ci * 4
+    pw_acc = tile_h * shape.out_w * co * 4
+    weights = (shape.k * shape.k * ci + ci * co) * shape.dtype_bytes
+    return x_win + dw_acc + pw_acc + weights
+
+
+def candidate_schedules(shape: SeparableShape,
+                        tpu: TPUConfig = TPUConfig()) -> Tuple[FusedSchedule, ...]:
+    """All VMEM-feasible schedules for one layer shape, model-priced."""
+    ci = pick_channel_block(shape.c_in, tpu.c_block)
+    co = _blocks(shape.c_out, tpu.c_block)
+    out: list[FusedSchedule] = []
+    seen = set()
+    for th in tpu.tile_h_candidates:
+        th = max(1, min(th, shape.out_h))
+        if th in seen:
+            continue
+        seen.add(th)
+        if vmem_footprint_bytes(shape, th, tpu) > tpu.vmem_bytes:
+            continue
+        out.append(FusedSchedule(
+            tile_h=th, ci_block=ci, co_block=co,
+            traffic=fused_separable_traffic(shape, th, tpu.c_block),
+            staged_traffic=staged_separable_traffic(shape, th, tpu.c_block),
+        ))
+    if not out:
+        # degenerate fallback: the smallest strip always fits the model
+        out.append(FusedSchedule(
+            tile_h=1, ci_block=ci, co_block=co,
+            traffic=fused_separable_traffic(shape, 1, tpu.c_block),
+            staged_traffic=staged_separable_traffic(shape, 1, tpu.c_block),
+        ))
+    return tuple(out)
+
+
+def select_fused_schedule(shape: SeparableShape,
+                          tpu: TPUConfig = TPUConfig()) -> FusedSchedule:
+    """Pick the schedule minimizing modeled HBM traffic (ties -> larger
+    tile_h: fewer grid cells, bigger MXU contractions)."""
+    cands = candidate_schedules(shape, tpu)
+    return min(cands, key=lambda c: (c.traffic.total_bytes, -c.tile_h))
+
+
+@lru_cache(maxsize=512)
+def _cached_schedule(shape: SeparableShape, tpu: TPUConfig) -> FusedSchedule:
+    return select_fused_schedule(shape, tpu)
+
+
+def get_fused_schedule(
+    b: int, h: int, w: int, c_in: int, c_out: int, k: int, s: int,
+    dtype_bytes: int = 4, tpu: TPUConfig = TPUConfig(),
+) -> FusedSchedule:
+    """Cached per-layer-shape schedule lookup (trace-time safe)."""
+    shape = SeparableShape(b=b, h=h, w=w, c_in=c_in, c_out=c_out, k=k, s=s,
+                           dtype_bytes=dtype_bytes)
+    return _cached_schedule(shape, tpu)
+
+
+def benchmark_fused_sweep(
+    x, w_dw, w_pw, *, stride: int, padding: str = "SAME",
+    tile_hs: Optional[Sequence[int]] = None, iters: int = 3,
+    interpret: Optional[bool] = None,
+) -> Tuple[int, Tuple[Tuple[int, float], ...]]:
+    """Measured fallback: time the real fused kernel per candidate tile_h.
+
+    Returns (best_tile_h, ((tile_h, seconds_per_call), ...)).  Use when the
+    analytical model ties candidates or a deployment wants ground truth; the
+    sweep runs each candidate ``iters`` times after one warmup call.
+    """
+    import jax
+
+    from ..kernels.convdk_fused import convdk_fused_separable
+
+    out_h = -(-x.shape[1] // stride)
+    if tile_hs is None:
+        tile_hs = [t for t in TPUConfig().tile_h_candidates if t <= out_h] or [1]
+    results = []
+    for th in tile_hs:
+        fn = lambda: convdk_fused_separable(  # noqa: E731
+            x, w_dw, w_pw, stride=stride, padding=padding, tile_h=th,
+            interpret=interpret)
+        jax.block_until_ready(fn())                      # warmup / compile
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            jax.block_until_ready(fn())
+        results.append((th, (time.perf_counter() - t0) / iters))
+    best = min(results, key=lambda r: r[1])[0]
+    return best, tuple(results)

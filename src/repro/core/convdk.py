@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .schedule import ConvDKSchedule, make_schedule, duplication_number, shift_count
+from .schedule import ConvDKSchedule, make_schedule, duplication_number
 
 
 # ---------------------------------------------------------------------------

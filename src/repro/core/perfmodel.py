@@ -47,7 +47,6 @@ from typing import Callable, Dict, Iterable, List, Tuple
 
 from .tiling import (
     DWLayer,
-    LayerPlan,
     MacroConfig,
     baseline_is_utilization,
     baseline_ws_utilization,
@@ -342,3 +341,147 @@ def compare_networks(
 def reduction(base: float, ours: float) -> float:
     """Percent reduction vs a baseline (positive = we are smaller)."""
     return 100.0 * (1.0 - ours / base) if base else 0.0
+
+
+# ---------------------------------------------------------------------------
+# TPU-kernel HBM traffic model (the executable analogue of the CIM model)
+#
+# The CIM accounting above prices IB/WB/OB buffer ports; the Pallas kernels
+# pay the same structural costs at the HBM<->VMEM boundary.  These functions
+# price the two executable separable-block pipelines so core/autotune.py can
+# pick a fused schedule per layer shape (per-layer schedule selection a la
+# MIREDO) and tests/benchmarks can assert fused < staged:
+#
+# * staged: stage_row_strips materializes overlapping strips (halo rows
+#   written AND re-read), the DW output round-trips through HBM before the
+#   pointwise matmul.
+# * fused:  each strip is DMA'd once per c_out block straight from the
+#   unstaged input; DW output stays in VMEM; only the block output is
+#   written.
+# ---------------------------------------------------------------------------
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def pick_channel_block(c: int, cap: int = 128) -> int:
+    """Channel block size minimizing zero-padding, then maximizing width.
+
+    ``min(cap, round_up(c, 8))`` pads e.g. 144 channels to 256 (+78 % HBM
+    words and MACs on real MobileNet-V2 widths).  Instead: among blocks
+    b <= cap (multiples of 8), pick the one whose padded channel count
+    ``round_up(c, b)`` is smallest, breaking ties toward the widest block
+    (fills the 128-lane axis).  For c divisible by 8 this always pads zero:
+    144 -> 72, 192/576 -> 96, 960 -> 120, 384 -> 128.
+    """
+    c8 = _round_up(max(c, 1), 8)
+    if c8 <= cap:
+        return c8
+    return min((b for b in range(8, cap + 1, 8)),
+               key=lambda b: (_round_up(c8, b), -b))
+
+
+@dataclass(frozen=True)
+class SeparableShape:
+    """One depthwise-separable block instance as the TPU kernel sees it."""
+
+    b: int          # batch
+    h: int          # ifmap height (pre-padding)
+    w: int          # ifmap width
+    c_in: int       # depthwise / expanded channels
+    c_out: int      # pointwise projection channels
+    k: int          # square kernel
+    s: int          # stride
+    dtype_bytes: int = 4
+
+    @property
+    def out_h(self) -> int:
+        return -(-self.h // self.s)
+
+    @property
+    def out_w(self) -> int:
+        return -(-self.w // self.s)
+
+    @property
+    def padded_w(self) -> int:
+        return (self.out_w - 1) * self.s + self.k
+
+    @property
+    def padded_h(self) -> int:
+        return (self.out_h - 1) * self.s + self.k
+
+    @classmethod
+    def from_dw_layer(cls, layer: DWLayer, c_out: int, b: int = 1,
+                      dtype_bytes: int = 4) -> "SeparableShape":
+        return cls(b=b, h=layer.h, w=layer.w, c_in=layer.c, c_out=c_out,
+                   k=layer.k, s=layer.s, dtype_bytes=dtype_bytes)
+
+
+@dataclass(frozen=True)
+class HBMTraffic:
+    """HBM words moved by one separable block under one pipeline."""
+
+    read_words: int
+    write_words: int
+    dtype_bytes: int = 4
+
+    @property
+    def total_words(self) -> int:
+        return self.read_words + self.write_words
+
+    @property
+    def total_bytes(self) -> int:
+        return self.total_words * self.dtype_bytes
+
+
+def _strip_counts(shape: SeparableShape, tile_h: int) -> Tuple[int, int]:
+    """(n_th, in_rows): row-strip count and staged rows per strip."""
+    tile_h = max(1, min(tile_h, shape.out_h))
+    n_th = -(-shape.out_h // tile_h)
+    in_rows = (tile_h - 1) * shape.s + shape.k
+    return n_th, in_rows
+
+
+def staged_separable_traffic(
+    shape: SeparableShape, tile_h: int, c_block: int = 128
+) -> HBMTraffic:
+    """HBM traffic of the staged two-kernel pipeline.
+
+    1. stage_row_strips: read the padded input once, WRITE the overlapping
+       strips tensor (halo rows duplicated in HBM),
+    2. DW kernel: read the strips + DW taps, write the DW output,
+    3. PW matmul: re-read the DW output + PW weight, write the block output.
+    """
+    n_th, in_rows = _strip_counts(shape, tile_h)
+    strips = shape.b * n_th * in_rows * shape.padded_w * shape.c_in
+    ifmap = shape.b * shape.padded_h * shape.padded_w * shape.c_in
+    tile_h_eff = max(1, min(tile_h, shape.out_h))
+    dw_out = shape.b * n_th * tile_h_eff * shape.out_w * shape.c_in
+    out = shape.b * shape.out_h * shape.out_w * shape.c_out
+    w_dw = shape.k * shape.k * shape.c_in
+    w_pw = shape.c_in * shape.c_out
+    reads = ifmap + strips + w_dw + dw_out + w_pw
+    writes = strips + dw_out + out
+    return HBMTraffic(reads, writes, shape.dtype_bytes)
+
+
+def fused_separable_traffic(
+    shape: SeparableShape, tile_h: int, c_block: int = 128
+) -> HBMTraffic:
+    """HBM traffic of the fused in-kernel-staging pipeline.
+
+    Each (strip, c_in block) window is DMA'd once per c_out block straight
+    from the unstaged input (halo rows re-read across strips but never
+    written); DW output lives and dies in VMEM; the only write is the block
+    output.  Weight blocks are re-fetched per revisiting grid cell.
+    """
+    n_th, in_rows = _strip_counts(shape, tile_h)
+    n_co = -(-shape.c_out // min(c_block, max(8, shape.c_out)))
+    strips = shape.b * n_th * in_rows * shape.padded_w * shape.c_in
+    out = shape.b * shape.out_h * shape.out_w * shape.c_out
+    w_dw = shape.k * shape.k * shape.c_in * n_th * n_co
+    w_pw = shape.c_in * shape.c_out * n_th
+    reads = strips * n_co + w_dw + w_pw
+    writes = out
+    return HBMTraffic(reads, writes, shape.dtype_bytes)

@@ -28,7 +28,6 @@ from .schedule import (
     ConvDKSchedule,
     duplication_number,
     make_schedule,
-    shift_count,
 )
 
 
@@ -138,7 +137,6 @@ def _plan_strips(k: int, s: int, out_w: int, n_cap: int) -> Tuple[StripSpec, ...
     The last strip is sized to the remaining outputs (smaller N), mirroring a
     real scheduler that does not fetch a full-width halo for a 2-column tail.
     """
-    l = shift_count(k, s)
     strips: List[StripSpec] = []
     remaining = out_w
     while remaining > 0:

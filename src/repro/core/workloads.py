@@ -114,6 +114,26 @@ _EFFB0: List[Tuple[int, int, int, int]] = [
 EFFICIENTNET_B0: List[DWLayer] = [_dw(e, hw, k, s) for k, e, s, hw in _EFFB0]
 
 
+# MobileNetV2 pointwise-projection output channels per DW entry above
+# (the linear-bottleneck channel the 1x1 conv maps the expanded tensor to;
+# arXiv:1801.04381 Table 2).  Drives the fused separable-block traffic
+# accounting: the DW table alone cannot price the fused DW+PW pipeline.
+MOBILENET_V2_PW_OUT: List[int] = [
+    16,                # 32 -> 16, t = 1
+    24, 24,            # 96/144 -> 24
+    32, 32, 32,        # 144/192 -> 32
+    64, 64, 64, 64,    # 192/384 -> 64
+    96, 96, 96,        # 384/576 -> 96
+    160, 160, 160,     # 576/960 -> 160
+    320,               # 960 -> 320
+]
+assert len(MOBILENET_V2_PW_OUT) == len(MOBILENET_V2)
+
+# (DW stage, pointwise C_out) pairs — the full separable block per layer.
+MOBILENET_V2_SEPARABLE: List[Tuple[DWLayer, int]] = list(
+    zip(MOBILENET_V2, MOBILENET_V2_PW_OUT))
+
+
 NETWORKS: Dict[str, List[DWLayer]] = {
     "mobilenet_v1": MOBILENET_V1,
     "mobilenet_v2": MOBILENET_V2,

@@ -2,20 +2,31 @@
 convolution) re-designed for the TPU memory hierarchy (DESIGN.md §Pillar B).
 """
 
+from .convdk_fused import convdk_fused_separable, fused_separable_pallas
 from .ops import (
     convdk_causal_conv1d,
     convdk_depthwise2d,
+    convdk_separable_staged,
     stage_row_strips,
     stage_seq_strips,
 )
-from .ref import causal_conv1d_ref, causal_conv1d_update_ref, depthwise2d_ref
+from .ref import (
+    causal_conv1d_ref,
+    causal_conv1d_update_ref,
+    depthwise2d_ref,
+    separable_ref,
+)
 
 __all__ = [
     "convdk_causal_conv1d",
     "convdk_depthwise2d",
+    "convdk_fused_separable",
+    "convdk_separable_staged",
+    "fused_separable_pallas",
     "stage_row_strips",
     "stage_seq_strips",
     "causal_conv1d_ref",
     "causal_conv1d_update_ref",
     "depthwise2d_ref",
+    "separable_ref",
 ]

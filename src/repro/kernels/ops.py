@@ -19,6 +19,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from ..core.perfmodel import pick_channel_block
 from .convdk_conv1d import conv1d_pallas
 from .convdk_dw import dw2d_pallas
 from .ref import causal_conv1d_ref, depthwise2d_ref
@@ -116,8 +117,8 @@ def _dw2d_impl(x, w, stride, padding, tile_h, interpret):
     else:
         raise ValueError(padding)
 
-    # channel padding to the 128-lane block
-    c_block = min(128, _round_up(c, 8))
+    # channel blocking: minimal-padding block along the 128-lane axis
+    c_block = pick_channel_block(c)
     c_pad = _round_up(c, c_block)
     xp = jnp.pad(x, ((0, 0), pads[0], pads[1], (0, c_pad - c)))
     wp = jnp.pad(w, ((0, 0), (0, 0), (0, c_pad - c)))
@@ -134,6 +135,39 @@ def _dw2d_impl(x, w, stride, padding, tile_h, interpret):
     )                                                     # (B, n_th, TH, W', C)
     out = out.reshape(b, -1, out_w, c_pad)[:, :out_h, :, :c]
     return out
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("stride", "padding", "tile_h", "dw_act", "act",
+                     "interpret"),
+)
+def convdk_separable_staged(
+    x: jax.Array,
+    w_dw: jax.Array,
+    w_pw: jax.Array,
+    *,
+    stride: int = 1,
+    padding: str = "SAME",
+    tile_h: int = 8,
+    dw_act: Optional[str] = None,
+    act: Optional[str] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """The STAGED two-kernel separable pipeline (comparison baseline).
+
+    Runs the DW ConvDK kernel over pre-staged strips, round-trips the DW
+    output through HBM, then applies the pointwise projection as a separate
+    matmul — the exact double HBM trip ``convdk_fused_separable`` fuses away.
+    Kept as the reference executable for the fused-vs-staged traffic and
+    numerics comparisons (benchmarks/kernel_bench.py, tests).
+    """
+    from .ref import _act_ref  # local import: ref has no dep on ops
+    y = convdk_depthwise2d(x, w_dw, stride=stride, padding=padding,
+                           tile_h=tile_h, interpret=interpret)
+    y = _act_ref(y.astype(jnp.float32), dw_act)
+    z = jnp.einsum("bhwc,cd->bhwd", y, w_pw.astype(jnp.float32))
+    return _act_ref(z, act).astype(x.dtype)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))

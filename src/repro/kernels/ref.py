@@ -28,6 +28,41 @@ def depthwise2d_ref(
     return out
 
 
+def _act_ref(x: jax.Array, act: Optional[str]) -> jax.Array:
+    if act is None:
+        return x
+    if act == "relu":
+        return jnp.maximum(x, 0.0)
+    if act == "relu6":
+        return jnp.clip(x, 0.0, 6.0)
+    raise ValueError(f"unsupported activation: {act}")
+
+
+def separable_ref(
+    x: jax.Array,
+    w_dw: jax.Array,
+    w_pw: jax.Array,
+    stride: int = 1,
+    padding: str = "SAME",
+    dw_act: Optional[str] = None,
+    act: Optional[str] = None,
+) -> jax.Array:
+    """Depthwise-separable block oracle: DW conv -> dw_act -> 1x1 PW -> act.
+
+    x: (B, H, W, C_in); w_dw: (k_h, k_w, C_in); w_pw: (C_in, C_out).
+    The PW contraction runs in f32 (matching the fused kernel's accumulator)
+    before casting back to the input dtype.
+    """
+    y = depthwise2d_ref(x, w_dw, stride=stride, padding=padding)
+    y = _act_ref(y.astype(jnp.float32), dw_act)
+    z = jax.lax.dot_general(
+        y, w_pw.astype(jnp.float32),
+        dimension_numbers=(((3,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    return _act_ref(z, act).astype(x.dtype)
+
+
 def causal_conv1d_ref(
     x: jax.Array,
     w: jax.Array,

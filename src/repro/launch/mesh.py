@@ -4,24 +4,26 @@ Defined as FUNCTIONS (never module-level constants) so importing this module
 never touches jax device state — the dry-run sets
 ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first jax
 init, and smoke tests must keep seeing 1 device.
+
+Mesh construction goes through ``repro.compat`` so the module imports (and
+the suite collects) on JAX versions without ``jax.sharding.AxisType``.
 """
 
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from ..compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_local_mesh():
     """Whatever this host has — used by examples and integration tests."""
     n = len(jax.devices())
-    return jax.make_mesh((n, 1), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return make_mesh((n, 1), ("data", "model"))

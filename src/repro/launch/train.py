@@ -23,7 +23,6 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..configs import get_arch
 from ..data.pipeline import DataConfig, DataState, make_batch

@@ -15,7 +15,6 @@ import jax.numpy as jnp
 
 from ..sharding import shard
 from .common import apply_rope, dense, dense_def
-from .param import P
 
 NEG_INF = -2.0e38
 

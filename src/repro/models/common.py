@@ -60,6 +60,61 @@ def dense(params: dict, x: jax.Array) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# depthwise-separable conv block (MobileNet/EfficientNet building block)
+# ---------------------------------------------------------------------------
+
+def separable_def(c_in: int, c_out: int, k: int = 3) -> dict:
+    """Params of one depthwise-separable block: k x k DW taps + 1x1 PW."""
+    return {
+        "dw": P((k, k, c_in), (None, None, None)),
+        "pw": P((c_in, c_out), (None, None), scale=2.0),
+    }
+
+
+def separable_block(
+    params: dict,
+    x: jax.Array,
+    *,
+    stride: int = 1,
+    padding: str = "SAME",
+    dw_act: Optional[str] = "relu",
+    act: Optional[str] = "relu",
+    kcfg=None,
+) -> jax.Array:
+    """Apply one separable block, routed by the conv-kernel config.
+
+    With ``kcfg.fused_separable`` (the default) the whole block runs as ONE
+    Pallas kernel — in-kernel strip staging, DW taps, mid-block activation
+    and the 1x1 projection in a single VMEM residency (one HBM read of
+    ``x``, one HBM write of the output).  Otherwise the staged two-kernel
+    pipeline runs (DW kernel -> HBM -> PW matmul).  ``kcfg`` defaults to
+    ``repro.configs.base.kernel_config()``.
+
+    x: (B, H, W, C_in) NHWC -> (B, H', W', C_out).
+    """
+    if kcfg is None:
+        # lazy import: configs.base imports models.model -> models.common
+        from ..configs.base import kernel_config
+        kcfg = kernel_config()
+    from ..kernels import convdk_fused_separable, convdk_separable_staged
+
+    w_dw = params["dw"].astype(x.dtype)
+    w_pw = params["pw"].astype(x.dtype)
+    tile_h = kcfg.tile_h
+    if kcfg.autotune:
+        from ..core.autotune import get_fused_schedule
+        b, h, w, c_in = x.shape
+        tile_h = get_fused_schedule(
+            b, h, w, c_in, w_pw.shape[1], w_dw.shape[0], stride,
+            dtype_bytes=x.dtype.itemsize).tile_h
+    route = (convdk_fused_separable if kcfg.fused_separable
+             else convdk_separable_staged)
+    return route(x, w_dw, w_pw, stride=stride, padding=padding,
+                 tile_h=tile_h, dw_act=dw_act, act=act,
+                 interpret=kcfg.interpret)
+
+
+# ---------------------------------------------------------------------------
 # rotary position embeddings
 # ---------------------------------------------------------------------------
 

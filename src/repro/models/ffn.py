@@ -3,7 +3,6 @@
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from ..sharding import shard
 from .common import act_fn, dense, dense_def

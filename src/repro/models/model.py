@@ -33,7 +33,7 @@ from . import rglru as rglru_mod
 from . import ssd as ssd_mod
 from .common import (
     dense, dense_def, embed, embed_def, head_def, rmsnorm, rmsnorm_def,
-    unembed,
+    separable_block, separable_def, unembed,
 )
 from .ffn import ffn, ffn_def
 from .param import P, stack_defs
@@ -82,6 +82,9 @@ class ModelConfig:
     lru_width: int = 0
     # vlm
     n_img_tokens: int = 0
+    vision_stem: bool = False      # conv patch-embed stem over raw images
+    vision_stem_c0: int = 32       # stem width; doubles per separable block
+    vision_stem_blocks: int = 2    # stride-2 separable blocks after the stem
     # execution
     dtype: str = "bfloat16"
     param_dtype: str = "float32"
@@ -262,10 +265,43 @@ def model_def(cfg: ModelConfig) -> dict:
     if cfg.family == "vlm":
         # frontend stub: precomputed patch embeddings get one projection
         p["img_proj"] = dense_def(cfg.d_model, cfg.d_model, ("embed", None))
+        if cfg.vision_stem:
+            p["vstem"] = vision_stem_def(cfg)
     if cfg.family == "encoder":
         # frontend stub: precomputed frame embeddings get one projection
         p["frame_proj"] = dense_def(cfg.d_model, cfg.d_model, ("embed", None))
     return p
+
+
+def vision_stem_def(cfg: ModelConfig) -> dict:
+    """Conv patch-embed stem: 3x3/2 stem conv, then stride-2 separable
+    blocks (each one fused ConvDK kernel), then a 1x1 lift to d_model."""
+    c = cfg.vision_stem_c0
+    p: Dict[str, Any] = {"stem": P((3, 3, 3, c), (None,) * 4)}
+    for i in range(cfg.vision_stem_blocks):
+        p[f"sep{i}"] = separable_def(c, c * 2, k=3)
+        c *= 2
+    p["lift"] = dense_def(c, cfg.d_model, (None, "embed"))
+    return p
+
+
+def apply_vision_stem(params: dict, images: jax.Array,
+                      cfg: ModelConfig) -> jax.Array:
+    """(B, H, W, 3) raw images -> (B, n_patches, d_model) patch embeddings.
+
+    Every separable block routes through the fused DW+PW ConvDK kernel
+    (behind the ``configs.base.kernel_config()`` flag) — the paper's
+    dataflow as the VLM vision frontend.
+    """
+    x = jax.lax.conv_general_dilated(
+        images.astype(jnp.float32), params["stem"].astype(jnp.float32),
+        (2, 2), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    x = jax.nn.relu(x)
+    for i in range(cfg.vision_stem_blocks):
+        x = separable_block(params[f"sep{i}"], x, stride=2)
+    b, h, w, c = x.shape
+    tokens = dense(params["lift"], x.reshape(b, h * w, c))
+    return tokens.astype(cfg.adtype)
 
 
 def _apply_block(lp: dict, x, cfg, pat, positions, use_chunked):
@@ -302,7 +338,11 @@ def forward(
             x = dense(params["frame_proj"], x)
     else:
         x = embed(params["embed"], batch["tokens"], dt)
-    if cfg.family == "vlm" and "img_embeds" in batch:
+    if cfg.family == "vlm" and "images" in batch and cfg.vision_stem:
+        embeds = apply_vision_stem(params["vstem"], batch["images"], cfg)
+        img = dense(params["img_proj"], embeds)
+        x = jnp.concatenate([img, x], axis=1)
+    elif cfg.family == "vlm" and "img_embeds" in batch:
         img = dense(params["img_proj"], batch["img_embeds"].astype(dt))
         x = jnp.concatenate([img, x], axis=1)
     if cfg.embed_scale:

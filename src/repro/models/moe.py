@@ -20,12 +20,11 @@ Design (DESIGN.md §Risks):
 from __future__ import annotations
 
 import math
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from ..sharding import shard
 from .common import act_fn
 from .param import P
 

@@ -13,7 +13,7 @@ logical sharding axes + initializer).  From that single declaration we derive:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -159,7 +159,6 @@ def ssd_block(
     """Full Mamba-2 block (training / prefill).  x: (B, L, D)."""
     b, l, d = x.shape
     di, h, p = cfg.d_inner, cfg.n_heads, cfg.head_dim
-    gn = cfg.n_groups * cfg.d_state
 
     z = dense(params["in_z"], x)
     xr = dense(params["in_x"], x)
@@ -213,7 +212,6 @@ def ssd_decode_step(
     """One token.  x_t: (B, 1, D) -> (y (B,1,D), new state).  O(1) in L."""
     b = x_t.shape[0]
     di, h, p = cfg.d_inner, cfg.n_heads, cfg.head_dim
-    gn = cfg.n_groups * cfg.d_state
 
     z = dense(params["in_z"], x_t)[:, 0]
     xr = dense(params["in_x"], x_t)[:, 0]

@@ -16,14 +16,14 @@ scheduler packs small channels into one TRF.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..models.model import (
-    ModelConfig, decode_step, forward, init_decode_state,
+    ModelConfig, decode_step, init_decode_state,
 )
 
 

@@ -12,7 +12,6 @@ from __future__ import annotations
 from typing import Any, Dict, Optional, Sequence, Tuple, Union
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 MeshAxes = Union[str, Tuple[str, ...], None]
@@ -122,6 +121,17 @@ def shard(x: jax.Array, *logical: Optional[str], rules=None) -> jax.Array:
             mesh = am
     except Exception:
         mesh = None
+    if mesh is None:
+        # Legacy mesh context (`with mesh:` on JAX without set_mesh /
+        # get_abstract_mesh): the active physical mesh lives in the
+        # thread-resources env.  Private API, so fully exception-guarded.
+        try:
+            from jax._src.mesh import thread_resources
+            pm = thread_resources.env.physical_mesh
+            if pm is not None and not pm.empty:
+                mesh = pm
+        except Exception:
+            mesh = None
     if mesh is None:
         return x
     spec = spec_for(logical, x.shape, mesh, rules)

@@ -1,0 +1,107 @@
+"""Test-support utilities, including a minimal ``hypothesis`` fallback.
+
+The property suites (``test_convdk_numerics``, ``test_schedule_theorems``,
+``test_tiling_properties``) are written against real Hypothesis, which the
+dev requirements install in CI.  On machines without it the suite must
+still COLLECT AND RUN — property coverage degrades to a deterministic
+pseudo-random example sweep instead of erroring at import time.
+
+``install_hypothesis_fallback()`` (called from ``tests/conftest.py``)
+registers a stub module under the ``hypothesis`` name implementing exactly
+the surface the suites use: ``given``, ``settings`` and the
+``integers`` / ``sampled_from`` / ``builds`` strategies.  Examples are drawn
+from a fixed-seed ``random.Random`` so failures reproduce across runs.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+
+_FALLBACK_SEED = 0xC0FFEE
+# Cap the fallback sweep: the stub trades Hypothesis' shrinking and coverage
+# guidance for bounded deterministic sampling, so huge max_examples buy
+# nothing.
+_MAX_EXAMPLES_CAP = 100
+
+
+class _Strategy:
+    """A draw function wrapped as a minimal strategy object."""
+
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example_from(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def integers(min_value: int = 0, max_value: int = 1 << 16) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda rng: elements[rng.randrange(len(elements))])
+
+
+def builds(target, **kwargs) -> _Strategy:
+    return _Strategy(lambda rng: target(
+        **{k: v.example_from(rng) for k, v in kwargs.items()}))
+
+
+def settings(max_examples: int = 25, deadline=None, **_ignored):
+    """Records the example budget on the wrapped test (order-agnostic with
+    ``given``: the attribute is read at call time from either wrapper)."""
+    def deco(fn):
+        fn._fallback_max_examples = min(max_examples, _MAX_EXAMPLES_CAP)
+        return fn
+    return deco
+
+
+def given(**strategies):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_fallback_max_examples",
+                        getattr(fn, "_fallback_max_examples", 25))
+            rng = random.Random(_FALLBACK_SEED)
+            for _ in range(n):
+                drawn = {k: s.example_from(rng) for k, s in strategies.items()}
+                fn(*args, **drawn, **kwargs)
+        # Hide the strategy parameters from pytest's fixture resolution:
+        # without this, __wrapped__ makes inspect.signature() report the
+        # original (ks, N, ...) signature and pytest demands fixtures.
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature(
+            p for name, p in inspect.signature(fn).parameters.items()
+            if name not in strategies)
+        wrapper.hypothesis_fallback = True
+        return wrapper
+    return deco
+
+
+def install_hypothesis_fallback() -> bool:
+    """Register the stub under ``hypothesis`` if the real package is absent.
+
+    Returns True when the fallback was installed (real Hypothesis missing).
+    """
+    try:
+        import hypothesis  # noqa: F401
+        return False
+    except ImportError:
+        pass
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    strat = types.ModuleType("hypothesis.strategies")
+    strat.integers = integers
+    strat.sampled_from = sampled_from
+    strat.builds = builds
+    mod.strategies = strat
+    mod.__is_repro_fallback__ = True
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strat
+    return True

@@ -11,7 +11,7 @@ sampled) the ``decode_*``/``long_*`` cells lower.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,18 @@
+"""Suite-wide bootstrap: src-layout import path + hypothesis fallback.
+
+Runs before any test module imports, so the whole suite collects even when
+optional dev dependencies (hypothesis) are missing — property tests then run
+against the deterministic fallback in ``repro.testing``.
+"""
+
+import os
+import sys
+
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                    "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+from repro.testing import install_hypothesis_fallback  # noqa: E402
+
+HYPOTHESIS_FALLBACK = install_hypothesis_fallback()

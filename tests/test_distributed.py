@@ -8,7 +8,6 @@ import subprocess
 import sys
 import textwrap
 
-import numpy as np
 import pytest
 
 from jax.sharding import PartitionSpec
@@ -23,7 +22,8 @@ _SCRIPT = textwrap.dedent("""
     from repro.models.model import forward, model_def
     from repro.models.param import materialize, logical_axes
     from repro.sharding import tree_shardings, spec_for
-    from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+    from repro.compat import activate_mesh, make_mesh
+    from jax.sharding import NamedSharding, PartitionSpec as P
 
     assert len(jax.devices()) == 8, jax.devices()
     arch = os.environ["TEST_ARCH"]
@@ -42,9 +42,8 @@ _SCRIPT = textwrap.dedent("""
     # unsharded reference (single device semantics)
     ref = forward(params, {"tokens": toks}, cfg)
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
-    with jax.set_mesh(mesh):
+    mesh = make_mesh((2, 4), ("data", "model"))
+    with activate_mesh(mesh):
         p_sh = tree_shardings(logical_axes(pdefs), params, mesh)
         params_s = jax.device_put(params, p_sh)
         toks_s = jax.device_put(
@@ -71,19 +70,15 @@ def test_sharded_equals_unsharded(arch):
 
 
 def test_spec_for_drops_nondivisible():
-    import jax
-    from jax.sharding import AxisType
+    from repro.compat import make_mesh
     from repro.sharding import spec_for
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     # size-1 mesh axes -> everything replicated
     spec = spec_for(("embed", "heads"), (64, 8), mesh)
     assert spec == PartitionSpec(None, None)
 
 
 def test_spec_for_rules():
-    import jax
-    from jax.sharding import AxisType
     from repro.sharding import spec_for
 
     class FakeMesh:

@@ -17,7 +17,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_arch
-from repro.models.model import ModelConfig, forward, model_def
+from repro.models.model import forward, model_def
 from repro.models.param import materialize
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -66,7 +66,8 @@ _SCRIPT = textwrap.dedent("""
     from repro.models.model import forward, model_def
     from repro.models.param import materialize, logical_axes
     from repro.sharding import tree_shardings, spec_for
-    from jax.sharding import AxisType, NamedSharding
+    from repro.compat import activate_mesh, make_mesh
+    from jax.sharding import NamedSharding
 
     cfg = get_arch("qwen1.5-4b").smoke
     # 4-way model axis; qwen smoke has 4 heads -> divisible, so FORCE the
@@ -80,9 +81,8 @@ _SCRIPT = textwrap.dedent("""
     toks = jnp.asarray(rng.integers(0, cfg.vocab, (4, 16)), jnp.int32)
     ref = forward(params, {"tokens": toks}, cfg)   # no mesh: knobs dormant
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
-    with jax.set_mesh(mesh):
+    mesh = make_mesh((2, 4), ("data", "model"))
+    with activate_mesh(mesh):
         p_sh = tree_shardings(logical_axes(pdefs), params, mesh)
         params_s = jax.device_put(params, p_sh)
         toks_s = jax.device_put(toks, NamedSharding(

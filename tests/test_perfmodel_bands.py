@@ -9,7 +9,6 @@ DESIGN.md §Reproduction-fidelity:
   paper (their packing accounting for 5x5 kernels is not fully specified).
 """
 
-import math
 
 import pytest
 
@@ -17,11 +16,10 @@ from repro.core.perfmodel import (
     DATAFLOWS,
     MacroConfig,
     compare_networks,
-    cost_ws_base,
     cost_ws_convdk,
     reduction,
 )
-from repro.core.tiling import DWLayer, MacroConfig as MC, plan_layer
+from repro.core.tiling import DWLayer, plan_layer
 from repro.core.workloads import NETWORKS, PAPER_BANDS
 
 MACRO = MacroConfig()
@@ -199,7 +197,6 @@ def test_macs_conserved():
     """Every dataflow performs the same MAC count (same convolution)."""
     for name, layers in NETWORKS.items():
         for layer in layers:
-            ws = cost_ws_base(layer, MACRO)
             dk = cost_ws_convdk(layer, MACRO)
             # ConvDK compute cycles x 64 >= exact MAC-output count; tail-strip
             # waste is worst for 5x5 kernels on 7x7 maps (out_len 10 vs 7).

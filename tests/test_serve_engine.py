@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import get_arch, list_archs
+from repro.configs import get_arch
 from repro.models.model import forward, model_def
 from repro.models.param import materialize
 from repro.serve.engine import Engine, ServeConfig

@@ -7,9 +7,7 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.configs import get_arch
 from repro.data.pipeline import DataConfig, DataState, make_batch
 from repro.launch.mesh import make_local_mesh
 from repro.launch.train import Trainer
