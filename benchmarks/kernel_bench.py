@@ -3,10 +3,16 @@
 
 Emits ``name,us_per_call,derived`` CSV rows like benchmarks/run.py expects.
 
-``--fused`` additionally prints the fused-vs-staged-vs-XLA separable-block
-comparison: per-layer modeled HBM traffic for every MobileNet-V2 separable
-block (autotuned schedules) plus interpret-mode wall times on one block.
-Exits nonzero if any layer's fused traffic is not strictly below staged.
+``--fused`` additionally prints the fused-vs-staged traffic comparison for
+BOTH fused block families (autotuned schedules):
+
+* every MobileNet-V2 separable block (single-pass fused kernel), and
+* every EfficientNet-B0 MBConv block (two-pass SE-aware fused kernel,
+  per-layer retain/recompute choice),
+
+plus interpret-mode wall times on one block of each.  Exits nonzero if any
+layer's fused traffic is not strictly below the staged baseline — the CI
+gate for the tentpole claim.
 """
 
 from __future__ import annotations
@@ -19,12 +25,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.autotune import get_fused_schedule
-from repro.core.workloads import MOBILENET_V2_SEPARABLE
+from repro.core.autotune import get_fused_schedule, get_mbconv_schedule
+from repro.core.workloads import EFFICIENTNET_B0_MBCONV, MOBILENET_V2_SEPARABLE
 from repro.kernels import (
     causal_conv1d_ref, convdk_causal_conv1d, convdk_depthwise2d,
-    convdk_fused_separable, convdk_separable_staged, depthwise2d_ref,
-    separable_ref,
+    convdk_fused_separable, convdk_mbconv_fused, convdk_mbconv_staged,
+    convdk_separable_staged, depthwise2d_ref, mbconv_ref, separable_ref,
 )
 
 
@@ -91,14 +97,70 @@ def fused_traffic_report() -> bool:
     return ok
 
 
+def mbconv_traffic_report() -> bool:
+    """Modeled HBM traffic of the two-pass fused MBConv pipeline vs the
+    staged DW->HBM->SE->PW baseline for every EfficientNet-B0 MBConv block
+    (batch 1, f32), with the autotuned (tile_h, retain/recompute) schedule.
+    Returns True iff the two-pass traffic is strictly below staged for ALL
+    layers."""
+    print("layer,c_in,c_mid,c_out,hw,k,s,tile_h,mode,"
+          "fused_bytes,staged_bytes,saving_pct")
+    ok = True
+    for i, (ci, co, e, k, s, hw) in enumerate(EFFICIENTNET_B0_MBCONV):
+        sch = get_mbconv_schedule(1, hw, hw, ci, ci * e, co, k, s)
+        f, st = sch.traffic.total_bytes, sch.staged_traffic.total_bytes
+        ok &= f < st
+        print(f"b0_mbconv{i},{ci},{ci * e},{co},{hw},{k},{s},"
+              f"{sch.tile_h},{sch.mode},{f},{st},"
+              f"{100 * sch.modeled_saving:.1f}")
+    print(f"# two-pass fused strictly below staged on all layers: {ok}")
+    return ok
+
+
+def mbconv_walltime_row():
+    """Interpret-mode wall times + numerics check on one small MBConv block
+    (fused two-pass vs staged vs the pure-lax reference)."""
+    rng = np.random.default_rng(1)
+    ci, e, co, k = 16, 4, 24, 3
+    cm, cse = ci * e, max(1, ci // 4)
+    r = lambda *s: jnp.asarray(rng.normal(size=s), jnp.float32)  # noqa: E731
+    args = (r(1, 28, 28, ci), r(ci, cm), r(k, k, cm) * 0.3,
+            r(cm, cse), r(cse) * 0.1, r(cse, cm), r(cm) * 0.1, r(cm, co))
+    us_f = _time(lambda: convdk_mbconv_fused(*args, stride=2, mode="retain",
+                                             interpret=True))
+    us_r = _time(lambda: convdk_mbconv_fused(*args, stride=2,
+                                             mode="recompute",
+                                             interpret=True))
+    us_s = _time(lambda: convdk_mbconv_staged(*args, stride=2,
+                                              interpret=True))
+    us_x = _time(lambda: mbconv_ref(*args, stride=2))
+    err = float(jnp.abs(
+        convdk_mbconv_fused(*args, stride=2, mode="retain", interpret=True)
+        - mbconv_ref(*args, stride=2)).max())
+    return [
+        ("convdk_mbconv_retain_28x28x16e4to24_interp", us_f,
+         f"maxerr={err:.1e}"),
+        ("convdk_mbconv_recompute_28x28x16e4to24_interp", us_r, ""),
+        ("convdk_mbconv_staged_28x28x16e4to24_interp", us_s, ""),
+        ("xla_mbconv_28x28x16e4to24_ref", us_x, ""),
+    ]
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--fused", action="store_true",
-                    help="print the fused-vs-staged MobileNet-V2 HBM "
-                         "traffic comparison (exit 1 if fused loses a layer)")
+                    help="print the fused-vs-staged HBM traffic comparison "
+                         "for every MobileNet-V2 separable block AND every "
+                         "EfficientNet-B0 MBConv block (exit 1 if the fused "
+                         "pipeline loses any layer)")
     args = ap.parse_args()
     if args.fused:
-        sys.exit(0 if fused_traffic_report() else 1)
+        ok = fused_traffic_report()
+        print()
+        ok &= mbconv_traffic_report()
+        for name, us, derived in mbconv_walltime_row():
+            print(f"{name},{us:.1f},{derived}")
+        sys.exit(0 if ok else 1)
     for name, us, derived in rows():
         print(f"{name},{us:.1f},{derived}")
 

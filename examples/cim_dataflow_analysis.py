@@ -1,32 +1,45 @@
 """Reproduce the paper's full evaluation (Figs. 7-8) and print the
 comparison against every reported band.
 
-    PYTHONPATH=src python examples/cim_dataflow_analysis.py
+    PYTHONPATH=src python -m examples.cim_dataflow_analysis
+
+Runnable as a module (like the other entry points) from the repo root; a
+direct ``python examples/cim_dataflow_analysis.py`` also works — the repo
+root is resolved from this file, not from the current directory.
 """
 
 import sys
+from pathlib import Path
 
-sys.path.insert(0, ".")
+if __package__ in (None, ""):                 # direct-script invocation
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
 from benchmarks.cim_tables import run_all  # noqa: E402
 
 from repro.core.workloads import PAPER_BANDS  # noqa: E402
 
-results = run_all()
 
-print("\n== reproduction vs paper bands ==")
-ws = [v["ws"] for v in results["fig7c"].values()]
-lo, hi = PAPER_BANDS["buffer_traffic_reduction_ws"]
-print(f"buffer traffic reduction (WS): ours {min(ws):.1f}..{max(ws):.1f} "
-      f"| paper {lo}..{hi}")
-tot = [v["ws_total"] for v in results["fig7d"].values()]
-lo, hi = PAPER_BANDS["energy_reduction_ws"]
-print(f"traffic energy reduction (WS): ours {min(tot):.1f}..{max(tot):.1f} "
-      f"| paper {lo}..{hi}")
-lat = [v["ws"] for v in results["fig7e"].values()]
-lo, hi = PAPER_BANDS["latency_reduction_ws"]
-print(f"latency reduction (WS):        ours {min(lat):.1f}..{max(lat):.1f} "
-      f"| paper {lo}..{hi}")
-f8 = [v["ws"] for v in results["fig8"].values()]
-lo, hi = PAPER_BANDS["buffer_latency_reduction_ws"]
-print(f"buffer-latency reduction (WS): ours {min(f8):.1f}..{max(f8):.1f} "
-      f"| paper {lo}..{hi}")
+def main():
+    results = run_all()
+
+    print("\n== reproduction vs paper bands ==")
+    ws = [v["ws"] for v in results["fig7c"].values()]
+    lo, hi = PAPER_BANDS["buffer_traffic_reduction_ws"]
+    print(f"buffer traffic reduction (WS): ours {min(ws):.1f}..{max(ws):.1f} "
+          f"| paper {lo}..{hi}")
+    tot = [v["ws_total"] for v in results["fig7d"].values()]
+    lo, hi = PAPER_BANDS["energy_reduction_ws"]
+    print(f"traffic energy reduction (WS): ours {min(tot):.1f}..{max(tot):.1f} "
+          f"| paper {lo}..{hi}")
+    lat = [v["ws"] for v in results["fig7e"].values()]
+    lo, hi = PAPER_BANDS["latency_reduction_ws"]
+    print(f"latency reduction (WS):        ours {min(lat):.1f}..{max(lat):.1f} "
+          f"| paper {lo}..{hi}")
+    f8 = [v["ws"] for v in results["fig8"].values()]
+    lo, hi = PAPER_BANDS["buffer_latency_reduction_ws"]
+    print(f"buffer-latency reduction (WS): ours {min(f8):.1f}..{max(f8):.1f} "
+          f"| paper {lo}..{hi}")
+
+
+if __name__ == "__main__":
+    main()

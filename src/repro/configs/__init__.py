@@ -1,5 +1,11 @@
 from .base import SHAPES, ArchSpec, ShapeCell, get_arch, list_archs
+from .efficientnet_b0 import (
+    efficientnet_b0,
+    efficientnet_b0_smoke,
+    efficientnet_b0_vlm,
+)
 from .specs import decode_state_specs, input_specs
 
 __all__ = ["SHAPES", "ArchSpec", "ShapeCell", "get_arch", "list_archs",
-           "input_specs", "decode_state_specs"]
+           "input_specs", "decode_state_specs", "efficientnet_b0",
+           "efficientnet_b0_smoke", "efficientnet_b0_vlm"]

@@ -28,13 +28,22 @@ class ConvKernelConfig:
     ``fused_separable`` routes ``models.common.separable_block`` through the
     single-pass ``kernels.convdk_fused_separable`` (in-kernel strip staging,
     DW+PW in one VMEM residency); off = the staged two-kernel pipeline.
-    ``autotune`` picks ``tile_h`` per layer shape from the HBM traffic model
-    (``core.autotune``); off = the fixed ``tile_h`` default.
+    ``fused_mbconv`` routes ``models.mbconv.mbconv_block`` through the
+    TWO-PASS fused ``kernels.convdk_mbconv_fused`` (SE pool accumulated
+    on-chip in pass 1, SE gate folded into the projection in pass 2); off =
+    the staged DW->HBM->SE->PW baseline.
+    ``mbconv_mode`` pins the pass-2 DW source ("retain" | "recompute");
+    None lets the autotuner pick per layer shape from the traffic model.
+    ``autotune`` picks ``tile_h`` (and the MBConv mode) per layer shape from
+    the HBM traffic model (``core.autotune``); off = the fixed ``tile_h``
+    default.
     ``interpret`` forces Pallas interpret mode (None = auto: interpret on
     CPU backends, compiled Mosaic on TPU).
     """
 
     fused_separable: bool = True
+    fused_mbconv: bool = True
+    mbconv_mode: Optional[str] = None
     autotune: bool = True
     tile_h: int = 8
     interpret: Optional[bool] = None

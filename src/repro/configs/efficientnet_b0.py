@@ -1,0 +1,46 @@
+"""EfficientNet-B0 configs: the standalone classifier and the VLM stem.
+
+Two entry points, both running every MBConv block through the two-pass
+fused ConvDK pipeline (``kernels.convdk_mbconv_fused``):
+
+* ``efficientnet_b0()`` — the full B0 classifier config consumed by
+  ``models.mbconv.efficientnet_b0_def`` / ``efficientnet_b0_apply``
+  (`width_mult` scales it down to CI-sized instances with the exact B0
+  topology).
+* ``efficientnet_b0_vlm()`` — a VLM ``ModelConfig`` whose conv vision stem
+  uses SE-equipped MBConv blocks (``vision_stem_arch="mbconv"``) instead of
+  plain separable blocks, wiring the new subsystem into the multimodal
+  model zoo.
+"""
+
+from __future__ import annotations
+
+from ..models.mbconv import EFFNET_B0_STAGES, EffNetConfig
+from ..models.model import ModelConfig
+
+__all__ = ["EFFNET_B0_STAGES", "EffNetConfig", "efficientnet_b0",
+           "efficientnet_b0_vlm"]
+
+
+def efficientnet_b0(**overrides) -> EffNetConfig:
+    """The canonical EfficientNet-B0 (224x224, 1000 classes) config."""
+    return EffNetConfig(**overrides)
+
+
+def efficientnet_b0_smoke(**overrides) -> EffNetConfig:
+    """A CI-sized B0: same 16-block topology at 1/4 width."""
+    overrides.setdefault("width_mult", 0.25)
+    overrides.setdefault("num_classes", 10)
+    return EffNetConfig(**overrides)
+
+
+def efficientnet_b0_vlm(**overrides) -> ModelConfig:
+    """A small VLM whose vision frontend is an MBConv (SE) stem."""
+    defaults = dict(
+        name="effnet-b0-vlm", family="vlm", n_layers=2, d_model=128,
+        n_heads=4, n_kv_heads=4, head_dim=32, d_ff=256, vocab=256,
+        vision_stem=True, vision_stem_arch="mbconv", vision_stem_c0=16,
+        vision_stem_blocks=2,
+    )
+    defaults.update(overrides)
+    return ModelConfig(**defaults)

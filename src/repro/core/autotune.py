@@ -1,26 +1,48 @@
-"""Per-layer schedule selection for the fused separable ConvDK kernel.
+"""Per-layer schedule selection for the fused ConvDK kernels.
 
 MIREDO-style per-layer solving: instead of one fixed ``tile_h`` for every
-separable block, each layer shape gets its own fused schedule, chosen by the
-analytical HBM traffic model in ``core.perfmodel`` (primary) with an optional
-measured fallback sweep (ground truth when the model cannot separate
-candidates, or when ``mode="benchmark"`` is requested).
+block, each layer shape gets its own fused schedule, chosen by the
+analytical HBM traffic model in ``core.perfmodel`` (primary) with an
+optional measured fallback sweep (ground truth when the model cannot
+separate candidates, or when a deployment wants real timings).  Two block
+families are solved:
 
-The selection is cached per layer shape — schedule solving is trace-time
-work and must never re-run inside a jitted step.
+* separable (``FusedSchedule``): DW + PW in one pass — pick ``tile_h``;
+* MBConv (``MBConvSchedule``): expand + DW + SE + PW in two passes — pick
+  ``tile_h`` AND the pass-2 ``mode`` ("retain" writes the DW tensor to HBM
+  once and re-reads it; "recompute" re-runs expand+DW from the input
+  strips; the traffic model prices the crossover per layer shape).
+
+Schedule solving is trace-time work and must never re-run inside a jitted
+step, so selections are cached.  The cache has two layers:
+
+1. an in-process dict (always on), and
+2. an optional JSON file under a configurable cache directory, keyed by
+   (kernel kind, layer shape, dtype bytes, jax backend) — measured sweeps
+   and model picks survive restarts and can ship as a lookup table.
+   Enable it with ``set_schedule_cache_dir(path)`` or the
+   ``CONVDK_CACHE_DIR`` environment variable; entries recorded from a
+   measured sweep (``source == "measured"``) take priority over model
+   picks for the same key.
 """
 
 from __future__ import annotations
 
+import json
+import os
 import time
 from dataclasses import dataclass
-from functools import lru_cache
-from typing import Optional, Sequence, Tuple
+from pathlib import Path
+from typing import Dict, Optional, Sequence, Tuple
 
 from .perfmodel import (
+    MBCONV_MODES,
     HBMTraffic,
+    MBConvShape,
     SeparableShape,
     fused_separable_traffic,
+    mbconv_fused_traffic,
+    mbconv_staged_traffic,
     pick_channel_block,
     staged_separable_traffic,
 )
@@ -52,6 +74,24 @@ class FusedSchedule:
         return 1.0 - self.traffic.total_bytes / base if base else 0.0
 
 
+@dataclass(frozen=True)
+class MBConvSchedule:
+    """One selected two-pass schedule for ``convdk_mbconv_fused``."""
+
+    tile_h: int
+    mode: str                    # "retain" | "recompute"
+    ci_block: int
+    cm_block: int
+    co_block: int
+    traffic: HBMTraffic          # modeled two-pass traffic at (tile_h, mode)
+    staged_traffic: HBMTraffic   # modeled staged MBConv pipeline (baseline)
+
+    @property
+    def modeled_saving(self) -> float:
+        base = self.staged_traffic.total_bytes
+        return 1.0 - self.traffic.total_bytes / base if base else 0.0
+
+
 def _round_up(x: int, m: int) -> int:
     return -(-x // m) * m
 
@@ -59,6 +99,147 @@ def _round_up(x: int, m: int) -> int:
 def _blocks(c: int, cap: int) -> int:
     return min(cap, _round_up(c, 8))
 
+
+# ---------------------------------------------------------------------------
+# persistent schedule cache
+# ---------------------------------------------------------------------------
+
+_CACHE_DIR_ENV = "CONVDK_CACHE_DIR"
+_CACHE_FILE = "convdk_schedules.json"
+
+
+def _backend() -> str:
+    try:
+        import jax
+        return jax.default_backend()
+    except Exception:  # pragma: no cover - jax always importable here
+        return "unknown"
+
+
+class ScheduleCache:
+    """Two-layer schedule cache: in-process dict + optional JSON file.
+
+    Disk entries store only the *decision* (tile_h, mode, source); traffic
+    numbers are deterministic functions of the shape and are rebuilt by the
+    model on load, so the file format survives model refinements.
+    """
+
+    def __init__(self, directory: Optional[Path]):
+        self.directory = Path(directory).expanduser() if directory else None
+        self._mem: Dict[str, dict] = {}
+        self._disk: Optional[Dict[str, dict]] = None   # lazily loaded
+
+    @property
+    def path(self) -> Optional[Path]:
+        return self.directory / _CACHE_FILE if self.directory else None
+
+    def _load_disk(self) -> Dict[str, dict]:
+        if self._disk is None:
+            self._disk = {}
+            if self.path is not None:
+                try:
+                    payload = json.loads(self.path.read_text())
+                    if payload.get("version") == 1:
+                        self._disk = dict(payload.get("entries", {}))
+                except (OSError, ValueError):
+                    pass                   # unreadable cache = empty cache
+        return self._disk
+
+    def _flush(self) -> None:
+        if self.path is None:
+            return
+        try:
+            self.directory.mkdir(parents=True, exist_ok=True)
+            tmp = self.path.with_suffix(".tmp")
+            tmp.write_text(json.dumps(
+                {"version": 1, "entries": self._load_disk()},
+                indent=1, sort_keys=True))
+            tmp.replace(self.path)
+        except OSError:
+            pass                           # persistence is best-effort
+
+    def get(self, key: str) -> Optional[dict]:
+        hit = self._mem.get(key)
+        if hit is not None:
+            return hit
+        hit = self._load_disk().get(key)
+        if hit is not None:
+            self._mem[key] = hit
+        return hit
+
+    def put(self, key: str, entry: dict, persist: bool = True) -> None:
+        self._mem[key] = entry
+        if persist and self.path is not None:
+            disk = self._load_disk()
+            # never let a model pick clobber a measured entry (malformed
+            # old entries — non-dicts — are overwritten, not honored)
+            old = disk.get(key)
+            if isinstance(old, dict) and old.get("source") == "measured" \
+                    and entry.get("source") != "measured":
+                return
+            disk[key] = entry
+            self._flush()
+
+    def clear_memory(self) -> None:
+        """Drop the in-process layer (tests: force a disk round-trip)."""
+        self._mem.clear()
+        self._disk = None
+
+
+_SCHEDULE_CACHE: Optional[ScheduleCache] = None
+
+
+def get_schedule_cache() -> ScheduleCache:
+    global _SCHEDULE_CACHE
+    if _SCHEDULE_CACHE is None:
+        env = os.environ.get(_CACHE_DIR_ENV)
+        _SCHEDULE_CACHE = ScheduleCache(Path(env) if env else None)
+    return _SCHEDULE_CACHE
+
+
+def set_schedule_cache_dir(directory: Optional[os.PathLike]) -> ScheduleCache:
+    """Point the persistent schedule cache at ``directory`` (None = memory
+    only).  Resets the in-process layer so the new directory is
+    authoritative."""
+    global _SCHEDULE_CACHE
+    _SCHEDULE_CACHE = ScheduleCache(
+        Path(directory) if directory is not None else None)
+    return _SCHEDULE_CACHE
+
+
+def _tpu_key(tpu: TPUConfig) -> str:
+    """Every TPUConfig field enters the key: a schedule solved (and
+    VMEM-checked) under one config must never be reused for another."""
+    ths = "x".join(str(t) for t in tpu.tile_h_candidates)
+    return f"vmem{tpu.vmem_bytes}-cb{tpu.c_block}-th{ths}"
+
+
+def _sep_key(shape: SeparableShape, tpu: TPUConfig) -> str:
+    return (f"sep|b{shape.b}-h{shape.h}-w{shape.w}-ci{shape.c_in}"
+            f"-co{shape.c_out}-k{shape.k}-s{shape.s}|dtb{shape.dtype_bytes}"
+            f"|{_tpu_key(tpu)}|{_backend()}")
+
+
+def _mbconv_key(shape: MBConvShape, tpu: TPUConfig) -> str:
+    return (f"mbconv|b{shape.b}-h{shape.h}-w{shape.w}-ci{shape.c_in}"
+            f"-cm{shape.c_mid}-co{shape.c_out}-k{shape.k}-s{shape.s}"
+            f"|dtb{shape.dtype_bytes}|{_tpu_key(tpu)}|{_backend()}")
+
+
+def _entry_tile_h(hit, out_h: int):
+    """Validated tile_h from a cache entry, or None if the entry is
+    malformed or stale (a bad cache file must degrade to the model, never
+    crash schedule lookup)."""
+    try:
+        tile_h = int(hit["tile_h"])
+    except (TypeError, KeyError, ValueError):
+        return None
+    return tile_h if 1 <= tile_h <= out_h else None
+
+
+# ---------------------------------------------------------------------------
+# separable (single-pass) schedules
+# ---------------------------------------------------------------------------
 
 def vmem_footprint_bytes(shape: SeparableShape, tile_h: int,
                          tpu: TPUConfig) -> int:
@@ -116,31 +297,151 @@ def select_fused_schedule(shape: SeparableShape,
     return min(cands, key=lambda c: (c.traffic.total_bytes, -c.tile_h))
 
 
-@lru_cache(maxsize=512)
-def _cached_schedule(shape: SeparableShape, tpu: TPUConfig) -> FusedSchedule:
-    return select_fused_schedule(shape, tpu)
+def _schedule_at(shape: SeparableShape, tile_h: int,
+                 tpu: TPUConfig) -> FusedSchedule:
+    return FusedSchedule(
+        tile_h=tile_h,
+        ci_block=pick_channel_block(shape.c_in, tpu.c_block),
+        co_block=_blocks(shape.c_out, tpu.c_block),
+        traffic=fused_separable_traffic(shape, tile_h, tpu.c_block),
+        staged_traffic=staged_separable_traffic(shape, tile_h, tpu.c_block),
+    )
 
 
 def get_fused_schedule(
     b: int, h: int, w: int, c_in: int, c_out: int, k: int, s: int,
     dtype_bytes: int = 4, tpu: TPUConfig = TPUConfig(),
 ) -> FusedSchedule:
-    """Cached per-layer-shape schedule lookup (trace-time safe)."""
+    """Cached per-layer-shape schedule lookup (trace-time safe).
+
+    Consults the in-process cache, then the JSON cache (where a measured
+    sweep may have recorded ground truth), then the analytical model."""
     shape = SeparableShape(b=b, h=h, w=w, c_in=c_in, c_out=c_out, k=k, s=s,
                            dtype_bytes=dtype_bytes)
-    return _cached_schedule(shape, tpu)
+    cache = get_schedule_cache()
+    key = _sep_key(shape, tpu)
+    hit = cache.get(key)
+    tile_h = _entry_tile_h(hit, shape.out_h) if hit is not None else None
+    if tile_h is not None:
+        return _schedule_at(shape, tile_h, tpu)
+    sched = select_fused_schedule(shape, tpu)
+    cache.put(key, {"tile_h": sched.tile_h, "source": "model",
+                    "recorded_at": time.time()})
+    return sched
 
+
+# ---------------------------------------------------------------------------
+# MBConv (two-pass) schedules
+# ---------------------------------------------------------------------------
+
+def mbconv_vmem_footprint_bytes(shape: MBConvShape, tile_h: int,
+                                tpu: TPUConfig) -> int:
+    """Modeled VMEM residency of one two-pass MBConv grid cell.
+
+    The dominant term is the f32 expand accumulator over the staged strip
+    window at ``cm_block`` lanes (pass 1 and recompute pass 2 share it);
+    pass 2 adds the f32 projection accumulator."""
+    ci = pick_channel_block(shape.c_in, tpu.c_block)
+    cm = pick_channel_block(shape.c_mid, tpu.c_block)
+    co = _blocks(shape.c_out, tpu.c_block)
+    tile_h = max(1, min(tile_h, shape.out_h))
+    in_rows = (tile_h - 1) * shape.s + shape.k
+    w_need = (shape.out_w - 1) * shape.s + shape.k
+    x_win = in_rows * shape.padded_w * ci * shape.dtype_bytes
+    exp_acc = in_rows * w_need * cm * 4
+    dw_blk = tile_h * shape.out_w * cm * 4
+    proj_acc = tile_h * shape.out_w * co * 4
+    weights = (ci * cm + shape.k * shape.k * cm + cm * co) * shape.dtype_bytes
+    return x_win + exp_acc + dw_blk + proj_acc + weights
+
+
+def candidate_mbconv_schedules(
+    shape: MBConvShape, tpu: TPUConfig = TPUConfig()
+) -> Tuple[MBConvSchedule, ...]:
+    """All VMEM-feasible (tile_h, mode) schedules, model-priced."""
+    ci = pick_channel_block(shape.c_in, tpu.c_block)
+    cm = pick_channel_block(shape.c_mid, tpu.c_block)
+    co = _blocks(shape.c_out, tpu.c_block)
+    out: list[MBConvSchedule] = []
+    seen = set()
+    ths = [max(1, min(th, shape.out_h)) for th in tpu.tile_h_candidates]
+    feasible = [th for th in ths
+                if mbconv_vmem_footprint_bytes(shape, th, tpu)
+                <= tpu.vmem_bytes]
+    for th in feasible or [1]:
+        if th in seen:
+            continue
+        seen.add(th)
+        staged = mbconv_staged_traffic(shape, th, tpu.c_block)
+        for mode in MBCONV_MODES:
+            out.append(MBConvSchedule(
+                tile_h=th, mode=mode, ci_block=ci, cm_block=cm, co_block=co,
+                traffic=mbconv_fused_traffic(shape, th, mode, tpu.c_block),
+                staged_traffic=staged,
+            ))
+    return tuple(out)
+
+
+def select_mbconv_schedule(shape: MBConvShape,
+                           tpu: TPUConfig = TPUConfig()) -> MBConvSchedule:
+    """Pick (tile_h, mode) minimizing modeled two-pass HBM traffic (ties ->
+    larger tile_h, then retain: one DW round-trip beats recompute MACs)."""
+    cands = candidate_mbconv_schedules(shape, tpu)
+    return min(cands, key=lambda c: (c.traffic.total_bytes, -c.tile_h,
+                                     c.mode != "retain"))
+
+
+def _mbconv_schedule_at(shape: MBConvShape, tile_h: int, mode: str,
+                        tpu: TPUConfig) -> MBConvSchedule:
+    return MBConvSchedule(
+        tile_h=tile_h, mode=mode,
+        ci_block=pick_channel_block(shape.c_in, tpu.c_block),
+        cm_block=pick_channel_block(shape.c_mid, tpu.c_block),
+        co_block=_blocks(shape.c_out, tpu.c_block),
+        traffic=mbconv_fused_traffic(shape, tile_h, mode, tpu.c_block),
+        staged_traffic=mbconv_staged_traffic(shape, tile_h, tpu.c_block),
+    )
+
+
+def get_mbconv_schedule(
+    b: int, h: int, w: int, c_in: int, c_mid: int, c_out: int, k: int,
+    s: int, se_ratio: float = 0.25, dtype_bytes: int = 4,
+    tpu: TPUConfig = TPUConfig(),
+) -> MBConvSchedule:
+    """Cached per-layer-shape two-pass schedule lookup (trace-time safe)."""
+    shape = MBConvShape(b=b, h=h, w=w, c_in=c_in, c_mid=c_mid, c_out=c_out,
+                        k=k, s=s, se_ratio=se_ratio, dtype_bytes=dtype_bytes)
+    cache = get_schedule_cache()
+    key = _mbconv_key(shape, tpu)
+    hit = cache.get(key)
+    tile_h = _entry_tile_h(hit, shape.out_h) if hit is not None else None
+    if tile_h is not None and isinstance(hit, dict) \
+            and hit.get("mode") in MBCONV_MODES:
+        return _mbconv_schedule_at(shape, tile_h, hit["mode"], tpu)
+    sched = select_mbconv_schedule(shape, tpu)
+    cache.put(key, {"tile_h": sched.tile_h, "mode": sched.mode,
+                    "source": "model", "recorded_at": time.time()})
+    return sched
+
+
+# ---------------------------------------------------------------------------
+# measured fallback
+# ---------------------------------------------------------------------------
 
 def benchmark_fused_sweep(
     x, w_dw, w_pw, *, stride: int, padding: str = "SAME",
     tile_hs: Optional[Sequence[int]] = None, iters: int = 3,
-    interpret: Optional[bool] = None,
+    interpret: Optional[bool] = None, persist: bool = False,
+    tpu: TPUConfig = TPUConfig(),
 ) -> Tuple[int, Tuple[Tuple[int, float], ...]]:
     """Measured fallback: time the real fused kernel per candidate tile_h.
 
     Returns (best_tile_h, ((tile_h, seconds_per_call), ...)).  Use when the
     analytical model ties candidates or a deployment wants ground truth; the
-    sweep runs each candidate ``iters`` times after one warmup call.
+    sweep runs each candidate ``iters`` times after one warmup call.  With
+    ``persist=True`` the winning tile_h is recorded in the schedule cache as
+    a ``"measured"`` entry (which outranks model picks and, when a cache dir
+    is configured, survives restarts).
     """
     import jax
 
@@ -160,4 +461,13 @@ def benchmark_fused_sweep(
             jax.block_until_ready(fn())
         results.append((th, (time.perf_counter() - t0) / iters))
     best = min(results, key=lambda r: r[1])[0]
+    if persist:
+        b, h, w_in, c_in = x.shape
+        shape = SeparableShape(
+            b=b, h=h, w=w_in, c_in=c_in, c_out=w_pw.shape[1],
+            k=w_dw.shape[0], s=stride, dtype_bytes=x.dtype.itemsize)
+        get_schedule_cache().put(
+            _sep_key(shape, tpu),
+            {"tile_h": best, "source": "measured", "recorded_at": time.time(),
+             "timings_s": {str(th): t for th, t in results}})
     return best, tuple(results)

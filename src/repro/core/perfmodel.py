@@ -466,6 +466,10 @@ def staged_separable_traffic(
     return HBMTraffic(reads, writes, shape.dtype_bytes)
 
 
+def _n_co_blocks(c_out: int, c_block: int) -> int:
+    return -(-c_out // min(c_block, max(8, _round_up(c_out, 8))))
+
+
 def fused_separable_traffic(
     shape: SeparableShape, tile_h: int, c_block: int = 128
 ) -> HBMTraffic:
@@ -484,4 +488,180 @@ def fused_separable_traffic(
     w_pw = shape.c_in * shape.c_out * n_th
     reads = strips * n_co + w_dw + w_pw
     writes = out
+    return HBMTraffic(reads, writes, shape.dtype_bytes)
+
+
+# ---------------------------------------------------------------------------
+# MBConv (EfficientNet) two-pass traffic model
+#
+# The SE squeeze (global pool) between DW and PW breaks the single-strip
+# residency of the fused separable pipeline: the projection cannot start
+# until every strip's DW output has been pooled.  The two-pass fused
+# schedule keeps the DW tensor out of the staged HBM round-trips anyway:
+#
+# * pass 1: expand-PW + DW per strip, the SE pool accumulated on-chip; the
+#   DW output is either RETAINED (written once to HBM, re-read once by pass
+#   2) or DISCARDED (pass 2 recomputes expand+DW from the input strips).
+# * pass 2: the SE scale folds into the projection-PW contraction in the
+#   same VMEM residency as the (retained or recomputed) DW block.
+#
+# The retain/recompute crossover is a pure traffic tradeoff: retain pays
+# E * (1 + n_co) words for the DW tensor E; recompute pays the input strips
+# and expand/DW weights again, n_co more times.  ``mbconv_fused_traffic``
+# prices both so the autotuner can pick per layer shape.
+# ---------------------------------------------------------------------------
+
+
+MBCONV_MODES: Tuple[str, ...] = ("retain", "recompute")
+
+
+@dataclass(frozen=True)
+class MBConvShape:
+    """One MBConv block instance as the TPU kernels see it."""
+
+    b: int          # batch
+    h: int          # ifmap height (pre-padding)
+    w: int          # ifmap width
+    c_in: int       # block input channels
+    c_mid: int      # expanded channels (the DW / SE width)
+    c_out: int      # projection output channels
+    k: int          # square DW kernel
+    s: int          # stride
+    se_ratio: float = 0.25
+    dtype_bytes: int = 4
+
+    @property
+    def out_h(self) -> int:
+        return -(-self.h // self.s)
+
+    @property
+    def out_w(self) -> int:
+        return -(-self.w // self.s)
+
+    @property
+    def padded_w(self) -> int:
+        return (self.out_w - 1) * self.s + self.k
+
+    @property
+    def padded_h(self) -> int:
+        return (self.out_h - 1) * self.s + self.k
+
+    @property
+    def c_se(self) -> int:
+        """SE bottleneck width — EfficientNet sizes it off the BLOCK INPUT
+        channels, not the expanded width."""
+        return max(1, int(self.c_in * self.se_ratio))
+
+    @property
+    def has_expand(self) -> bool:
+        return self.c_mid != self.c_in
+
+    @property
+    def se_words(self) -> int:
+        """SE MLP parameter words (two FCs + biases)."""
+        return 2 * self.c_mid * self.c_se + self.c_se + self.c_mid
+
+
+def _mbconv_common(shape: MBConvShape, tile_h: int, c_block: int):
+    n_th, in_rows = _strip_counts(
+        SeparableShape(b=shape.b, h=shape.h, w=shape.w, c_in=shape.c_in,
+                       c_out=shape.c_out, k=shape.k, s=shape.s), tile_h)
+    tile_h_eff = max(1, min(tile_h, shape.out_h))
+    cm_block = pick_channel_block(shape.c_mid, c_block)
+    n_cm = _round_up(shape.c_mid, cm_block) // cm_block
+    n_co = _n_co_blocks(shape.c_out, c_block)
+    strips = shape.b * n_th * in_rows * shape.padded_w * shape.c_in
+    # DW tensor words as retained on HBM (whole strips incl. masked rows)
+    e_rows = shape.b * n_th * tile_h_eff * shape.out_w * shape.c_mid
+    out = shape.b * shape.out_h * shape.out_w * shape.c_out
+    w_exp = shape.c_in * shape.c_mid if shape.has_expand else 0
+    w_dw = shape.k * shape.k * shape.c_mid
+    w_proj = shape.c_mid * shape.c_out
+    pool = shape.b * shape.c_mid
+    return n_th, n_cm, n_co, strips, e_rows, out, w_exp, w_dw, w_proj, pool
+
+
+def mbconv_fused_traffic(
+    shape: MBConvShape, tile_h: int, mode: str = "retain",
+    c_block: int = 128,
+) -> HBMTraffic:
+    """HBM traffic of the two-pass fused MBConv pipeline (one mode).
+
+    Pass 1 reads each input strip once per c_mid block (expand reduction
+    innermost) and writes only the on-chip-accumulated SE pool — plus the
+    DW tensor once when ``mode == "retain"``.  Pass 2 reads the retained DW
+    tensor once per c_out block, or (``mode == "recompute"``) re-reads the
+    input strips and expand/DW weights instead; either way the SE scale and
+    projection happen in the same VMEM residency, and the only activation
+    write of the whole block is the final output.
+    """
+    if mode not in MBCONV_MODES:
+        raise ValueError(mode)
+    (n_th, n_cm, n_co, strips, e_rows, out, w_exp, w_dw, w_proj,
+     pool) = _mbconv_common(shape, tile_h, c_block)
+    scale = pool                                   # SE gate, (B, C_mid) words
+    # pass 1: strips per c_mid block + per-strip weight refetches + pool
+    reads = strips * n_cm + (w_exp + w_dw) * n_th
+    writes = pool
+    # SE MLP between passes (host-side; tiny but accounted)
+    reads += pool + shape.se_words
+    writes += scale
+    # pass 2
+    if mode == "retain":
+        writes += e_rows                           # pass-1 DW retain write
+        reads += e_rows * n_co + scale * n_th * n_co + w_proj * n_th
+    else:
+        reads += (strips * n_cm * n_co + (w_exp + w_dw) * n_th * n_co
+                  + scale * n_th * n_co + w_proj * n_th)
+    writes += out
+    return HBMTraffic(reads, writes, shape.dtype_bytes)
+
+
+def mbconv_best_fused_traffic(
+    shape: MBConvShape, tile_h: int, c_block: int = 128
+) -> Tuple[str, HBMTraffic]:
+    """(mode, traffic) of the cheaper two-pass variant at this tile_h."""
+    priced = [(m, mbconv_fused_traffic(shape, tile_h, m, c_block))
+              for m in MBCONV_MODES]
+    return min(priced, key=lambda mt: mt[1].total_bytes)
+
+
+def mbconv_staged_traffic(
+    shape: MBConvShape, tile_h: int, c_block: int = 128
+) -> HBMTraffic:
+    """HBM traffic of the staged MBConv pipeline (the PR-1-era baseline):
+
+    1. expand PW: read x + w_exp, write the expanded map,
+    2. stage_row_strips over the expanded map (halo rows duplicated in HBM),
+    3. DW kernel: read strips + taps, write the DW output,
+    4. SE: read the DW output for the pool, run the MLP, then re-read AND
+       re-write the DW output applying the gate,
+    5. projection PW: re-read the scaled DW output + w_proj, write out.
+
+    Exactly the weight-stationary-baseline behaviour the paper criticizes:
+    the squeeze forces the whole DW tensor through HBM four more times.
+    """
+    (n_th, _n_cm, _n_co, _strips, e_rows, out, w_exp, w_dw, w_proj,
+     pool) = _mbconv_common(shape, tile_h, c_block)
+    x_words = shape.b * shape.h * shape.w * shape.c_in
+    xe = shape.b * shape.h * shape.w * shape.c_mid
+    xe_pad = shape.b * shape.padded_h * shape.padded_w * shape.c_mid
+    n_th_, in_rows = _strip_counts(
+        SeparableShape(b=shape.b, h=shape.h, w=shape.w, c_in=shape.c_mid,
+                       c_out=shape.c_out, k=shape.k, s=shape.s), tile_h)
+    strips_e = shape.b * n_th_ * in_rows * shape.padded_w * shape.c_mid
+    reads = (x_words + w_exp                      # expand
+             + xe_pad                             # staging read
+             + strips_e + w_dw                    # DW kernel
+             + e_rows + shape.se_words            # SE pool + MLP params
+             + e_rows + pool                      # gate apply read
+             + e_rows + w_proj)                   # projection read
+    writes = ((xe if shape.has_expand else 0)     # expanded map
+              + strips_e                          # staged strips
+              + e_rows                            # DW output
+              + pool                              # gate
+              + e_rows                            # scaled DW output
+              + out)
+    if not shape.has_expand:
+        reads -= x_words                          # no expand stage: DW stages
     return HBMTraffic(reads, writes, shape.dtype_bytes)

@@ -134,6 +134,34 @@ MOBILENET_V2_SEPARABLE: List[Tuple[DWLayer, int]] = list(
     zip(MOBILENET_V2, MOBILENET_V2_PW_OUT))
 
 
+# EfficientNet-B0 full MBConv blocks: (c_in, c_out, expand_ratio, k, s,
+# ifmap hw) per block [arXiv:1905.11946, Table 1; SE ratio 0.25 throughout].
+# The DW stage of each entry (c_in * expand_ratio channels at hw) must
+# reproduce the EFFICIENTNET_B0 DW table above — asserted below, and the
+# model builder in ``models.mbconv`` derives the same list from the stage
+# table (tests pin all three views together).
+EFFICIENTNET_B0_MBCONV: List[Tuple[int, int, int, int, int, int]] = [
+    (32, 16, 1, 3, 1, 112),      # MBConv1
+    (16, 24, 6, 3, 2, 112),      # stage 3 first
+    (24, 24, 6, 3, 1, 56),
+    (24, 40, 6, 5, 2, 56),       # stage 4 first
+    (40, 40, 6, 5, 1, 28),
+    (40, 80, 6, 3, 2, 28),       # stage 5 first
+    (80, 80, 6, 3, 1, 14),
+    (80, 80, 6, 3, 1, 14),
+    (80, 112, 6, 5, 1, 14),      # stage 6 (s = 1, 14x14)
+    (112, 112, 6, 5, 1, 14),
+    (112, 112, 6, 5, 1, 14),
+    (112, 192, 6, 5, 2, 14),     # stage 7 first
+    (192, 192, 6, 5, 1, 7),
+    (192, 192, 6, 5, 1, 7),
+    (192, 192, 6, 5, 1, 7),
+    (192, 320, 6, 3, 1, 7),      # stage 8
+]
+assert [(k, ci * e, s, hw) for ci, _co, e, k, s, hw
+        in EFFICIENTNET_B0_MBCONV] == _EFFB0
+
+
 NETWORKS: Dict[str, List[DWLayer]] = {
     "mobilenet_v1": MOBILENET_V1,
     "mobilenet_v2": MOBILENET_V2,

@@ -3,6 +3,7 @@ convolution) re-designed for the TPU memory hierarchy (DESIGN.md §Pillar B).
 """
 
 from .convdk_fused import convdk_fused_separable, fused_separable_pallas
+from .convdk_mbconv import convdk_mbconv_fused, convdk_mbconv_staged
 from .ops import (
     convdk_causal_conv1d,
     convdk_depthwise2d,
@@ -14,6 +15,7 @@ from .ref import (
     causal_conv1d_ref,
     causal_conv1d_update_ref,
     depthwise2d_ref,
+    mbconv_ref,
     separable_ref,
 )
 
@@ -21,6 +23,8 @@ __all__ = [
     "convdk_causal_conv1d",
     "convdk_depthwise2d",
     "convdk_fused_separable",
+    "convdk_mbconv_fused",
+    "convdk_mbconv_staged",
     "convdk_separable_staged",
     "fused_separable_pallas",
     "stage_row_strips",
@@ -28,5 +32,6 @@ __all__ = [
     "causal_conv1d_ref",
     "causal_conv1d_update_ref",
     "depthwise2d_ref",
+    "mbconv_ref",
     "separable_ref",
 ]

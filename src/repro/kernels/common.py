@@ -1,0 +1,45 @@
+"""Shared helpers for the ConvDK kernel wrappers.
+
+One home for the padding arithmetic and interpret-mode default so the
+fused separable, MBConv and staged pipelines can never desynchronize on
+them.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+_DEFAULT_INTERPRET = jax.default_backend() == "cpu"
+
+
+def default_interpret() -> bool:
+    """Pallas interpret-mode default: interpret on CPU backends, compiled
+    Mosaic otherwise."""
+    return _DEFAULT_INTERPRET
+
+
+def round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def spatial_pads(
+    h: int, w_in: int, k_h: int, k_w: int, s: int, padding: str
+) -> Tuple[int, int, Tuple[Tuple[int, int], Tuple[int, int]]]:
+    """(out_h, out_w, ((top, bottom), (left, right))) for one conv layout.
+
+    SAME matches ``jax.lax.conv_general_dilated``'s split (extra pad goes
+    to the bottom/right); VALID pads nothing.
+    """
+    if padding == "SAME":
+        out_h, out_w = -(-h // s), -(-w_in // s)
+        ph = max(0, (out_h - 1) * s + k_h - h)
+        pw = max(0, (out_w - 1) * s + k_w - w_in)
+        pads = ((ph // 2, ph - ph // 2), (pw // 2, pw - pw // 2))
+    elif padding == "VALID":
+        out_h, out_w = (h - k_h) // s + 1, (w_in - k_w) // s + 1
+        pads = ((0, 0), (0, 0))
+    else:
+        raise ValueError(padding)
+    return out_h, out_w, pads

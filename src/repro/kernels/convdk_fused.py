@@ -48,13 +48,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from ..core.perfmodel import pick_channel_block
+from .common import default_interpret, round_up as _round_up, spatial_pads
 from .ref import _act_ref, separable_ref
-
-_DEFAULT_INTERPRET = jax.default_backend() == "cpu"
-
-
-def _round_up(x: int, m: int) -> int:
-    return -(-x // m) * m
 
 
 def _fused_kernel(x_ref, wdw_ref, wpw_ref, o_ref, acc_ref, *, k_h: int,
@@ -181,17 +176,7 @@ def _fused_impl(x, w_dw, w_pw, stride, padding, tile_h, dw_act, act,
     c_in_pw, c_out = w_pw.shape
     assert cw == c and c_in_pw == c, (cw, c_in_pw, c)
     s = stride
-
-    if padding == "SAME":
-        out_h, out_w = -(-h // s), -(-w_in // s)
-        ph = max(0, (out_h - 1) * s + k_h - h)
-        pw = max(0, (out_w - 1) * s + k_w - w_in)
-        pads = ((ph // 2, ph - ph // 2), (pw // 2, pw - pw // 2))
-    elif padding == "VALID":
-        out_h, out_w = (h - k_h) // s + 1, (w_in - k_w) // s + 1
-        pads = ((0, 0), (0, 0))
-    else:
-        raise ValueError(padding)
+    out_h, out_w, pads = spatial_pads(h, w_in, k_h, k_w, s, padding)
 
     # input channels: minimal-padding block (padding here costs real strip
     # reads and MACs); output channels: plain 128-lane cap — padding c_out
@@ -282,6 +267,6 @@ def convdk_fused_separable(
     activations.  Returns (B, H', W', C_out).
     """
     if interpret is None:
-        interpret = _DEFAULT_INTERPRET
+        interpret = default_interpret()
     return _fused_op(x, w_dw, w_pw, stride, padding, tile_h, dw_act, act,
                      interpret)

@@ -1,0 +1,529 @@
+"""Two-pass fused MBConv (EfficientNet) ConvDK Pallas kernels.
+
+EfficientNet's MBConv inserts squeeze-and-excitation between the depthwise
+and projection stages:
+
+    expand 1x1 -> act -> DW k x k / s -> act -> SE(global pool -> MLP ->
+    sigmoid gate) -> project 1x1 (+ residual)
+
+The SE *squeeze* is a global pool over the whole DW output, so the
+single-strip VMEM residency of ``convdk_fused_separable`` cannot cover the
+block: the projection of any strip depends on every strip's DW output.  The
+staged rendering therefore round-trips the full expanded DW tensor through
+HBM four extra times (DW write, pool read, gate read+write, projection
+read) — exactly the weight-stationary baseline traffic the paper eliminates
+for plain separable blocks.
+
+This module closes the gap with a **two-pass fused schedule**:
+
+* **Pass 1** (``_mbconv_pass1_kernel``): per (c_mid block, row strip), the
+  expand PW runs over the in-kernel-staged input window (reduction over
+  c_in blocks in the innermost grid dim), the DW taps consume the expanded
+  strip while it is still in VMEM, and the SE pool is accumulated on-chip
+  into a tiny (B, C_mid) output — masked so padded strip rows never enter
+  the pool.  The DW output either goes to HBM ONCE (``mode="retain"``) or
+  is discarded (``mode="recompute"``).
+* **SE MLP** (host-side, between passes): two tiny FCs + sigmoid on the
+  pooled (B, C_mid) vector — negligible traffic, accounted by the model.
+* **Pass 2**: the SE gate folds into the projection contraction in the same
+  VMEM residency as the DW block — read back from HBM (``retain``,
+  ``_mbconv_pass2_retain_kernel``) or recomputed from the input strips
+  (``recompute``, ``_mbconv_pass2_recompute_kernel``, same expand+DW loop
+  as pass 1).  The only activation write of the whole block is the final
+  output.
+
+Retain pays ``E * (1 + n_co)`` HBM words for the DW tensor ``E``; recompute
+re-reads the input strips and expand/DW weights ``n_co`` more times.  The
+crossover is priced per layer shape by ``core.perfmodel.mbconv_fused_traffic``
+and chosen by ``core.autotune.select_mbconv_schedule`` (MIREDO-style: the
+schedule is solved per block topology, not per op).
+
+Blocks with expansion ratio 1 (EfficientNet's MBConv1) pass the identity as
+``w_exp`` with ``exp_act=None`` — the kernel math is unchanged and exact.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..core.perfmodel import pick_channel_block
+from .common import default_interpret, round_up as _round_up, spatial_pads
+from .ref import _act_ref, mbconv_ref
+
+
+def _dw_taps(e, w_dw_ref, *, k_h, k_w, stride, tile_h, out_w):
+    """Algorithm-2 tap loop over an expanded strip resident in VMEM.
+
+    e: (in_rows, w_need, CM) f32 -> (tile_h, out_w, CM) f32.
+    """
+    s = stride
+    dw = jnp.zeros((tile_h, out_w, e.shape[-1]), jnp.float32)
+    for j in range(k_h):
+        for i in range(k_w):
+            xs = jax.lax.slice(
+                e,
+                (j, i, 0),
+                (j + s * (tile_h - 1) + 1, i + s * (out_w - 1) + 1,
+                 e.shape[-1]),
+                (s, s, 1),
+            )
+            dw = dw + xs * w_dw_ref[j, i].astype(jnp.float32)
+    return dw
+
+
+def _expand_accumulate(x_ref, wexp_ref, acc_ref, *, ti, ci, stride, k_h,
+                       k_w, tile_h, out_w):
+    """One c_in-block partial of the expand PW over the staged strip window.
+
+    Stages the overlapping ``in_rows`` row window with a dynamic ``pl.ds``
+    load (in-kernel staging: halo rows are re-read from the resident block,
+    never re-written to HBM) and contracts it with the (CI, CM) expand
+    block, accumulating across the innermost c_in grid dimension.
+    """
+    s = stride
+    in_rows = (tile_h - 1) * s + k_h
+    w_need = (out_w - 1) * s + k_w
+    x = x_ref[0, pl.ds(ti * tile_h * s, in_rows)][:, :w_need]
+    partial = jax.lax.dot_general(
+        x.reshape(in_rows * w_need, x.shape[-1]).astype(jnp.float32),
+        wexp_ref[:, :].astype(jnp.float32),
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).reshape(in_rows, w_need, -1)
+
+    @pl.when(ci == 0)
+    def _init():
+        acc_ref[...] = partial
+
+    @pl.when(ci > 0)
+    def _accumulate():
+        acc_ref[...] = acc_ref[...] + partial
+
+
+def _mbconv_pass1_kernel(x_ref, wexp_ref, wdw_ref, pool_ref, *rest, k_h,
+                         k_w, stride, tile_h, out_w, out_h,
+                         exp_act: Optional[str], dw_act: Optional[str],
+                         retain: bool):
+    """One (batch, c_mid-block, row-strip, c_in-block) grid cell of pass 1.
+
+    x_ref    : (1, H_tot, W_pad, CI)  unstaged input, full padded height
+    wexp_ref : (CI, CM)               expand-PW block
+    wdw_ref  : (k_h, k_w, CM)         depthwise taps
+    pool_ref : (1, 1, CM)             on-chip SE pool accumulator (sums)
+    rest     : (dw_out_ref,) acc_ref for retain, else just acc_ref
+    """
+    if retain:
+        dwo_ref, acc_ref = rest
+    else:
+        (acc_ref,) = rest
+    ti = pl.program_id(2)
+    ci = pl.program_id(3)
+    n_ci = pl.num_programs(3)
+    _expand_accumulate(x_ref, wexp_ref, acc_ref, ti=ti, ci=ci, stride=stride,
+                       k_h=k_h, k_w=k_w, tile_h=tile_h, out_w=out_w)
+
+    @pl.when(ci == n_ci - 1)
+    def _finish_strip():
+        e = _act_ref(acc_ref[...], exp_act)
+        dw = _dw_taps(e, wdw_ref, k_h=k_h, k_w=k_w, stride=stride,
+                      tile_h=tile_h, out_w=out_w)
+        dw = _act_ref(dw, dw_act)
+        # mask strip rows past out_h so they never enter the global pool
+        rows = jax.lax.broadcasted_iota(jnp.int32, (tile_h, out_w), 0) \
+            + ti * tile_h
+        masked = jnp.where((rows < out_h)[..., None], dw, 0.0)
+        sums = jnp.sum(masked, axis=(0, 1), keepdims=True)   # (1, 1, CM)
+
+        @pl.when(ti == 0)
+        def _pool_init():
+            pool_ref[...] = sums
+
+        @pl.when(ti > 0)
+        def _pool_accumulate():
+            pool_ref[...] = pool_ref[...] + sums
+
+        if retain:
+            dwo_ref[0] = dw.astype(dwo_ref.dtype)
+
+
+def _mbconv_pass2_recompute_kernel(x_ref, wexp_ref, wdw_ref, scale_ref,
+                                   wproj_ref, o_ref, acc_ref, proj_ref, *,
+                                   k_h, k_w, stride, tile_h, out_w,
+                                   exp_act: Optional[str],
+                                   dw_act: Optional[str]):
+    """One (batch, c_out-block, row-strip, c_mid-block, c_in-block) cell.
+
+    Recomputes expand+DW exactly as pass 1 (the DW tensor never existed in
+    HBM), multiplies by the SE gate and contracts with the projection block
+    — partial projection sums carried across the c_mid grid dimension.
+    """
+    ti = pl.program_id(2)
+    cm = pl.program_id(3)
+    ci = pl.program_id(4)
+    n_cm = pl.num_programs(3)
+    n_ci = pl.num_programs(4)
+    _expand_accumulate(x_ref, wexp_ref, acc_ref, ti=ti, ci=ci, stride=stride,
+                       k_h=k_h, k_w=k_w, tile_h=tile_h, out_w=out_w)
+
+    @pl.when(ci == n_ci - 1)
+    def _project():
+        e = _act_ref(acc_ref[...], exp_act)
+        dw = _dw_taps(e, wdw_ref, k_h=k_h, k_w=k_w, stride=stride,
+                      tile_h=tile_h, out_w=out_w)
+        dw = _act_ref(dw, dw_act) * scale_ref[0, 0].astype(jnp.float32)
+        partial = jax.lax.dot_general(
+            dw.reshape(tile_h * out_w, dw.shape[-1]),
+            wproj_ref[:, :].astype(jnp.float32),
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ).reshape(tile_h, out_w, -1)
+
+        @pl.when(cm == 0)
+        def _init():
+            proj_ref[...] = partial
+
+        @pl.when(cm > 0)
+        def _accumulate():
+            proj_ref[...] = proj_ref[...] + partial
+
+        @pl.when(cm == n_cm - 1)
+        def _finalize():
+            o_ref[0] = proj_ref[...].astype(o_ref.dtype)
+
+
+def _mbconv_pass2_retain_kernel(dw_ref, scale_ref, wproj_ref, o_ref,
+                                proj_ref, *, tile_h, out_w):
+    """One (batch, c_out-block, row-strip, c_mid-block) cell: read the
+    retained DW block back once, fold in the SE gate, contract with the
+    projection block (partial sums across the c_mid grid dimension)."""
+    cm = pl.program_id(3)
+    n_cm = pl.num_programs(3)
+    dw = dw_ref[0].astype(jnp.float32) * scale_ref[0, 0].astype(jnp.float32)
+    partial = jax.lax.dot_general(
+        dw.reshape(tile_h * out_w, dw.shape[-1]),
+        wproj_ref[:, :].astype(jnp.float32),
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).reshape(tile_h, out_w, -1)
+
+    @pl.when(cm == 0)
+    def _init():
+        proj_ref[...] = partial
+
+    @pl.when(cm > 0)
+    def _accumulate():
+        proj_ref[...] = proj_ref[...] + partial
+
+    @pl.when(cm == n_cm - 1)
+    def _finalize():
+        o_ref[0] = proj_ref[...].astype(o_ref.dtype)
+
+
+def mbconv_pass1_pallas(x_pad, w_exp, w_dw, *, stride, out_w, out_h, tile_h,
+                        n_th, ci_block, cm_block, exp_act, dw_act, retain,
+                        interpret):
+    """Raw pass-1 launch: (pool_sums, dw_retained-or-None)."""
+    b, h_tot, w_pad, ci_pad = x_pad.shape
+    k_h, k_w, cm_pad = w_dw.shape
+    grid = (b, cm_pad // cm_block, n_th, ci_pad // ci_block)
+    in_rows = (tile_h - 1) * stride + k_h
+    w_need = (out_w - 1) * stride + k_w
+
+    kernel = functools.partial(
+        _mbconv_pass1_kernel, k_h=k_h, k_w=k_w, stride=stride, tile_h=tile_h,
+        out_w=out_w, out_h=out_h, exp_act=exp_act, dw_act=dw_act,
+        retain=retain)
+    out_shape = [jax.ShapeDtypeStruct((b, 1, cm_pad), jnp.float32)]
+    out_specs = [pl.BlockSpec((1, 1, cm_block),
+                              lambda bi, cm, ti, ci: (bi, 0, cm))]
+    if retain:
+        out_shape.append(jax.ShapeDtypeStruct(
+            (b, n_th * tile_h, out_w, cm_pad), x_pad.dtype))
+        out_specs.append(pl.BlockSpec(
+            (1, tile_h, out_w, cm_block),
+            lambda bi, cm, ti, ci: (bi, ti, 0, cm)))
+    outs = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, h_tot, w_pad, ci_block),
+                         lambda bi, cm, ti, ci: (bi, 0, 0, ci)),
+            pl.BlockSpec((ci_block, cm_block),
+                         lambda bi, cm, ti, ci: (ci, cm)),
+            pl.BlockSpec((k_h, k_w, cm_block),
+                         lambda bi, cm, ti, ci: (0, 0, cm)),
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.VMEM((in_rows, w_need, cm_block), jnp.float32)],
+        interpret=interpret,
+    )(x_pad, w_exp, w_dw)
+    return (outs[0], outs[1]) if retain else (outs[0], None)
+
+
+def mbconv_pass2_recompute_pallas(x_pad, w_exp, w_dw, scale, w_proj, *,
+                                  stride, out_w, tile_h, n_th, ci_block,
+                                  cm_block, co_block, exp_act, dw_act,
+                                  interpret):
+    b, h_tot, w_pad, ci_pad = x_pad.shape
+    k_h, k_w, cm_pad = w_dw.shape
+    co_pad = w_proj.shape[1]
+    grid = (b, co_pad // co_block, n_th, cm_pad // cm_block,
+            ci_pad // ci_block)
+    in_rows = (tile_h - 1) * stride + k_h
+    w_need = (out_w - 1) * stride + k_w
+
+    kernel = functools.partial(
+        _mbconv_pass2_recompute_kernel, k_h=k_h, k_w=k_w, stride=stride,
+        tile_h=tile_h, out_w=out_w, exp_act=exp_act, dw_act=dw_act)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, h_tot, w_pad, ci_block),
+                         lambda bi, co, ti, cm, ci: (bi, 0, 0, ci)),
+            pl.BlockSpec((ci_block, cm_block),
+                         lambda bi, co, ti, cm, ci: (ci, cm)),
+            pl.BlockSpec((k_h, k_w, cm_block),
+                         lambda bi, co, ti, cm, ci: (0, 0, cm)),
+            pl.BlockSpec((1, 1, cm_block),
+                         lambda bi, co, ti, cm, ci: (bi, 0, cm)),
+            pl.BlockSpec((cm_block, co_block),
+                         lambda bi, co, ti, cm, ci: (cm, co)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, tile_h, out_w, co_block),
+            lambda bi, co, ti, cm, ci: (bi, ti, 0, co)),
+        out_shape=jax.ShapeDtypeStruct(
+            (b, n_th * tile_h, out_w, co_pad), x_pad.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((in_rows, w_need, cm_block), jnp.float32),
+            pltpu.VMEM((tile_h, out_w, co_block), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x_pad, w_exp, w_dw, scale, w_proj)
+
+
+def mbconv_pass2_retain_pallas(dw_ret, scale, w_proj, *, out_w, tile_h,
+                               n_th, cm_block, co_block, interpret):
+    b = dw_ret.shape[0]
+    cm_pad = dw_ret.shape[-1]
+    co_pad = w_proj.shape[1]
+    grid = (b, co_pad // co_block, n_th, cm_pad // cm_block)
+
+    kernel = functools.partial(_mbconv_pass2_retain_kernel, tile_h=tile_h,
+                               out_w=out_w)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tile_h, out_w, cm_block),
+                         lambda bi, co, ti, cm: (bi, ti, 0, cm)),
+            pl.BlockSpec((1, 1, cm_block),
+                         lambda bi, co, ti, cm: (bi, 0, cm)),
+            pl.BlockSpec((cm_block, co_block),
+                         lambda bi, co, ti, cm: (cm, co)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, tile_h, out_w, co_block),
+            lambda bi, co, ti, cm: (bi, ti, 0, co)),
+        out_shape=jax.ShapeDtypeStruct(
+            (b, n_th * tile_h, out_w, co_pad), dw_ret.dtype),
+        scratch_shapes=[pltpu.VMEM((tile_h, out_w, co_block), jnp.float32)],
+        interpret=interpret,
+    )(dw_ret, scale, w_proj)
+
+
+def _mbconv_impl(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj, stride,
+                 padding, tile_h, mode, exp_act, dw_act, interpret):
+    b, h, w_in, c_in = x.shape
+    k_h, k_w, c_mid = w_dw.shape
+    assert w_exp.shape == (c_in, c_mid), (w_exp.shape, c_in, c_mid)
+    c_out = w_proj.shape[1]
+    assert w_proj.shape[0] == c_mid, (w_proj.shape, c_mid)
+    assert mode in ("retain", "recompute"), mode
+    s = stride
+
+    out_h, out_w, pads = spatial_pads(h, w_in, k_h, k_w, s, padding)
+
+    ci_block = pick_channel_block(c_in)
+    ci_pad = _round_up(c_in, ci_block)
+    cm_block = pick_channel_block(c_mid)
+    cm_pad = _round_up(c_mid, cm_block)
+    co_block = min(128, _round_up(c_out, 8))
+    co_pad = _round_up(c_out, co_block)
+
+    xp = jnp.pad(x, ((0, 0), pads[0], pads[1], (0, ci_pad - c_in)))
+    wexp_p = jnp.pad(w_exp, ((0, ci_pad - c_in), (0, cm_pad - c_mid)))
+    wdw_p = jnp.pad(w_dw, ((0, 0), (0, 0), (0, cm_pad - c_mid)))
+    wproj_p = jnp.pad(w_proj, ((0, cm_pad - c_mid), (0, co_pad - c_out)))
+
+    # width cover for the i + s*(out_w-1) + 1 tap slice
+    need_w = (out_w - 1) * s + k_w
+    if need_w > xp.shape[2]:
+        xp = jnp.pad(xp, ((0, 0), (0, 0), (0, need_w - xp.shape[2]), (0, 0)))
+
+    tile_h = max(1, min(tile_h, out_h))
+    n_th = -(-out_h // tile_h)
+    # height cover so the last strip's pl.ds window stays in bounds
+    need_h = (n_th - 1) * tile_h * s + (tile_h - 1) * s + k_h
+    if need_h > xp.shape[1]:
+        xp = jnp.pad(xp, ((0, 0), (0, need_h - xp.shape[1]), (0, 0), (0, 0)))
+
+    pool, dw_ret = mbconv_pass1_pallas(
+        xp, wexp_p, wdw_p, stride=s, out_w=out_w, out_h=out_h, tile_h=tile_h,
+        n_th=n_th, ci_block=ci_block, cm_block=cm_block, exp_act=exp_act,
+        dw_act=dw_act, retain=(mode == "retain"), interpret=interpret)
+
+    # SE MLP on the on-chip-accumulated pool (masked rows excluded; the
+    # mean uses the true output element count)
+    mean = pool[:, 0, :c_mid] / float(out_h * out_w)          # (B, C_mid) f32
+    s1 = _act_ref(mean @ w_se1.astype(jnp.float32)
+                  + b_se1.astype(jnp.float32), "silu")
+    gate = _act_ref(s1 @ w_se2.astype(jnp.float32)
+                    + b_se2.astype(jnp.float32), "sigmoid")
+    scale = jnp.pad(gate, ((0, 0), (0, cm_pad - c_mid)))[:, None, :]
+
+    if mode == "retain":
+        out = mbconv_pass2_retain_pallas(
+            dw_ret, scale, wproj_p, out_w=out_w, tile_h=tile_h, n_th=n_th,
+            cm_block=cm_block, co_block=co_block, interpret=interpret)
+    else:
+        out = mbconv_pass2_recompute_pallas(
+            xp, wexp_p, wdw_p, scale, wproj_p, stride=s, out_w=out_w,
+            tile_h=tile_h, n_th=n_th, ci_block=ci_block, cm_block=cm_block,
+            co_block=co_block, exp_act=exp_act, dw_act=dw_act,
+            interpret=interpret)
+    return out[:, :out_h, :, :c_out]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(8, 9, 10, 11, 12, 13, 14))
+def _mbconv_op(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj, stride,
+               padding, tile_h, mode, exp_act, dw_act, interpret):
+    return _mbconv_impl(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj,
+                        stride, padding, tile_h, mode, exp_act, dw_act,
+                        interpret)
+
+
+def _mbconv_fwd(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj, stride,
+                padding, tile_h, mode, exp_act, dw_act, interpret):
+    out = _mbconv_op(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj,
+                     stride, padding, tile_h, mode, exp_act, dw_act,
+                     interpret)
+    return out, (x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj)
+
+
+def _mbconv_bwd(stride, padding, tile_h, mode, exp_act, dw_act, interpret,
+                res, g):
+    # Backward through the mathematically identical reference composition —
+    # the two-pass kernel computes the same MBConv block, so the VJP is
+    # exact (same pattern as convdk_fused's VJP).
+    _, vjp = jax.vjp(
+        lambda *p: mbconv_ref(*p, stride=stride, padding=padding,
+                              exp_act=exp_act, dw_act=dw_act),
+        *res,
+    )
+    return vjp(g)
+
+
+_mbconv_op.defvjp(_mbconv_fwd, _mbconv_bwd)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("stride", "padding", "tile_h", "mode", "exp_act",
+                     "dw_act", "interpret"),
+)
+def convdk_mbconv_fused(
+    x: jax.Array,
+    w_exp: jax.Array,
+    w_dw: jax.Array,
+    w_se1: jax.Array,
+    b_se1: jax.Array,
+    w_se2: jax.Array,
+    b_se2: jax.Array,
+    w_proj: jax.Array,
+    *,
+    stride: int = 1,
+    padding: str = "SAME",
+    tile_h: int = 8,
+    mode: str = "retain",
+    exp_act: Optional[str] = "silu",
+    dw_act: Optional[str] = "silu",
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Two-pass fused MBConv block via the ConvDK Pallas kernels
+    (differentiable).  No residual add — the model layer owns that.
+
+    x      : (B, H, W, C_in) NHWC
+    w_exp  : (C_in, C_mid) expand PW (identity + ``exp_act=None`` for
+             expansion ratio 1)
+    w_dw   : (k_h, k_w, C_mid) depthwise taps
+    w_se1/b_se1, w_se2/b_se2 : SE squeeze/excite FCs
+    w_proj : (C_mid, C_out) projection PW (linear)
+    mode   : "retain" | "recompute" — pass-2 DW source (see module doc;
+             ``core.autotune.get_mbconv_schedule`` picks per layer shape).
+    Returns (B, H', W', C_out).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    return _mbconv_op(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj,
+                      stride, padding, tile_h, mode, exp_act, dw_act,
+                      interpret)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("stride", "padding", "tile_h", "exp_act", "dw_act",
+                     "interpret"),
+)
+def convdk_mbconv_staged(
+    x: jax.Array,
+    w_exp: jax.Array,
+    w_dw: jax.Array,
+    w_se1: jax.Array,
+    b_se1: jax.Array,
+    w_se2: jax.Array,
+    b_se2: jax.Array,
+    w_proj: jax.Array,
+    *,
+    stride: int = 1,
+    padding: str = "SAME",
+    tile_h: int = 8,
+    exp_act: Optional[str] = "silu",
+    dw_act: Optional[str] = "silu",
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """The STAGED MBConv pipeline (comparison baseline, differentiable).
+
+    expand einsum -> HBM -> staged DW ConvDK kernel -> HBM -> SE pool +
+    gate -> HBM -> projection einsum: the DW tensor round-trips through HBM
+    exactly as the paper's weight-stationary baseline, which is what
+    ``convdk_mbconv_fused`` eliminates.  Kept as the reference executable
+    for fused-vs-staged numerics and traffic comparisons.
+    """
+    from .ops import convdk_depthwise2d
+
+    if interpret is None:
+        interpret = default_interpret()
+    e = jnp.einsum("bhwc,cd->bhwd", x.astype(jnp.float32),
+                   w_exp.astype(jnp.float32))
+    e = _act_ref(e, exp_act)
+    d = convdk_depthwise2d(e, w_dw.astype(jnp.float32), stride=stride,
+                           padding=padding, tile_h=tile_h,
+                           interpret=interpret)
+    d = _act_ref(d.astype(jnp.float32), dw_act)
+    pooled = jnp.mean(d, axis=(1, 2))
+    s1 = _act_ref(pooled @ w_se1.astype(jnp.float32)
+                  + b_se1.astype(jnp.float32), "silu")
+    gate = _act_ref(s1 @ w_se2.astype(jnp.float32)
+                    + b_se2.astype(jnp.float32), "sigmoid")
+    out = jnp.einsum("bhwc,cd->bhwd", d * gate[:, None, None, :],
+                     w_proj.astype(jnp.float32))
+    return out.astype(x.dtype)

@@ -20,15 +20,10 @@ import jax
 import jax.numpy as jnp
 
 from ..core.perfmodel import pick_channel_block
+from .common import default_interpret, round_up as _round_up, spatial_pads
 from .convdk_conv1d import conv1d_pallas
 from .convdk_dw import dw2d_pallas
 from .ref import causal_conv1d_ref, depthwise2d_ref
-
-_DEFAULT_INTERPRET = jax.default_backend() == "cpu"
-
-
-def _round_up(x: int, m: int) -> int:
-    return -(-x // m) * m
 
 
 def stage_row_strips(x: jax.Array, k: int, stride: int, tile_h: int) -> jax.Array:
@@ -96,7 +91,7 @@ def convdk_depthwise2d(
     x: (B, H, W, C) NHWC; w: (k_h, k_w, C).  Returns (B, H', W', C).
     """
     if interpret is None:
-        interpret = _DEFAULT_INTERPRET
+        interpret = default_interpret()
     return _dw2d_op(x, w, stride, padding, tile_h, interpret)
 
 
@@ -105,17 +100,7 @@ def _dw2d_impl(x, w, stride, padding, tile_h, interpret):
     k_h, k_w, cw = w.shape
     assert cw == c, (cw, c)
     s = stride
-
-    if padding == "SAME":
-        out_h, out_w = -(-h // s), -(-w_in // s)
-        ph = max(0, (out_h - 1) * s + k_h - h)
-        pw = max(0, (out_w - 1) * s + k_w - w_in)
-        pads = ((ph // 2, ph - ph // 2), (pw // 2, pw - pw // 2))
-    elif padding == "VALID":
-        out_h, out_w = (h - k_h) // s + 1, (w_in - k_w) // s + 1
-        pads = ((0, 0), (0, 0))
-    else:
-        raise ValueError(padding)
+    out_h, out_w, pads = spatial_pads(h, w_in, k_h, k_w, s, padding)
 
     # channel blocking: minimal-padding block along the 128-lane axis
     c_block = pick_channel_block(c)
@@ -209,7 +194,7 @@ def convdk_causal_conv1d(
     x: (B, L, D); w: (k, D); bias: (D,) or None.  Returns (B, L, D).
     """
     if interpret is None:
-        interpret = _DEFAULT_INTERPRET
+        interpret = default_interpret()
     if bias is None:
         bias = jnp.zeros((x.shape[-1],), x.dtype)
     return _conv1d_op(x, w, bias, activation, tile_l, interpret)

@@ -35,6 +35,10 @@ def _act_ref(x: jax.Array, act: Optional[str]) -> jax.Array:
         return jnp.maximum(x, 0.0)
     if act == "relu6":
         return jnp.clip(x, 0.0, 6.0)
+    if act == "silu":
+        return x * jax.nn.sigmoid(x)
+    if act == "sigmoid":
+        return jax.nn.sigmoid(x)
     raise ValueError(f"unsupported activation: {act}")
 
 
@@ -61,6 +65,54 @@ def separable_ref(
         preferred_element_type=jnp.float32,
     )
     return _act_ref(z, act).astype(x.dtype)
+
+
+def mbconv_ref(
+    x: jax.Array,
+    w_exp: jax.Array,
+    w_dw: jax.Array,
+    w_se1: jax.Array,
+    b_se1: jax.Array,
+    w_se2: jax.Array,
+    b_se2: jax.Array,
+    w_proj: jax.Array,
+    stride: int = 1,
+    padding: str = "SAME",
+    exp_act: Optional[str] = "silu",
+    dw_act: Optional[str] = "silu",
+) -> jax.Array:
+    """MBConv (EfficientNet) block oracle, WITHOUT the residual add:
+
+        expand 1x1 -> exp_act -> depthwise k x k / s -> dw_act
+        -> SE (global mean pool -> FC -> silu -> FC -> sigmoid, scales the
+           DW output) -> project 1x1 (linear).
+
+    x: (B, H, W, C_in); w_exp: (C_in, C_mid); w_dw: (k, k, C_mid);
+    w_se1/b_se1: (C_mid, C_se)/(C_se,); w_se2/b_se2: (C_se, C_mid)/(C_mid,);
+    w_proj: (C_mid, C_out).  For expand_ratio == 1 blocks pass the identity
+    as ``w_exp`` with ``exp_act=None`` (the kernel does the same).  All
+    contractions run in f32, matching the fused kernel's accumulators.
+    """
+    e = jax.lax.dot_general(
+        x.astype(jnp.float32), w_exp.astype(jnp.float32),
+        dimension_numbers=(((3,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    e = _act_ref(e, exp_act)
+    d = depthwise2d_ref(e, w_dw.astype(jnp.float32), stride=stride,
+                        padding=padding)
+    d = _act_ref(d.astype(jnp.float32), dw_act)
+    pooled = jnp.mean(d, axis=(1, 2))                       # (B, C_mid)
+    s1 = _act_ref(pooled @ w_se1.astype(jnp.float32)
+                  + b_se1.astype(jnp.float32), "silu")
+    gate = _act_ref(s1 @ w_se2.astype(jnp.float32)
+                    + b_se2.astype(jnp.float32), "sigmoid")
+    out = jax.lax.dot_general(
+        d * gate[:, None, None, :], w_proj.astype(jnp.float32),
+        dimension_numbers=(((3,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    return out.astype(x.dtype)
 
 
 def causal_conv1d_ref(

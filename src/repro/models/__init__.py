@@ -1,3 +1,10 @@
+from .mbconv import (
+    EffNetConfig,
+    efficientnet_b0_apply,
+    efficientnet_b0_def,
+    mbconv_block,
+    mbconv_def,
+)
 from .model import (
     ModelConfig,
     decode_step,
@@ -10,4 +17,6 @@ from .param import abstract, count_params, logical_axes, materialize
 __all__ = [
     "ModelConfig", "decode_step", "forward", "init_decode_state",
     "model_def", "abstract", "count_params", "logical_axes", "materialize",
+    "EffNetConfig", "efficientnet_b0_apply", "efficientnet_b0_def",
+    "mbconv_block", "mbconv_def",
 ]

@@ -1,0 +1,249 @@
+"""MBConv (EfficientNet) blocks and the EfficientNet-B0 builder.
+
+``mbconv_block`` is the model-level entry point for one mobile inverted
+bottleneck with squeeze-and-excitation:
+
+    expand 1x1 -> silu -> DW k x k / s -> silu -> SE -> project 1x1
+    (+ identity residual when s == 1 and C_in == C_out)
+
+Routing follows ``repro.configs.base.kernel_config()``: with
+``kcfg.fused_mbconv`` (the default) the block runs the TWO-PASS fused
+ConvDK pipeline (``kernels.convdk_mbconv_fused``) with a per-layer-shape
+schedule — tile_h AND the pass-2 retain/recompute mode — solved by
+``core.autotune.get_mbconv_schedule`` from the HBM traffic model.
+Otherwise the staged baseline (``kernels.convdk_mbconv_staged``) runs: the
+DW tensor round-trips through HBM around the SE stage.
+
+``efficientnet_b0_def`` / ``efficientnet_b0_apply`` assemble the full
+EfficientNet-B0 (stem conv -> 16 MBConv blocks -> head conv -> pool ->
+classifier), every MBConv routed through the two-pass fused kernel.  The
+stage table reproduces ``core.workloads.EFFICIENTNET_B0`` exactly (a test
+asserts the consistency).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .param import P
+
+# (expand_ratio, kernel, stride, c_out, repeats) — EfficientNet-B0 stages
+# 2-8 [arXiv:1905.11946, Table 1]; the first block of a stage carries the
+# stride, channel changes happen on that block, SE ratio 0.25 throughout.
+EFFNET_B0_STAGES: Tuple[Tuple[int, int, int, int, int], ...] = (
+    (1, 3, 1, 16, 1),
+    (6, 3, 2, 24, 2),
+    (6, 5, 2, 40, 2),
+    (6, 3, 2, 80, 3),
+    (6, 5, 1, 112, 3),
+    (6, 5, 2, 192, 4),
+    (6, 3, 1, 320, 1),
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class EffNetConfig:
+    """EfficientNet-family hyperparameters (B0 defaults).
+
+    ``width_mult`` scales every channel count through ``round_filters``
+    (divisor-8 rounding, the paper's compound-scaling rule) — small
+    multipliers give CI-sized models with the exact B0 topology.
+    """
+
+    num_classes: int = 1000
+    width_mult: float = 1.0
+    se_ratio: float = 0.25
+    stem_c: int = 32
+    head_c: int = 1280
+    stages: Tuple[Tuple[int, int, int, int, int], ...] = EFFNET_B0_STAGES
+    dtype: str = "float32"
+
+
+def round_filters(c: int, width_mult: float, divisor: int = 8) -> int:
+    """EfficientNet channel rounding: scale, snap to the divisor, never
+    drop below 90 % of the scaled value."""
+    if width_mult == 1.0:
+        return c
+    c_scaled = c * width_mult
+    new_c = max(divisor, int(c_scaled + divisor / 2) // divisor * divisor)
+    if new_c < 0.9 * c_scaled:
+        new_c += divisor
+    return int(new_c)
+
+
+@dataclasses.dataclass(frozen=True)
+class MBConvSpec:
+    """One resolved MBConv block instance inside a network."""
+
+    c_in: int
+    c_out: int
+    expand_ratio: int
+    k: int
+    s: int
+    se_ratio: float = 0.25
+
+    @property
+    def c_mid(self) -> int:
+        return self.c_in * self.expand_ratio
+
+    @property
+    def c_se(self) -> int:
+        return max(1, int(self.c_in * self.se_ratio))
+
+    @property
+    def has_residual(self) -> bool:
+        return self.s == 1 and self.c_in == self.c_out
+
+
+def effnet_block_specs(cfg: EffNetConfig) -> List[MBConvSpec]:
+    """The per-block MBConv table of one EfficientNet config."""
+    specs: List[MBConvSpec] = []
+    c_in = round_filters(cfg.stem_c, cfg.width_mult)
+    for expand, k, s, c_out, repeats in cfg.stages:
+        c_out = round_filters(c_out, cfg.width_mult)
+        for i in range(repeats):
+            specs.append(MBConvSpec(c_in=c_in, c_out=c_out,
+                                    expand_ratio=expand, k=k,
+                                    s=s if i == 0 else 1,
+                                    se_ratio=cfg.se_ratio))
+            c_in = c_out
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# one MBConv block
+# ---------------------------------------------------------------------------
+
+def mbconv_def(c_in: int, c_out: int, k: int = 3, expand_ratio: int = 6,
+               se_ratio: float = 0.25) -> dict:
+    """Params of one MBConv block.  Convs are bias-free (BN would own the
+    bias); the SE FCs carry biases, as in the reference EfficientNet."""
+    spec = MBConvSpec(c_in=c_in, c_out=c_out, expand_ratio=expand_ratio,
+                      k=k, s=1, se_ratio=se_ratio)
+    c_mid, c_se = spec.c_mid, spec.c_se
+    p: Dict[str, Any] = {
+        "dw": P((k, k, c_mid), (None, None, None)),
+        "se_w1": P((c_mid, c_se), (None, None), scale=2.0),
+        "se_b1": P((c_se,), (None,), init="zeros"),
+        "se_w2": P((c_se, c_mid), (None, None), scale=2.0),
+        "se_b2": P((c_mid,), (None,), init="zeros"),
+        "proj": P((c_mid, c_out), (None, None), scale=2.0),
+    }
+    if expand_ratio != 1:
+        p["exp"] = P((c_in, c_mid), (None, None), scale=2.0)
+    return p
+
+
+def mbconv_block(
+    params: dict,
+    x: jax.Array,
+    *,
+    stride: int = 1,
+    padding: str = "SAME",
+    exp_act: Optional[str] = "silu",
+    dw_act: Optional[str] = "silu",
+    kcfg=None,
+) -> jax.Array:
+    """Apply one MBConv block, routed by the conv-kernel config.
+
+    With ``kcfg.fused_mbconv`` (the default) the block runs the two-pass
+    fused ConvDK pipeline: pass 1 fuses expand-PW + DW per strip and
+    accumulates the SE pool on-chip; pass 2 folds the SE gate into the
+    projection in the same VMEM residency.  The per-layer (tile_h, mode)
+    schedule comes from ``core.autotune.get_mbconv_schedule`` unless
+    ``kcfg`` pins one.  The identity residual is added when the shapes
+    allow (s == 1, C_in == C_out).
+
+    x: (B, H, W, C_in) NHWC -> (B, H', W', C_out).
+    """
+    if kcfg is None:
+        # lazy import: configs.base imports models.model -> models.mbconv
+        from ..configs.base import kernel_config
+        kcfg = kernel_config()
+    from ..kernels import convdk_mbconv_fused, convdk_mbconv_staged
+
+    c_in = x.shape[-1]
+    c_mid = params["dw"].shape[-1]
+    c_out = params["proj"].shape[-1]
+    if "exp" in params:
+        w_exp = params["exp"].astype(x.dtype)
+        eff_exp_act = exp_act
+    else:
+        # expansion ratio 1 (MBConv1): identity expand, no expand activation
+        assert c_mid == c_in, (c_mid, c_in)
+        w_exp = jnp.eye(c_mid, dtype=x.dtype)
+        eff_exp_act = None
+
+    tile_h, mode = kcfg.tile_h, kcfg.mbconv_mode or "retain"
+    if kcfg.autotune:
+        from ..core.autotune import get_mbconv_schedule
+        b, h, w, _ = x.shape
+        se_ratio = params["se_w1"].shape[1] / max(1, c_in)
+        sch = get_mbconv_schedule(
+            b, h, w, c_in, c_mid, c_out, params["dw"].shape[0], stride,
+            se_ratio=se_ratio, dtype_bytes=x.dtype.itemsize)
+        tile_h = sch.tile_h
+        mode = kcfg.mbconv_mode or sch.mode
+
+    args = (x, w_exp, params["dw"].astype(x.dtype),
+            params["se_w1"], params["se_b1"], params["se_w2"],
+            params["se_b2"], params["proj"].astype(x.dtype))
+    if kcfg.fused_mbconv:
+        out = convdk_mbconv_fused(
+            *args, stride=stride, padding=padding, tile_h=tile_h, mode=mode,
+            exp_act=eff_exp_act, dw_act=dw_act, interpret=kcfg.interpret)
+    else:
+        out = convdk_mbconv_staged(
+            *args, stride=stride, padding=padding, tile_h=tile_h,
+            exp_act=eff_exp_act, dw_act=dw_act, interpret=kcfg.interpret)
+    if stride == 1 and c_in == c_out and out.shape == x.shape:
+        out = out + x
+    return out
+
+
+# ---------------------------------------------------------------------------
+# EfficientNet-B0
+# ---------------------------------------------------------------------------
+
+def efficientnet_b0_def(cfg: EffNetConfig = EffNetConfig()) -> dict:
+    """Param tree: stem conv -> MBConv blocks -> head conv -> classifier."""
+    specs = effnet_block_specs(cfg)
+    stem_c = round_filters(cfg.stem_c, cfg.width_mult)
+    head_c = round_filters(cfg.head_c, cfg.width_mult)
+    p: Dict[str, Any] = {
+        "stem": P((3, 3, 3, stem_c), (None,) * 4),
+        "head": P((specs[-1].c_out, head_c), (None, None), scale=2.0),
+        "cls_w": P((head_c, cfg.num_classes), (None, None)),
+        "cls_b": P((cfg.num_classes,), (None,), init="zeros"),
+    }
+    for i, sp in enumerate(specs):
+        p[f"block{i}"] = mbconv_def(sp.c_in, sp.c_out, k=sp.k,
+                                    expand_ratio=sp.expand_ratio,
+                                    se_ratio=sp.se_ratio)
+    return p
+
+
+def efficientnet_b0_apply(params: dict, images: jax.Array,
+                          cfg: EffNetConfig = EffNetConfig(),
+                          kcfg=None) -> jax.Array:
+    """(B, H, W, 3) images -> (B, num_classes) logits.
+
+    Every MBConv block runs the two-pass fused ConvDK pipeline (or the
+    staged baseline, per ``kcfg``) — EfficientNet-B0 end to end through the
+    paper's dataflow."""
+    specs = effnet_block_specs(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    x = jax.lax.conv_general_dilated(
+        images.astype(dt), params["stem"].astype(dt), (2, 2), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    x = jax.nn.silu(x)
+    for i, sp in enumerate(specs):
+        x = mbconv_block(params[f"block{i}"], x, stride=sp.s, kcfg=kcfg)
+    x = jax.nn.silu(jnp.einsum("bhwc,cd->bhwd", x,
+                               params["head"].astype(x.dtype)))
+    x = x.mean(axis=(1, 2))
+    return x @ params["cls_w"].astype(x.dtype) + params["cls_b"].astype(x.dtype)

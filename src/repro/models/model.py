@@ -27,6 +27,7 @@ import jax.numpy as jnp
 
 from ..sharding import shard
 from . import attention as attn_mod
+from . import mbconv as mbconv_mod
 from . import mla as mla_mod
 from . import moe as moe_mod
 from . import rglru as rglru_mod
@@ -85,6 +86,7 @@ class ModelConfig:
     vision_stem: bool = False      # conv patch-embed stem over raw images
     vision_stem_c0: int = 32       # stem width; doubles per separable block
     vision_stem_blocks: int = 2    # stride-2 separable blocks after the stem
+    vision_stem_arch: str = "separable"  # "separable" | "mbconv" (SE) blocks
     # execution
     dtype: str = "bfloat16"
     param_dtype: str = "float32"
@@ -273,13 +275,26 @@ def model_def(cfg: ModelConfig) -> dict:
     return p
 
 
+def _stem_is_mbconv(cfg: ModelConfig) -> bool:
+    if cfg.vision_stem_arch not in ("separable", "mbconv"):
+        raise ValueError(
+            f"vision_stem_arch must be 'separable' or 'mbconv', "
+            f"got {cfg.vision_stem_arch!r}")
+    return cfg.vision_stem_arch == "mbconv"
+
+
 def vision_stem_def(cfg: ModelConfig) -> dict:
-    """Conv patch-embed stem: 3x3/2 stem conv, then stride-2 separable
-    blocks (each one fused ConvDK kernel), then a 1x1 lift to d_model."""
+    """Conv patch-embed stem: 3x3/2 stem conv, then stride-2 blocks —
+    separable (fused single-pass kernel) or MBConv with SE (two-pass fused
+    kernel) per ``vision_stem_arch`` — then a 1x1 lift to d_model."""
     c = cfg.vision_stem_c0
     p: Dict[str, Any] = {"stem": P((3, 3, 3, c), (None,) * 4)}
     for i in range(cfg.vision_stem_blocks):
-        p[f"sep{i}"] = separable_def(c, c * 2, k=3)
+        if _stem_is_mbconv(cfg):
+            p[f"sep{i}"] = mbconv_mod.mbconv_def(c, c * 2, k=3,
+                                                 expand_ratio=4)
+        else:
+            p[f"sep{i}"] = separable_def(c, c * 2, k=3)
         c *= 2
     p["lift"] = dense_def(c, cfg.d_model, (None, "embed"))
     return p
@@ -289,8 +304,9 @@ def apply_vision_stem(params: dict, images: jax.Array,
                       cfg: ModelConfig) -> jax.Array:
     """(B, H, W, 3) raw images -> (B, n_patches, d_model) patch embeddings.
 
-    Every separable block routes through the fused DW+PW ConvDK kernel
-    (behind the ``configs.base.kernel_config()`` flag) — the paper's
+    Every block routes through a fused ConvDK kernel (behind the
+    ``configs.base.kernel_config()`` flags): one-pass DW+PW for separable
+    stems, the two-pass SE-aware pipeline for MBConv stems — the paper's
     dataflow as the VLM vision frontend.
     """
     x = jax.lax.conv_general_dilated(
@@ -298,7 +314,10 @@ def apply_vision_stem(params: dict, images: jax.Array,
         (2, 2), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
     x = jax.nn.relu(x)
     for i in range(cfg.vision_stem_blocks):
-        x = separable_block(params[f"sep{i}"], x, stride=2)
+        if _stem_is_mbconv(cfg):
+            x = mbconv_mod.mbconv_block(params[f"sep{i}"], x, stride=2)
+        else:
+            x = separable_block(params[f"sep{i}"], x, stride=2)
     b, h, w, c = x.shape
     tokens = dense(params["lift"], x.reshape(b, h * w, c))
     return tokens.astype(cfg.adtype)

@@ -1,0 +1,176 @@
+"""Persistent (JSON) schedule cache: disk round-trips, measured-entry
+priority, and graceful degradation without a cache dir."""
+
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.autotune import (
+    ScheduleCache,
+    TPUConfig,
+    benchmark_fused_sweep,
+    get_fused_schedule,
+    get_mbconv_schedule,
+    get_schedule_cache,
+    set_schedule_cache_dir,
+)
+
+
+@pytest.fixture
+def cache_dir(tmp_path):
+    """Point the global schedule cache at a temp dir; restore afterwards."""
+    cache = set_schedule_cache_dir(tmp_path)
+    yield tmp_path, cache
+    set_schedule_cache_dir(None)
+
+
+def _entries(tmp_path):
+    payload = json.loads((tmp_path / "convdk_schedules.json").read_text())
+    assert payload["version"] == 1
+    return payload["entries"]
+
+
+def test_schedule_persists_to_disk(cache_dir):
+    tmp_path, cache = cache_dir
+    sch = get_fused_schedule(1, 56, 56, 144, 24, 3, 1)
+    entries = _entries(tmp_path)
+    (key,) = [k for k in entries if k.startswith("sep|")]
+    assert "b1-h56-w56-ci144-co24-k3-s1" in key
+    assert entries[key]["tile_h"] == sch.tile_h
+    assert entries[key]["source"] == "model"
+
+    msch = get_mbconv_schedule(1, 14, 14, 80, 480, 112, 5, 1)
+    entries = _entries(tmp_path)
+    (mkey,) = [k for k in entries if k.startswith("mbconv|")]
+    assert "ci80-cm480-co112-k5-s1" in mkey
+    assert entries[mkey]["mode"] == msch.mode
+
+
+def test_disk_entry_survives_process_restart(cache_dir):
+    """A restart is simulated by dropping the in-process layer: the lookup
+    must come back from the JSON file (proved by editing the file)."""
+    tmp_path, cache = cache_dir
+    get_fused_schedule(1, 28, 28, 192, 64, 3, 2)
+    entries = _entries(tmp_path)
+    (key,) = list(entries)
+    edited = dict(entries[key], tile_h=2, source="measured")
+    (tmp_path / "convdk_schedules.json").write_text(
+        json.dumps({"version": 1, "entries": {key: edited}}))
+
+    cache.clear_memory()                       # "new process"
+    sch = get_fused_schedule(1, 28, 28, 192, 64, 3, 2)
+    assert sch.tile_h == 2                     # came from disk, not the model
+
+
+def test_measured_sweep_persists_and_outranks_model(cache_dir):
+    tmp_path, cache = cache_dir
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(1, 12, 12, 8)), jnp.float32)
+    w_dw = jnp.asarray(rng.normal(size=(3, 3, 8)), jnp.float32)
+    w_pw = jnp.asarray(rng.normal(size=(8, 16)), jnp.float32)
+    best, results = benchmark_fused_sweep(
+        x, w_dw, w_pw, stride=1, tile_hs=[1, 4], iters=1, interpret=True,
+        persist=True)
+    assert dict(results).keys() == {1, 4}
+    entries = _entries(tmp_path)
+    (key,) = [k for k in entries if "ci8-co16" in k]
+    assert entries[key]["source"] == "measured"
+    assert entries[key]["tile_h"] == best
+
+    # a later model pick must NOT clobber the measured ground truth...
+    cache.clear_memory()
+    sch = get_fused_schedule(1, 12, 12, 8, 16, 3, 1)
+    assert sch.tile_h == best
+    assert _entries(tmp_path)[key]["source"] == "measured"
+
+
+def test_invalid_disk_tile_h_falls_back_to_model(cache_dir):
+    tmp_path, cache = cache_dir
+    get_fused_schedule(1, 16, 16, 8, 8, 3, 1)
+    entries = _entries(tmp_path)
+    (key,) = list(entries)
+    entries[key]["tile_h"] = 9999              # > out_h: stale / corrupt
+    (tmp_path / "convdk_schedules.json").write_text(
+        json.dumps({"version": 1, "entries": entries}))
+    cache.clear_memory()
+    sch = get_fused_schedule(1, 16, 16, 8, 8, 3, 1)
+    assert 1 <= sch.tile_h <= 16
+
+
+def test_malformed_entry_falls_back_to_model(cache_dir):
+    """A valid-JSON file with a garbage ENTRY (wrong type, missing or
+    non-numeric tile_h, bad mode) must degrade to the analytical model,
+    never crash schedule lookup."""
+    tmp_path, cache = cache_dir
+    want = get_fused_schedule(1, 16, 16, 8, 8, 3, 1)
+    mwant = get_mbconv_schedule(1, 14, 14, 16, 64, 24, 3, 1)
+    entries = _entries(tmp_path)
+    (skey,) = [k for k in entries if k.startswith("sep|")]
+    (mkey,) = [k for k in entries if k.startswith("mbconv|")]
+    for bad_sep, bad_mb in [
+        ("garbage", "garbage"),                      # non-dict entry
+        ({}, {}),                                    # missing tile_h
+        ({"tile_h": "huge"}, {"tile_h": None}),      # non-numeric tile_h
+        ({"tile_h": [4]}, {"tile_h": 4, "mode": "teleport"}),  # bad mode
+    ]:
+        (tmp_path / "convdk_schedules.json").write_text(json.dumps(
+            {"version": 1, "entries": {skey: bad_sep, mkey: bad_mb}}))
+        cache.clear_memory()
+        assert get_fused_schedule(1, 16, 16, 8, 8, 3, 1) == want
+        assert get_mbconv_schedule(1, 14, 14, 16, 64, 24, 3, 1) == mwant
+
+
+def test_cache_key_includes_full_tpu_config(cache_dir):
+    """Schedules solved under one TPUConfig are never reused for another:
+    c_block and the tile_h candidate set are part of the key."""
+    tmp_path, _cache = cache_dir
+    base = TPUConfig()
+    get_fused_schedule(1, 56, 56, 144, 24, 3, 1, tpu=base)
+    narrow = TPUConfig(c_block=64)
+    sch = get_fused_schedule(1, 56, 56, 144, 24, 3, 1, tpu=narrow)
+    assert sch.co_block <= 64                    # solved, not cache-echoed
+    coarse = TPUConfig(tile_h_candidates=(2,))
+    sch2 = get_fused_schedule(1, 56, 56, 144, 24, 3, 1, tpu=coarse)
+    assert sch2.tile_h == 2
+    assert len(_entries(tmp_path)) == 3          # three distinct keys
+
+
+def test_corrupt_cache_file_is_ignored(cache_dir):
+    tmp_path, _cache = cache_dir
+    (tmp_path / "convdk_schedules.json").write_text("{not json")
+    sch = get_fused_schedule(1, 8, 8, 8, 8, 3, 1)
+    assert sch.tile_h >= 1
+    # and the file heals on the next write
+    assert _entries(tmp_path)
+
+
+def test_memory_only_mode_without_dir():
+    set_schedule_cache_dir(None)
+    try:
+        cache = get_schedule_cache()
+        assert cache.path is None
+        a = get_fused_schedule(1, 20, 20, 16, 16, 3, 1)
+        b = get_fused_schedule(1, 20, 20, 16, 16, 3, 1)
+        assert a == b                          # in-process layer still works
+    finally:
+        set_schedule_cache_dir(None)
+
+
+def test_cache_isolated_per_shape_and_kind(cache_dir):
+    tmp_path, _cache = cache_dir
+    get_fused_schedule(1, 14, 14, 48, 64, 5, 1)
+    get_mbconv_schedule(1, 14, 14, 48, 192, 64, 5, 1)
+    get_mbconv_schedule(1, 14, 14, 48, 192, 64, 5, 2)
+    assert len(_entries(tmp_path)) == 3
+
+
+def test_schedule_cache_ignores_unwritable_dir(tmp_path):
+    """Persistence is best-effort: an unwritable dir must not break
+    schedule selection."""
+    cache = ScheduleCache(tmp_path / "missing" / "x")
+    cache.directory = tmp_path / "convdk_schedules.json"  # a FILE, not a dir
+    cache.directory.write_text("occupied")
+    cache.put("k", {"tile_h": 1, "source": "model"})
+    assert cache.get("k") == {"tile_h": 1, "source": "model"}
