@@ -81,37 +81,56 @@ def rows():
     return out
 
 
-def fused_traffic_report() -> bool:
+def fused_traffic_report(mesh_shape=(1, 1)) -> bool:
     """Modeled HBM traffic, fused vs staged, every MobileNet-V2 separable
-    block (batch 1, f32).  Returns True iff fused < staged for ALL layers."""
-    print("layer,c_in,hw,s,c_out,tile_h,fused_bytes,staged_bytes,saving_pct")
+    block (f32).  Returns True iff fused < staged for ALL layers.
+
+    With a non-trivial ``mesh_shape`` the comparison is the SHARDED one
+    (batch 8 over "data", c_out over "model"): per-device fused bytes vs
+    the staged pipeline partitioned identically, totals summed over the
+    mesh (the separable sharding is collective-free)."""
+    b = 8 if mesh_shape != (1, 1) else 1
+    print(f"# mesh={mesh_shape[0]}x{mesh_shape[1]} batch={b}")
+    print("layer,c_in,hw,s,c_out,tile_h,per_dev_bytes,"
+          "fused_bytes,staged_bytes,saving_pct")
     ok = True
     for i, (layer, c_out) in enumerate(MOBILENET_V2_SEPARABLE):
-        sch = get_fused_schedule(1, layer.h, layer.w, layer.c, c_out,
-                                 layer.k, layer.s)
-        f, s = sch.traffic.total_bytes, sch.staged_traffic.total_bytes
+        sch = get_fused_schedule(b, layer.h, layer.w, layer.c, c_out,
+                                 layer.k, layer.s, mesh_shape=mesh_shape)
+        f, s = sch.total_bytes, sch.staged_total_bytes
         ok &= f < s
         print(f"mbv2_dw{i},{layer.c},{layer.h},{layer.s},{c_out},"
-              f"{sch.tile_h},{f},{s},{100 * sch.modeled_saving:.1f}")
+              f"{sch.tile_h},{sch.traffic.total_bytes},{f},{s},"
+              f"{100 * sch.modeled_saving:.1f}")
     print(f"# fused strictly below staged on all layers: {ok}")
     return ok
 
 
-def mbconv_traffic_report() -> bool:
+def mbconv_traffic_report(mesh_shape=(1, 1)) -> bool:
     """Modeled HBM traffic of the two-pass fused MBConv pipeline vs the
     staged DW->HBM->SE->PW baseline for every EfficientNet-B0 MBConv block
-    (batch 1, f32), with the autotuned (tile_h, retain/recompute) schedule.
+    (f32), with the autotuned (tile_h, retain/recompute) schedule.
     Returns True iff the two-pass traffic is strictly below staged for ALL
-    layers."""
-    print("layer,c_in,c_mid,c_out,hw,k,s,tile_h,mode,"
-          "fused_bytes,staged_bytes,saving_pct")
+    layers.
+
+    With a non-trivial ``mesh_shape`` the comparison is the SHARDED one
+    (batch 8 over "data", c_mid over "model"): per-device fused bytes plus
+    the SE-squeeze/projection psum bytes vs the staged pipeline
+    partitioned identically (which pays the SAME psums — its reductions
+    over c_mid are the same collectives)."""
+    b = 8 if mesh_shape != (1, 1) else 1
+    print(f"# mesh={mesh_shape[0]}x{mesh_shape[1]} batch={b}")
+    print("layer,c_in,c_mid,c_out,hw,k,s,tile_h,mode,per_dev_bytes,"
+          "psum_bytes,fused_bytes,staged_bytes,saving_pct")
     ok = True
     for i, (ci, co, e, k, s, hw) in enumerate(EFFICIENTNET_B0_MBCONV):
-        sch = get_mbconv_schedule(1, hw, hw, ci, ci * e, co, k, s)
-        f, st = sch.traffic.total_bytes, sch.staged_traffic.total_bytes
+        sch = get_mbconv_schedule(b, hw, hw, ci, ci * e, co, k, s,
+                                  mesh_shape=mesh_shape)
+        f, st = sch.total_bytes, sch.staged_total_bytes
         ok &= f < st
         print(f"b0_mbconv{i},{ci},{ci * e},{co},{hw},{k},{s},"
-              f"{sch.tile_h},{sch.mode},{f},{st},"
+              f"{sch.tile_h},{sch.mode},{sch.traffic.total_bytes},"
+              f"{sch.collective_bytes},{f},{st},"
               f"{100 * sch.modeled_saving:.1f}")
     print(f"# two-pass fused strictly below staged on all layers: {ok}")
     return ok
@@ -146,6 +165,16 @@ def mbconv_walltime_row():
     ]
 
 
+def _parse_mesh(text):
+    try:
+        dp, mp = (int(t) for t in text.lower().split("x"))
+    except ValueError:
+        raise SystemExit(f"--mesh wants DxM (e.g. 2x4), got {text!r}")
+    if dp < 1 or mp < 1:
+        raise SystemExit(f"--mesh axes must be >= 1, got {text!r}")
+    return dp, mp
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--fused", action="store_true",
@@ -153,11 +182,19 @@ def main():
                          "for every MobileNet-V2 separable block AND every "
                          "EfficientNet-B0 MBConv block (exit 1 if the fused "
                          "pipeline loses any layer)")
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="with --fused: price the SHARDED pipelines over a "
+                         "(data, model) mesh of this shape — per-device "
+                         "traffic + psum bytes vs the identically "
+                         "partitioned staged baseline (e.g. --mesh 2x4)")
     args = ap.parse_args()
+    if args.mesh is not None and not args.fused:
+        raise SystemExit("--mesh requires --fused")
     if args.fused:
-        ok = fused_traffic_report()
+        mesh_shape = _parse_mesh(args.mesh) if args.mesh else (1, 1)
+        ok = fused_traffic_report(mesh_shape)
         print()
-        ok &= mbconv_traffic_report()
+        ok &= mbconv_traffic_report(mesh_shape)
         for name, us, derived in mbconv_walltime_row():
             print(f"{name},{us:.1f},{derived}")
         sys.exit(0 if ok else 1)

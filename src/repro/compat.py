@@ -36,6 +36,24 @@ def make_mesh(shape: Sequence[int], axes: Tuple[str, ...]):
     return jax.make_mesh(tuple(shape), tuple(axes))
 
 
+def shard_map_compat(f, mesh, in_specs, out_specs):
+    """``shard_map`` across its moves: ``jax.shard_map`` (newest),
+    ``jax.experimental.shard_map.shard_map`` (0.4.x).  Replication checking
+    is disabled — the fused conv wrappers psum explicitly, and the check's
+    kwarg itself was renamed (``check_rep`` -> ``check_vma``) between
+    releases."""
+    if hasattr(jax, "shard_map"):  # jax >= ~0.6
+        try:
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=False)
+        except TypeError:  # pragma: no cover - older spelling of the kwarg
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_rep=False)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False)
+
+
 @contextlib.contextmanager
 def activate_mesh(mesh):
     """Enter a mesh context: ``jax.set_mesh`` when available, else the

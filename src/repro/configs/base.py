@@ -37,6 +37,12 @@ class ConvKernelConfig:
     ``autotune`` picks ``tile_h`` (and the MBConv mode) per layer shape from
     the HBM traffic model (``core.autotune``); off = the fixed ``tile_h``
     default.
+    ``shard_fused`` routes the fused kernels through their ``shard_map``
+    wrappers (``kernels.convdk_sharded``: batch on "data", the channel
+    grid on "model", the MBConv SE pool psum'd across the model axis)
+    whenever the block wrapper is handed a mesh whose axes divide the
+    grid; off = ignore the mesh and run the single-device kernels (the
+    staged baselines always run single-device — GSPMD owns them).
     ``interpret`` forces Pallas interpret mode (None = auto: interpret on
     CPU backends, compiled Mosaic on TPU).
     """
@@ -45,6 +51,7 @@ class ConvKernelConfig:
     fused_mbconv: bool = True
     mbconv_mode: Optional[str] = None
     autotune: bool = True
+    shard_fused: bool = True
     tile_h: int = 8
     interpret: Optional[bool] = None
 

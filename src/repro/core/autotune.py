@@ -40,12 +40,17 @@ from .perfmodel import (
     HBMTraffic,
     MBConvShape,
     SeparableShape,
-    fused_separable_traffic,
-    mbconv_fused_traffic,
-    mbconv_staged_traffic,
+    mbconv_shard,
     pick_channel_block,
-    staged_separable_traffic,
+    separable_shard,
+    shard_factors,
+    sharded_mbconv_staged_traffic,
+    sharded_mbconv_traffic,
+    sharded_separable_staged_traffic,
+    sharded_separable_traffic,
 )
+
+MeshShape = Tuple[int, int]   # ("data", "model") axis sizes, (1, 1) = 1 core
 
 
 @dataclass(frozen=True)
@@ -57,26 +62,67 @@ class TPUConfig:
     tile_h_candidates: Tuple[int, ...] = (1, 2, 4, 8, 16, 32)
 
 
+class _ScheduleTotals:
+    """Mesh-wide byte accounting shared by both schedule families.
+
+    ``traffic`` / ``staged_traffic`` are PER-DEVICE: for the default
+    ``mesh_shape == (1, 1)`` that is the whole layer (the PR-1 semantics,
+    unchanged); under a (data, model) mesh they price one shard of the
+    sharded launch.  ``collective_words`` is identical for the fused and
+    staged pipelines (the staged path's reductions over the sharded
+    channel axis are the same psums), so the fused-vs-staged margin stays
+    an HBM-side comparison."""
+
+    @property
+    def n_devices(self) -> int:
+        return self.mesh_shape[0] * self.mesh_shape[1]
+
+    @property
+    def collective_bytes(self) -> int:
+        return self.collective_words * self.traffic.dtype_bytes
+
+    @property
+    def total_bytes(self) -> int:
+        """All bytes moved anywhere (every device's HBM + collectives)."""
+        return self.traffic.total_bytes * self.n_devices \
+            + self.collective_bytes
+
+    @property
+    def staged_total_bytes(self) -> int:
+        return self.staged_traffic.total_bytes * self.n_devices \
+            + self.collective_bytes
+
+    @property
+    def modeled_saving(self) -> float:
+        """Fraction of staged bytes the fused schedule avoids."""
+        base = self.staged_total_bytes
+        return 1.0 - self.total_bytes / base if base else 0.0
+
+
 @dataclass(frozen=True)
-class FusedSchedule:
-    """One selected schedule for ``convdk_fused_separable``."""
+class FusedSchedule(_ScheduleTotals):
+    """One selected schedule for ``convdk_fused_separable``.
+
+    The separable partitioning (c_out on "model") is collective-free, so
+    ``collective_words`` is always 0 here — it exists for symmetry with
+    ``MBConvSchedule`` (accounting doc on ``_ScheduleTotals``)."""
 
     tile_h: int
     ci_block: int
     co_block: int
     traffic: HBMTraffic          # modeled fused HBM traffic at this tile_h
     staged_traffic: HBMTraffic   # modeled staged-pipeline traffic (baseline)
-
-    @property
-    def modeled_saving(self) -> float:
-        """Fraction of staged HBM bytes the fused schedule avoids."""
-        base = self.staged_traffic.total_bytes
-        return 1.0 - self.traffic.total_bytes / base if base else 0.0
+    mesh_shape: Tuple[int, int] = (1, 1)
+    collective_words: int = 0
 
 
 @dataclass(frozen=True)
-class MBConvSchedule:
-    """One selected two-pass schedule for ``convdk_mbconv_fused``."""
+class MBConvSchedule(_ScheduleTotals):
+    """One selected two-pass schedule for ``convdk_mbconv_fused``.
+
+    Under a mesh the c_mid partitioning pays two psums (SE squeeze +
+    projection partials), priced in ``collective_words`` (accounting doc
+    on ``_ScheduleTotals``)."""
 
     tile_h: int
     mode: str                    # "retain" | "recompute"
@@ -85,11 +131,8 @@ class MBConvSchedule:
     co_block: int
     traffic: HBMTraffic          # modeled two-pass traffic at (tile_h, mode)
     staged_traffic: HBMTraffic   # modeled staged MBConv pipeline (baseline)
-
-    @property
-    def modeled_saving(self) -> float:
-        base = self.staged_traffic.total_bytes
-        return 1.0 - self.traffic.total_bytes / base if base else 0.0
+    mesh_shape: Tuple[int, int] = (1, 1)
+    collective_words: int = 0
 
 
 def _round_up(x: int, m: int) -> int:
@@ -133,6 +176,20 @@ class ScheduleCache:
     def path(self) -> Optional[Path]:
         return self.directory / _CACHE_FILE if self.directory else None
 
+    @staticmethod
+    def _migrate_key(key: str) -> str:
+        """Upgrade a pre-mesh cache key in place: entries persisted before
+        the ``mesh_shape`` schedule axis (5 segments, no ``mesh`` segment)
+        were all solved single-device, so they ARE the ``mesh1x1`` picks —
+        a measured sweep recorded under the old format must keep outranking
+        model picks instead of being silently orphaned."""
+        parts = key.split("|")
+        if len(parts) == 5 and parts[0] in ("sep", "mbconv") \
+                and not parts[3].startswith("mesh"):
+            parts.insert(3, "mesh1x1")
+            return "|".join(parts)
+        return key
+
     def _load_disk(self) -> Dict[str, dict]:
         if self._disk is None:
             self._disk = {}
@@ -140,7 +197,9 @@ class ScheduleCache:
                 try:
                     payload = json.loads(self.path.read_text())
                     if payload.get("version") == 1:
-                        self._disk = dict(payload.get("entries", {}))
+                        self._disk = {
+                            self._migrate_key(k): v
+                            for k, v in payload.get("entries", {}).items()}
                 except (OSError, ValueError):
                     pass                   # unreadable cache = empty cache
         return self._disk
@@ -214,16 +273,25 @@ def _tpu_key(tpu: TPUConfig) -> str:
     return f"vmem{tpu.vmem_bytes}-cb{tpu.c_block}-th{ths}"
 
 
-def _sep_key(shape: SeparableShape, tpu: TPUConfig) -> str:
+def _sep_key(shape: SeparableShape, tpu: TPUConfig,
+             mesh_shape: MeshShape = (1, 1)) -> str:
+    """Schedule-cache key.  The EFFECTIVE mesh factors are part of the key:
+    a schedule solved for one partitioning (per-device shard shapes, psum
+    terms, VMEM headroom) must never be echoed for another — sharded and
+    unsharded picks live in distinct entries."""
+    dp, mp = shard_factors(shape.b, shape.c_out, mesh_shape)
     return (f"sep|b{shape.b}-h{shape.h}-w{shape.w}-ci{shape.c_in}"
             f"-co{shape.c_out}-k{shape.k}-s{shape.s}|dtb{shape.dtype_bytes}"
-            f"|{_tpu_key(tpu)}|{_backend()}")
+            f"|mesh{dp}x{mp}|{_tpu_key(tpu)}|{_backend()}")
 
 
-def _mbconv_key(shape: MBConvShape, tpu: TPUConfig) -> str:
+def _mbconv_key(shape: MBConvShape, tpu: TPUConfig,
+                mesh_shape: MeshShape = (1, 1)) -> str:
+    dp, mp = shard_factors(shape.b, shape.c_mid, mesh_shape)
     return (f"mbconv|b{shape.b}-h{shape.h}-w{shape.w}-ci{shape.c_in}"
             f"-cm{shape.c_mid}-co{shape.c_out}-k{shape.k}-s{shape.s}"
-            f"|dtb{shape.dtype_bytes}|{_tpu_key(tpu)}|{_backend()}")
+            f"|dtb{shape.dtype_bytes}|mesh{dp}x{mp}|{_tpu_key(tpu)}"
+            f"|{_backend()}")
 
 
 def _entry_tile_h(hit, out_h: int):
@@ -260,71 +328,83 @@ def vmem_footprint_bytes(shape: SeparableShape, tile_h: int,
     return x_win + dw_acc + pw_acc + weights
 
 
-def candidate_schedules(shape: SeparableShape,
-                        tpu: TPUConfig = TPUConfig()) -> Tuple[FusedSchedule, ...]:
-    """All VMEM-feasible schedules for one layer shape, model-priced."""
-    ci = pick_channel_block(shape.c_in, tpu.c_block)
-    co = _blocks(shape.c_out, tpu.c_block)
+def candidate_schedules(
+    shape: SeparableShape, tpu: TPUConfig = TPUConfig(),
+    mesh_shape: MeshShape = (1, 1),
+) -> Tuple[FusedSchedule, ...]:
+    """All VMEM-feasible schedules for one layer shape, model-priced.
+
+    Under a mesh, feasibility and channel blocks are solved at the
+    PER-DEVICE shard shape (batch/data, c_out/model) — a shard has more
+    VMEM headroom per channel block than the whole layer."""
+    local, eff = separable_shard(shape, mesh_shape)
+    ci = pick_channel_block(local.c_in, tpu.c_block)
+    co = _blocks(local.c_out, tpu.c_block)
     out: list[FusedSchedule] = []
     seen = set()
-    for th in tpu.tile_h_candidates:
-        th = max(1, min(th, shape.out_h))
+    ths = [max(1, min(th, shape.out_h)) for th in tpu.tile_h_candidates]
+    feasible = [th for th in ths
+                if vmem_footprint_bytes(local, th, tpu) <= tpu.vmem_bytes]
+    for th in feasible or [1]:
         if th in seen:
             continue
         seen.add(th)
-        if vmem_footprint_bytes(shape, th, tpu) > tpu.vmem_bytes:
-            continue
+        sharded = sharded_separable_traffic(shape, th, eff, tpu.c_block)
+        staged = sharded_separable_staged_traffic(shape, th, eff, tpu.c_block)
         out.append(FusedSchedule(
             tile_h=th, ci_block=ci, co_block=co,
-            traffic=fused_separable_traffic(shape, th, tpu.c_block),
-            staged_traffic=staged_separable_traffic(shape, th, tpu.c_block),
-        ))
-    if not out:
-        # degenerate fallback: the smallest strip always fits the model
-        out.append(FusedSchedule(
-            tile_h=1, ci_block=ci, co_block=co,
-            traffic=fused_separable_traffic(shape, 1, tpu.c_block),
-            staged_traffic=staged_separable_traffic(shape, 1, tpu.c_block),
+            traffic=sharded.device, staged_traffic=staged.device,
+            mesh_shape=eff, collective_words=sharded.collective_words,
         ))
     return tuple(out)
 
 
-def select_fused_schedule(shape: SeparableShape,
-                          tpu: TPUConfig = TPUConfig()) -> FusedSchedule:
-    """Pick the schedule minimizing modeled HBM traffic (ties -> larger
-    tile_h: fewer grid cells, bigger MXU contractions)."""
-    cands = candidate_schedules(shape, tpu)
-    return min(cands, key=lambda c: (c.traffic.total_bytes, -c.tile_h))
+def select_fused_schedule(
+    shape: SeparableShape, tpu: TPUConfig = TPUConfig(),
+    mesh_shape: MeshShape = (1, 1),
+) -> FusedSchedule:
+    """Pick the schedule minimizing modeled total traffic — per-device HBM
+    bytes across all devices plus collectives (ties -> larger tile_h:
+    fewer grid cells, bigger MXU contractions)."""
+    cands = candidate_schedules(shape, tpu, mesh_shape)
+    return min(cands, key=lambda c: (c.total_bytes, -c.tile_h))
 
 
-def _schedule_at(shape: SeparableShape, tile_h: int,
-                 tpu: TPUConfig) -> FusedSchedule:
+def _schedule_at(shape: SeparableShape, tile_h: int, tpu: TPUConfig,
+                 mesh_shape: MeshShape = (1, 1)) -> FusedSchedule:
+    local, eff = separable_shard(shape, mesh_shape)
+    sharded = sharded_separable_traffic(shape, tile_h, eff, tpu.c_block)
+    staged = sharded_separable_staged_traffic(shape, tile_h, eff, tpu.c_block)
     return FusedSchedule(
         tile_h=tile_h,
-        ci_block=pick_channel_block(shape.c_in, tpu.c_block),
-        co_block=_blocks(shape.c_out, tpu.c_block),
-        traffic=fused_separable_traffic(shape, tile_h, tpu.c_block),
-        staged_traffic=staged_separable_traffic(shape, tile_h, tpu.c_block),
+        ci_block=pick_channel_block(local.c_in, tpu.c_block),
+        co_block=_blocks(local.c_out, tpu.c_block),
+        traffic=sharded.device, staged_traffic=staged.device,
+        mesh_shape=eff, collective_words=sharded.collective_words,
     )
 
 
 def get_fused_schedule(
     b: int, h: int, w: int, c_in: int, c_out: int, k: int, s: int,
     dtype_bytes: int = 4, tpu: TPUConfig = TPUConfig(),
+    mesh_shape: MeshShape = (1, 1),
 ) -> FusedSchedule:
     """Cached per-layer-shape schedule lookup (trace-time safe).
 
     Consults the in-process cache, then the JSON cache (where a measured
-    sweep may have recorded ground truth), then the analytical model."""
+    sweep may have recorded ground truth), then the analytical model.
+    ``mesh_shape`` is the ("data", "model") partitioning the schedule will
+    run under — part of the cache key, so sharded and unsharded picks for
+    the same layer shape never collide."""
     shape = SeparableShape(b=b, h=h, w=w, c_in=c_in, c_out=c_out, k=k, s=s,
                            dtype_bytes=dtype_bytes)
     cache = get_schedule_cache()
-    key = _sep_key(shape, tpu)
+    key = _sep_key(shape, tpu, mesh_shape)
     hit = cache.get(key)
     tile_h = _entry_tile_h(hit, shape.out_h) if hit is not None else None
     if tile_h is not None:
-        return _schedule_at(shape, tile_h, tpu)
-    sched = select_fused_schedule(shape, tpu)
+        return _schedule_at(shape, tile_h, tpu, mesh_shape)
+    sched = select_fused_schedule(shape, tpu, mesh_shape)
     cache.put(key, {"tile_h": sched.tile_h, "source": "model",
                     "recorded_at": time.time()})
     return sched
@@ -356,69 +436,88 @@ def mbconv_vmem_footprint_bytes(shape: MBConvShape, tile_h: int,
 
 
 def candidate_mbconv_schedules(
-    shape: MBConvShape, tpu: TPUConfig = TPUConfig()
+    shape: MBConvShape, tpu: TPUConfig = TPUConfig(),
+    mesh_shape: MeshShape = (1, 1),
 ) -> Tuple[MBConvSchedule, ...]:
-    """All VMEM-feasible (tile_h, mode) schedules, model-priced."""
-    ci = pick_channel_block(shape.c_in, tpu.c_block)
-    cm = pick_channel_block(shape.c_mid, tpu.c_block)
-    co = _blocks(shape.c_out, tpu.c_block)
+    """All VMEM-feasible (tile_h, mode) schedules, model-priced.
+
+    Under a mesh, feasibility and channel blocks are solved at the
+    per-device shard shape (batch/data, c_mid/model); the retain/recompute
+    crossover therefore re-solves per partitioning — a shard's DW slice is
+    mp-fold cheaper to retain than the whole expanded tensor."""
+    local, eff = mbconv_shard(shape, mesh_shape)
+    ci = pick_channel_block(local.c_in, tpu.c_block)
+    cm = pick_channel_block(local.c_mid, tpu.c_block)
+    co = _blocks(local.c_out, tpu.c_block)
     out: list[MBConvSchedule] = []
     seen = set()
     ths = [max(1, min(th, shape.out_h)) for th in tpu.tile_h_candidates]
     feasible = [th for th in ths
-                if mbconv_vmem_footprint_bytes(shape, th, tpu)
+                if mbconv_vmem_footprint_bytes(local, th, tpu)
                 <= tpu.vmem_bytes]
     for th in feasible or [1]:
         if th in seen:
             continue
         seen.add(th)
-        staged = mbconv_staged_traffic(shape, th, tpu.c_block)
+        staged = sharded_mbconv_staged_traffic(shape, th, eff, tpu.c_block)
         for mode in MBCONV_MODES:
+            sharded = sharded_mbconv_traffic(shape, th, mode, eff,
+                                             tpu.c_block)
             out.append(MBConvSchedule(
                 tile_h=th, mode=mode, ci_block=ci, cm_block=cm, co_block=co,
-                traffic=mbconv_fused_traffic(shape, th, mode, tpu.c_block),
-                staged_traffic=staged,
+                traffic=sharded.device, staged_traffic=staged.device,
+                mesh_shape=eff, collective_words=sharded.collective_words,
             ))
     return tuple(out)
 
 
-def select_mbconv_schedule(shape: MBConvShape,
-                           tpu: TPUConfig = TPUConfig()) -> MBConvSchedule:
-    """Pick (tile_h, mode) minimizing modeled two-pass HBM traffic (ties ->
-    larger tile_h, then retain: one DW round-trip beats recompute MACs)."""
-    cands = candidate_mbconv_schedules(shape, tpu)
-    return min(cands, key=lambda c: (c.traffic.total_bytes, -c.tile_h,
+def select_mbconv_schedule(
+    shape: MBConvShape, tpu: TPUConfig = TPUConfig(),
+    mesh_shape: MeshShape = (1, 1),
+) -> MBConvSchedule:
+    """Pick (tile_h, mode) minimizing modeled total two-pass traffic (ties
+    -> larger tile_h, then retain: one DW round-trip beats recompute
+    MACs)."""
+    cands = candidate_mbconv_schedules(shape, tpu, mesh_shape)
+    return min(cands, key=lambda c: (c.total_bytes, -c.tile_h,
                                      c.mode != "retain"))
 
 
 def _mbconv_schedule_at(shape: MBConvShape, tile_h: int, mode: str,
-                        tpu: TPUConfig) -> MBConvSchedule:
+                        tpu: TPUConfig,
+                        mesh_shape: MeshShape = (1, 1)) -> MBConvSchedule:
+    local, eff = mbconv_shard(shape, mesh_shape)
+    sharded = sharded_mbconv_traffic(shape, tile_h, mode, eff, tpu.c_block)
+    staged = sharded_mbconv_staged_traffic(shape, tile_h, eff, tpu.c_block)
     return MBConvSchedule(
         tile_h=tile_h, mode=mode,
-        ci_block=pick_channel_block(shape.c_in, tpu.c_block),
-        cm_block=pick_channel_block(shape.c_mid, tpu.c_block),
-        co_block=_blocks(shape.c_out, tpu.c_block),
-        traffic=mbconv_fused_traffic(shape, tile_h, mode, tpu.c_block),
-        staged_traffic=mbconv_staged_traffic(shape, tile_h, tpu.c_block),
+        ci_block=pick_channel_block(local.c_in, tpu.c_block),
+        cm_block=pick_channel_block(local.c_mid, tpu.c_block),
+        co_block=_blocks(local.c_out, tpu.c_block),
+        traffic=sharded.device, staged_traffic=staged.device,
+        mesh_shape=eff, collective_words=sharded.collective_words,
     )
 
 
 def get_mbconv_schedule(
     b: int, h: int, w: int, c_in: int, c_mid: int, c_out: int, k: int,
     s: int, se_ratio: float = 0.25, dtype_bytes: int = 4,
-    tpu: TPUConfig = TPUConfig(),
+    tpu: TPUConfig = TPUConfig(), mesh_shape: MeshShape = (1, 1),
 ) -> MBConvSchedule:
-    """Cached per-layer-shape two-pass schedule lookup (trace-time safe)."""
+    """Cached per-layer-shape two-pass schedule lookup (trace-time safe).
+
+    ``mesh_shape`` enters the cache key (see ``get_fused_schedule``)."""
     shape = MBConvShape(b=b, h=h, w=w, c_in=c_in, c_mid=c_mid, c_out=c_out,
                         k=k, s=s, se_ratio=se_ratio, dtype_bytes=dtype_bytes)
     cache = get_schedule_cache()
-    key = _mbconv_key(shape, tpu)
+    key = _mbconv_key(shape, tpu, mesh_shape)
     hit = cache.get(key)
     tile_h = _entry_tile_h(hit, shape.out_h) if hit is not None else None
     if tile_h is not None and isinstance(hit, dict) \
             and hit.get("mode") in MBCONV_MODES:
-        return _mbconv_schedule_at(shape, tile_h, hit["mode"], tpu)
-    sched = select_mbconv_schedule(shape, tpu)
+        return _mbconv_schedule_at(shape, tile_h, hit["mode"], tpu,
+                                   mesh_shape)
+    sched = select_mbconv_schedule(shape, tpu, mesh_shape)
     cache.put(key, {"tile_h": sched.tile_h, "mode": sched.mode,
                     "source": "model", "recorded_at": time.time()})
     return sched

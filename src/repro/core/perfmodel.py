@@ -42,7 +42,7 @@ documented in DESIGN.md):
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Callable, Dict, Iterable, List, Tuple
 
 from .tiling import (
@@ -665,3 +665,157 @@ def mbconv_staged_traffic(
     if not shape.has_expand:
         reads -= x_words                          # no expand stage: DW stages
     return HBMTraffic(reads, writes, shape.dtype_bytes)
+
+
+# ---------------------------------------------------------------------------
+# Sharded traffic: per-device HBM + collective bytes
+#
+# ``kernels.convdk_sharded`` partitions the fused pipelines over the
+# ("data", "model") mesh: batch on "data" for both families, c_out on
+# "model" for separable (collective-free: the c_in reduction is local) and
+# c_mid on "model" for MBConv (the SE squeeze FC and the projection PW
+# reduce over the full expanded width, so each becomes a cross-device
+# psum).  The paper's reduction claim must be re-proved under this
+# partitioning — Eyeriss-style reuse analysis does not transfer for free —
+# so the model prices BOTH terms:
+#
+# * per-device HBM traffic = the single-device model evaluated at the
+#   shard shape (batch/dp, channel grid/mp), and
+# * collective words = ring all-reduce accounting, 2*(mp-1) words per
+#   psum'd word per model group (reduce-scatter + all-gather), times the
+#   dp groups.  Non-divisible axes drop to 1 (the ``spec_for`` policy).
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShardedTraffic:
+    """One fused block under one (data, model) partitioning."""
+
+    device: HBMTraffic           # HBM traffic of ONE device's shard
+    collective_words: int        # interconnect words, summed over the mesh
+    n_devices: int
+    mesh_shape: Tuple[int, int] = (1, 1)
+
+    @property
+    def dtype_bytes(self) -> int:
+        return self.device.dtype_bytes
+
+    @property
+    def per_device_bytes(self) -> int:
+        return self.device.total_bytes
+
+    @property
+    def collective_bytes(self) -> int:
+        return self.collective_words * self.dtype_bytes
+
+    @property
+    def total_bytes(self) -> int:
+        """All bytes moved anywhere: every device's HBM traffic plus the
+        interconnect words — the number the staged single-device baseline
+        is compared against."""
+        return self.device.total_bytes * self.n_devices + self.collective_bytes
+
+
+def shard_factors(batch: int, channels: int,
+                  mesh_shape: Tuple[int, int]) -> Tuple[int, int]:
+    """Effective (data, model) split, matching ``kernels.can_shard_fused``
+    exactly: the kernel routing is ALL-OR-NOTHING (a grid either runs the
+    sharded wrapper on the whole mesh or falls back to one device), so if
+    either mesh axis fails to divide its grid axis the whole layer prices
+    as (1, 1) — the model must never describe a partitioning the kernels
+    will not run."""
+    dp, mp = mesh_shape
+    if dp < 1 or mp < 1 or batch % dp != 0 or channels % mp != 0:
+        return 1, 1
+    return dp, mp
+
+
+def separable_shard(
+    shape: SeparableShape, mesh_shape: Tuple[int, int]
+) -> Tuple[SeparableShape, Tuple[int, int]]:
+    """(per-device shard shape, effective factors) for the separable
+    partitioning: batch over "data", c_out over "model"."""
+    dp, mp = shard_factors(shape.b, shape.c_out, mesh_shape)
+    return replace(shape, b=shape.b // dp, c_out=shape.c_out // mp), (dp, mp)
+
+
+def mbconv_shard(
+    shape: MBConvShape, mesh_shape: Tuple[int, int]
+) -> Tuple[MBConvShape, Tuple[int, int]]:
+    """(per-device shard shape, effective factors) for the MBConv
+    partitioning: batch over "data", c_mid over "model"."""
+    dp, mp = shard_factors(shape.b, shape.c_mid, mesh_shape)
+    return replace(shape, b=shape.b // dp, c_mid=shape.c_mid // mp), (dp, mp)
+
+
+def sharded_separable_traffic(
+    shape: SeparableShape, tile_h: int, mesh_shape: Tuple[int, int] = (1, 1),
+    c_block: int = 128,
+) -> ShardedTraffic:
+    """Per-device traffic of the sharded fused separable block.
+
+    Batch splits over "data", c_out over "model"; c_in stays replicated so
+    the PW reduction is device-local and the collective term is zero."""
+    local, (dp, mp) = separable_shard(shape, mesh_shape)
+    return ShardedTraffic(
+        device=fused_separable_traffic(local, tile_h, c_block),
+        collective_words=0, n_devices=dp * mp, mesh_shape=(dp, mp))
+
+
+def sharded_separable_staged_traffic(
+    shape: SeparableShape, tile_h: int, mesh_shape: Tuple[int, int] = (1, 1),
+    c_block: int = 128,
+) -> ShardedTraffic:
+    """The staged two-kernel pipeline under the SAME partitioning — the
+    baseline a sharded deployment would actually run (its PW reduction is
+    also c_in-local, so it is collective-free too)."""
+    local, (dp, mp) = separable_shard(shape, mesh_shape)
+    return ShardedTraffic(
+        device=staged_separable_traffic(local, tile_h, c_block),
+        collective_words=0, n_devices=dp * mp, mesh_shape=(dp, mp))
+
+
+def _mbconv_psum_words(shape: MBConvShape, dp: int, mp: int) -> int:
+    """Ring-all-reduce words for the two c_mid-reduction psums: the
+    (B_local, C_se) SE squeeze partial and the (B_local, H', W', C_out)
+    projection partial, 2*(mp-1) words per psum'd word per model group."""
+    if mp <= 1:
+        return 0
+    payload = (shape.b // dp) * (shape.c_se
+                                 + shape.out_h * shape.out_w * shape.c_out)
+    return dp * 2 * (mp - 1) * payload
+
+
+def sharded_mbconv_traffic(
+    shape: MBConvShape, tile_h: int, mode: str = "retain",
+    mesh_shape: Tuple[int, int] = (1, 1), c_block: int = 128,
+) -> ShardedTraffic:
+    """Per-device traffic + psum bytes of the sharded two-pass MBConv.
+
+    Batch splits over "data", c_mid over "model".  Two psums cross the
+    model groups: the (B_local, C_se) SE squeeze partial (the pass-1 pool
+    leaving the chip once, before the pass-2 gate) and the
+    (B_local, H', W', C_out) projection partial."""
+    local, (dp, mp) = mbconv_shard(shape, mesh_shape)
+    return ShardedTraffic(
+        device=mbconv_fused_traffic(local, tile_h, mode, c_block),
+        collective_words=_mbconv_psum_words(shape, dp, mp),
+        n_devices=dp * mp, mesh_shape=(dp, mp))
+
+
+def sharded_mbconv_staged_traffic(
+    shape: MBConvShape, tile_h: int, mesh_shape: Tuple[int, int] = (1, 1),
+    c_block: int = 128,
+) -> ShardedTraffic:
+    """The staged MBConv pipeline under the SAME partitioning.
+
+    With c_mid sharded, the staged path pays the IDENTICAL two psums (its
+    SE squeeze and projection also reduce over the full expanded width) on
+    top of its per-device DW round-trips — so the fused-vs-staged margin
+    under sharding is decided by the HBM side, exactly the paper's claim
+    re-proved per partition."""
+    local, (dp, mp) = mbconv_shard(shape, mesh_shape)
+    return ShardedTraffic(
+        device=mbconv_staged_traffic(local, tile_h, c_block),
+        collective_words=_mbconv_psum_words(shape, dp, mp),
+        n_devices=dp * mp, mesh_shape=(dp, mp))

@@ -4,6 +4,12 @@ convolution) re-designed for the TPU memory hierarchy (DESIGN.md §Pillar B).
 
 from .convdk_fused import convdk_fused_separable, fused_separable_pallas
 from .convdk_mbconv import convdk_mbconv_fused, convdk_mbconv_staged
+from .convdk_sharded import (
+    can_shard_fused,
+    conv_mesh_shape,
+    convdk_fused_separable_sharded,
+    convdk_mbconv_fused_sharded,
+)
 from .ops import (
     convdk_causal_conv1d,
     convdk_depthwise2d,
@@ -20,10 +26,14 @@ from .ref import (
 )
 
 __all__ = [
+    "can_shard_fused",
+    "conv_mesh_shape",
     "convdk_causal_conv1d",
     "convdk_depthwise2d",
     "convdk_fused_separable",
+    "convdk_fused_separable_sharded",
     "convdk_mbconv_fused",
+    "convdk_mbconv_fused_sharded",
     "convdk_mbconv_staged",
     "convdk_separable_staged",
     "fused_separable_pallas",

@@ -341,7 +341,23 @@ def mbconv_pass2_retain_pallas(dw_ret, scale, w_proj, *, out_w, tile_h,
 
 
 def _mbconv_impl(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj, stride,
-                 padding, tile_h, mode, exp_act, dw_act, interpret):
+                 padding, tile_h, mode, exp_act, dw_act, interpret,
+                 axis_name: Optional[str] = None):
+    """Two-pass fused MBConv on one device — or on one SHARD of the c_mid
+    grid when ``axis_name`` names a mesh axis (``shard_map`` body).
+
+    Under c_mid sharding every device runs pass 1 / pass 2 on its own
+    channel slice, and the two contractions over the full expanded width
+    become cross-device ``psum``s:
+
+    * the SE squeeze FC (``mean @ w_se1`` reduces over C_mid) — the pass-1
+      pool leaves the chip exactly once, as a tiny (B, C_se) partial;
+    * the projection PW (``dw @ w_proj`` reduces over C_mid) — each device
+      contributes its channel slice's partial output.
+
+    Everything else (expand columns, DW taps, the excite FC rows, the
+    retained DW tensor) is local to the shard.
+    """
     b, h, w_in, c_in = x.shape
     k_h, k_w, c_mid = w_dw.shape
     assert w_exp.shape == (c_in, c_mid), (w_exp.shape, c_in, c_mid)
@@ -382,10 +398,14 @@ def _mbconv_impl(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj, stride,
         dw_act=dw_act, retain=(mode == "retain"), interpret=interpret)
 
     # SE MLP on the on-chip-accumulated pool (masked rows excluded; the
-    # mean uses the true output element count)
+    # mean uses the true output element count).  The squeeze FC reduces
+    # over C_mid, so under c_mid sharding its partial product is psum'd
+    # across the mesh axis before the bias + nonlinearity.
     mean = pool[:, 0, :c_mid] / float(out_h * out_w)          # (B, C_mid) f32
-    s1 = _act_ref(mean @ w_se1.astype(jnp.float32)
-                  + b_se1.astype(jnp.float32), "silu")
+    squeeze = mean @ w_se1.astype(jnp.float32)
+    if axis_name is not None:
+        squeeze = jax.lax.psum(squeeze, axis_name)
+    s1 = _act_ref(squeeze + b_se1.astype(jnp.float32), "silu")
     gate = _act_ref(s1 @ w_se2.astype(jnp.float32)
                     + b_se2.astype(jnp.float32), "sigmoid")
     scale = jnp.pad(gate, ((0, 0), (0, cm_pad - c_mid)))[:, None, :]
@@ -400,7 +420,11 @@ def _mbconv_impl(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj, stride,
             tile_h=tile_h, n_th=n_th, ci_block=ci_block, cm_block=cm_block,
             co_block=co_block, exp_act=exp_act, dw_act=dw_act,
             interpret=interpret)
-    return out[:, :out_h, :, :c_out]
+    out = out[:, :out_h, :, :c_out]
+    if axis_name is not None:
+        # projection partials: each shard contracted only its c_mid slice
+        out = jax.lax.psum(out, axis_name)
+    return out
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(8, 9, 10, 11, 12, 13, 14))

@@ -1,0 +1,256 @@
+"""Mesh-native wrappers for the fused ConvDK pipelines (``shard_map``).
+
+The fused kernels in ``convdk_fused`` / ``convdk_mbconv`` keep the
+depthwise tensor out of HBM on ONE core; at production scale the
+batch/channel grid does not fit a single core, and the paper's traffic
+claim must survive partitioning (the Eyeriss/MAERI lesson: reuse arguments
+re-prove, they do not transfer).  This module wraps both pipelines in
+``shard_map`` over the repo's ("data", "model") mesh
+(``repro.sharding`` / ``launch.mesh``), with the axis mapping:
+
+* **batch -> "data"** for both families — pure data parallelism, every
+  device runs the identical fused schedule on its batch slice;
+* **separable: c_out -> "model"** — the kernel grid's channel axis.  The
+  PW contraction reduces over c_in, which stays replicated, so each
+  device's output-channel slice is complete on-chip and the sharded path
+  needs NO collective;
+* **MBConv: c_mid -> "model"** — the expanded/DW/SE width (the kernel
+  grid's channel axis).  Expand columns, DW taps, the retained DW tensor
+  and the excite FC are all local to the shard, but the two contractions
+  over the full C_mid become cross-device ``psum``s inside
+  ``_mbconv_impl``: the pass-1 SE pool leaves the chip once as a tiny
+  (B, C_se) squeeze partial, and pass 2 psums the projection partials.
+
+Both wrappers are differentiable with the same pattern as their
+single-device counterparts: the VJP runs through the mathematically
+identical reference composition on the full (replicated) tensors.
+
+Per-device HBM traffic and the psum bytes are priced by
+``core.perfmodel.sharded_separable_traffic`` /
+``sharded_mbconv_traffic``; ``core.autotune`` solves schedules under a
+``mesh_shape`` axis so sharded and unsharded picks never collide.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from ..compat import shard_map_compat
+from .common import default_interpret
+from .convdk_fused import _fused_impl
+from .convdk_mbconv import _mbconv_impl
+from .ref import mbconv_ref, separable_ref
+
+DATA_AXIS = "data"
+MODEL_AXIS = "model"
+
+
+def conv_mesh_shape(mesh) -> Tuple[int, int]:
+    """(data, model) axis sizes of a mesh (1 for an absent axis)."""
+    return (mesh.shape.get(DATA_AXIS, 1), mesh.shape.get(MODEL_AXIS, 1))
+
+
+def can_shard_fused(mesh, batch: int, channels: int) -> bool:
+    """True iff both mesh axes exist and divide (batch, channel grid) —
+    the model-layer routing falls back to the single-device kernel
+    otherwise (same drop policy as ``sharding.spec_for``)."""
+    if DATA_AXIS not in mesh.shape or MODEL_AXIS not in mesh.shape:
+        return False
+    dp, mp = conv_mesh_shape(mesh)
+    return batch % dp == 0 and channels % mp == 0
+
+
+def _require_shardable(mesh, batch: int, channels: int, channel_name: str):
+    if DATA_AXIS not in mesh.shape or MODEL_AXIS not in mesh.shape:
+        raise ValueError(
+            f"mesh must carry '{DATA_AXIS}' and '{MODEL_AXIS}' axes, got "
+            f"{dict(mesh.shape)}")
+    dp, mp = conv_mesh_shape(mesh)
+    if batch % dp != 0:
+        raise ValueError(f"batch {batch} not divisible by {DATA_AXIS}={dp}")
+    if channels % mp != 0:
+        raise ValueError(
+            f"{channel_name} {channels} not divisible by {MODEL_AXIS}={mp}")
+
+
+# ---------------------------------------------------------------------------
+# separable: batch on "data", c_out on "model" (collective-free)
+# ---------------------------------------------------------------------------
+
+def _sep_sharded_impl(x, w_dw, w_pw, mesh, stride, padding, tile_h, dw_act,
+                      act, interpret):
+    _require_shardable(mesh, x.shape[0], w_pw.shape[1], "c_out")
+
+    def local(xl, wdl, wpl):
+        return _fused_impl(xl, wdl, wpl, stride, padding, tile_h, dw_act,
+                           act, interpret)
+
+    return shard_map_compat(
+        local, mesh,
+        in_specs=(P(DATA_AXIS, None, None, None),   # batch slice, full C_in
+                  P(None, None, None),              # DW taps replicated
+                  P(None, MODEL_AXIS)),             # PW columns sharded
+        out_specs=P(DATA_AXIS, None, None, MODEL_AXIS),
+    )(x, w_dw, w_pw)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9))
+def _sep_sharded_op(x, w_dw, w_pw, mesh, stride, padding, tile_h, dw_act,
+                    act, interpret):
+    return _sep_sharded_impl(x, w_dw, w_pw, mesh, stride, padding, tile_h,
+                             dw_act, act, interpret)
+
+
+def _sep_sharded_fwd(x, w_dw, w_pw, mesh, stride, padding, tile_h, dw_act,
+                     act, interpret):
+    out = _sep_sharded_op(x, w_dw, w_pw, mesh, stride, padding, tile_h,
+                          dw_act, act, interpret)
+    return out, (x, w_dw, w_pw)
+
+
+def _sep_sharded_bwd(mesh, stride, padding, tile_h, dw_act, act, interpret,
+                     res, g):
+    x, w_dw, w_pw = res
+    _, vjp = jax.vjp(
+        lambda x_, wd_, wp_: separable_ref(
+            x_, wd_, wp_, stride=stride, padding=padding, dw_act=dw_act,
+            act=act),
+        x, w_dw, w_pw,
+    )
+    return vjp(g)
+
+
+_sep_sharded_op.defvjp(_sep_sharded_fwd, _sep_sharded_bwd)
+
+
+def convdk_fused_separable_sharded(
+    x: jax.Array,
+    w_dw: jax.Array,
+    w_pw: jax.Array,
+    *,
+    mesh,
+    stride: int = 1,
+    padding: str = "SAME",
+    tile_h: int = 8,
+    dw_act: Optional[str] = None,
+    act: Optional[str] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Mesh-sharded fused depthwise-separable block (differentiable).
+
+    ``shard_map`` over ``mesh``: batch on "data", output channels on
+    "model"; every device runs the single-device fused kernel on its
+    (batch, c_out) tile.  The c_in reduction is device-local (c_in is
+    replicated), so no collective is needed — per-device HBM traffic is
+    the single-device model evaluated at the shard shape.
+
+    Requires ``b % data == 0`` and ``c_out % model == 0``
+    (``can_shard_fused`` pre-checks; the model layer falls back to the
+    unsharded kernel when the grid does not divide).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    return _sep_sharded_op(x, w_dw, w_pw, mesh, stride, padding, tile_h,
+                           dw_act, act, interpret)
+
+
+# ---------------------------------------------------------------------------
+# MBConv: batch on "data", c_mid on "model" (SE squeeze + projection psum)
+# ---------------------------------------------------------------------------
+
+def _mbconv_sharded_impl(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj,
+                         mesh, stride, padding, tile_h, mode, exp_act,
+                         dw_act, interpret):
+    _require_shardable(mesh, x.shape[0], w_dw.shape[-1], "c_mid")
+
+    def local(xl, wel, wdl, s1l, b1l, s2l, b2l, wpl):
+        return _mbconv_impl(xl, wel, wdl, s1l, b1l, s2l, b2l, wpl, stride,
+                            padding, tile_h, mode, exp_act, dw_act,
+                            interpret, axis_name=MODEL_AXIS)
+
+    return shard_map_compat(
+        local, mesh,
+        in_specs=(P(DATA_AXIS, None, None, None),   # batch slice, full C_in
+                  P(None, MODEL_AXIS),              # expand columns
+                  P(None, None, MODEL_AXIS),        # DW taps per channel
+                  P(MODEL_AXIS, None),              # squeeze FC rows
+                  P(None),                          # squeeze bias (replicated:
+                                                    #   added after the psum)
+                  P(None, MODEL_AXIS),              # excite FC columns
+                  P(MODEL_AXIS),                    # excite bias
+                  P(MODEL_AXIS, None)),             # projection rows
+        out_specs=P(DATA_AXIS, None, None, None),   # replicated post-psum
+    )(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj)
+
+
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(8, 9, 10, 11, 12, 13, 14, 15))
+def _mbconv_sharded_op(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj,
+                       mesh, stride, padding, tile_h, mode, exp_act, dw_act,
+                       interpret):
+    return _mbconv_sharded_impl(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2,
+                                w_proj, mesh, stride, padding, tile_h, mode,
+                                exp_act, dw_act, interpret)
+
+
+def _mbconv_sharded_fwd(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj,
+                        mesh, stride, padding, tile_h, mode, exp_act, dw_act,
+                        interpret):
+    out = _mbconv_sharded_op(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2,
+                             w_proj, mesh, stride, padding, tile_h, mode,
+                             exp_act, dw_act, interpret)
+    return out, (x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj)
+
+
+def _mbconv_sharded_bwd(mesh, stride, padding, tile_h, mode, exp_act,
+                        dw_act, interpret, res, g):
+    _, vjp = jax.vjp(
+        lambda *p: mbconv_ref(*p, stride=stride, padding=padding,
+                              exp_act=exp_act, dw_act=dw_act),
+        *res,
+    )
+    return vjp(g)
+
+
+_mbconv_sharded_op.defvjp(_mbconv_sharded_fwd, _mbconv_sharded_bwd)
+
+
+def convdk_mbconv_fused_sharded(
+    x: jax.Array,
+    w_exp: jax.Array,
+    w_dw: jax.Array,
+    w_se1: jax.Array,
+    b_se1: jax.Array,
+    w_se2: jax.Array,
+    b_se2: jax.Array,
+    w_proj: jax.Array,
+    *,
+    mesh,
+    stride: int = 1,
+    padding: str = "SAME",
+    tile_h: int = 8,
+    mode: str = "retain",
+    exp_act: Optional[str] = "silu",
+    dw_act: Optional[str] = "silu",
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Mesh-sharded two-pass fused MBConv block (differentiable).
+
+    ``shard_map`` over ``mesh``: batch on "data", the expanded c_mid grid
+    on "model".  Each device runs both fused passes on its channel slice;
+    the pass-1 SE pool crosses devices exactly once (a (B, C_se) squeeze
+    ``psum`` before the pass-2 gate), and the pass-2 projection partials
+    are psum'd into the replicated block output.  Collective bytes are
+    priced by ``core.perfmodel.sharded_mbconv_traffic``.
+
+    Requires ``b % data == 0`` and ``c_mid % model == 0``.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    return _mbconv_sharded_op(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2,
+                              w_proj, mesh, stride, padding, tile_h, mode,
+                              exp_act, dw_act, interpret)

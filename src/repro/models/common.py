@@ -80,6 +80,7 @@ def separable_block(
     dw_act: Optional[str] = "relu",
     act: Optional[str] = "relu",
     kcfg=None,
+    mesh=None,
 ) -> jax.Array:
     """Apply one separable block, routed by the conv-kernel config.
 
@@ -90,23 +91,40 @@ def separable_block(
     pipeline runs (DW kernel -> HBM -> PW matmul).  ``kcfg`` defaults to
     ``repro.configs.base.kernel_config()``.
 
+    With a ``mesh`` (and ``kcfg.shard_fused``), the fused kernel runs
+    mesh-sharded via ``shard_map``: batch on "data", c_out on "model"
+    (``kernels.convdk_fused_separable_sharded``) — falling back to the
+    single-device kernel when the mesh axes do not divide the grid.  The
+    schedule is then solved per partitioning (``mesh_shape`` is a cache
+    key axis).
+
     x: (B, H, W, C_in) NHWC -> (B, H', W', C_out).
     """
     if kcfg is None:
         # lazy import: configs.base imports models.model -> models.common
         from ..configs.base import kernel_config
         kcfg = kernel_config()
-    from ..kernels import convdk_fused_separable, convdk_separable_staged
+    from ..kernels import (
+        can_shard_fused, conv_mesh_shape, convdk_fused_separable,
+        convdk_fused_separable_sharded, convdk_separable_staged,
+    )
 
     w_dw = params["dw"].astype(x.dtype)
     w_pw = params["pw"].astype(x.dtype)
+    sharded = (mesh is not None and kcfg.shard_fused and kcfg.fused_separable
+               and can_shard_fused(mesh, x.shape[0], w_pw.shape[1]))
+    mesh_shape = conv_mesh_shape(mesh) if sharded else (1, 1)
     tile_h = kcfg.tile_h
     if kcfg.autotune:
         from ..core.autotune import get_fused_schedule
         b, h, w, c_in = x.shape
         tile_h = get_fused_schedule(
             b, h, w, c_in, w_pw.shape[1], w_dw.shape[0], stride,
-            dtype_bytes=x.dtype.itemsize).tile_h
+            dtype_bytes=x.dtype.itemsize, mesh_shape=mesh_shape).tile_h
+    if sharded:
+        return convdk_fused_separable_sharded(
+            x, w_dw, w_pw, mesh=mesh, stride=stride, padding=padding,
+            tile_h=tile_h, dw_act=dw_act, act=act, interpret=kcfg.interpret)
     route = (convdk_fused_separable if kcfg.fused_separable
              else convdk_separable_staged)
     return route(x, w_dw, w_pw, stride=stride, padding=padding,

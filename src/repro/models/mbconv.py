@@ -147,6 +147,7 @@ def mbconv_block(
     exp_act: Optional[str] = "silu",
     dw_act: Optional[str] = "silu",
     kcfg=None,
+    mesh=None,
 ) -> jax.Array:
     """Apply one MBConv block, routed by the conv-kernel config.
 
@@ -158,13 +159,23 @@ def mbconv_block(
     ``kcfg`` pins one.  The identity residual is added when the shapes
     allow (s == 1, C_in == C_out).
 
+    With a ``mesh`` (and ``kcfg.shard_fused``), the fused pipeline runs
+    mesh-sharded via ``shard_map``: batch on "data", the expanded c_mid
+    grid on "model", the SE pool psum'd across the model axis
+    (``kernels.convdk_mbconv_fused_sharded``) — falling back to the
+    single-device kernel when the mesh axes do not divide the grid.  The
+    (tile_h, mode) schedule is then solved per partitioning.
+
     x: (B, H, W, C_in) NHWC -> (B, H', W', C_out).
     """
     if kcfg is None:
         # lazy import: configs.base imports models.model -> models.mbconv
         from ..configs.base import kernel_config
         kcfg = kernel_config()
-    from ..kernels import convdk_mbconv_fused, convdk_mbconv_staged
+    from ..kernels import (
+        can_shard_fused, conv_mesh_shape, convdk_mbconv_fused,
+        convdk_mbconv_fused_sharded, convdk_mbconv_staged,
+    )
 
     c_in = x.shape[-1]
     c_mid = params["dw"].shape[-1]
@@ -178,6 +189,9 @@ def mbconv_block(
         w_exp = jnp.eye(c_mid, dtype=x.dtype)
         eff_exp_act = None
 
+    sharded = (mesh is not None and kcfg.shard_fused and kcfg.fused_mbconv
+               and can_shard_fused(mesh, x.shape[0], c_mid))
+    mesh_shape = conv_mesh_shape(mesh) if sharded else (1, 1)
     tile_h, mode = kcfg.tile_h, kcfg.mbconv_mode or "retain"
     if kcfg.autotune:
         from ..core.autotune import get_mbconv_schedule
@@ -185,14 +199,20 @@ def mbconv_block(
         se_ratio = params["se_w1"].shape[1] / max(1, c_in)
         sch = get_mbconv_schedule(
             b, h, w, c_in, c_mid, c_out, params["dw"].shape[0], stride,
-            se_ratio=se_ratio, dtype_bytes=x.dtype.itemsize)
+            se_ratio=se_ratio, dtype_bytes=x.dtype.itemsize,
+            mesh_shape=mesh_shape)
         tile_h = sch.tile_h
         mode = kcfg.mbconv_mode or sch.mode
 
     args = (x, w_exp, params["dw"].astype(x.dtype),
             params["se_w1"], params["se_b1"], params["se_w2"],
             params["se_b2"], params["proj"].astype(x.dtype))
-    if kcfg.fused_mbconv:
+    if sharded:
+        out = convdk_mbconv_fused_sharded(
+            *args, mesh=mesh, stride=stride, padding=padding, tile_h=tile_h,
+            mode=mode, exp_act=eff_exp_act, dw_act=dw_act,
+            interpret=kcfg.interpret)
+    elif kcfg.fused_mbconv:
         out = convdk_mbconv_fused(
             *args, stride=stride, padding=padding, tile_h=tile_h, mode=mode,
             exp_act=eff_exp_act, dw_act=dw_act, interpret=kcfg.interpret)
@@ -229,12 +249,13 @@ def efficientnet_b0_def(cfg: EffNetConfig = EffNetConfig()) -> dict:
 
 def efficientnet_b0_apply(params: dict, images: jax.Array,
                           cfg: EffNetConfig = EffNetConfig(),
-                          kcfg=None) -> jax.Array:
+                          kcfg=None, mesh=None) -> jax.Array:
     """(B, H, W, 3) images -> (B, num_classes) logits.
 
     Every MBConv block runs the two-pass fused ConvDK pipeline (or the
     staged baseline, per ``kcfg``) — EfficientNet-B0 end to end through the
-    paper's dataflow."""
+    paper's dataflow.  With ``mesh``, every shardable block runs the
+    mesh-sharded fused pipeline (see ``mbconv_block``)."""
     specs = effnet_block_specs(cfg)
     dt = jnp.dtype(cfg.dtype)
     x = jax.lax.conv_general_dilated(
@@ -242,7 +263,8 @@ def efficientnet_b0_apply(params: dict, images: jax.Array,
         dimension_numbers=("NHWC", "HWIO", "NHWC"))
     x = jax.nn.silu(x)
     for i, sp in enumerate(specs):
-        x = mbconv_block(params[f"block{i}"], x, stride=sp.s, kcfg=kcfg)
+        x = mbconv_block(params[f"block{i}"], x, stride=sp.s, kcfg=kcfg,
+                         mesh=mesh)
     x = jax.nn.silu(jnp.einsum("bhwc,cd->bhwd", x,
                                params["head"].astype(x.dtype)))
     x = x.mean(axis=(1, 2))

@@ -137,6 +137,70 @@ def test_cache_key_includes_full_tpu_config(cache_dir):
     assert len(_entries(tmp_path)) == 3          # three distinct keys
 
 
+def test_sharded_and_unsharded_picks_do_not_collide(cache_dir):
+    """Regression for the mesh_shape cache axis: sharded and unsharded
+    schedules for the SAME layer shape live under distinct keys, and a
+    disk round-trip edits exactly the partitioning it targets."""
+    tmp_path, cache = cache_dir
+    base = get_mbconv_schedule(8, 14, 14, 80, 480, 112, 5, 1)
+    sharded = get_mbconv_schedule(8, 14, 14, 80, 480, 112, 5, 1,
+                                  mesh_shape=(2, 4))
+    assert base.mesh_shape == (1, 1) and sharded.mesh_shape == (2, 4)
+    entries = _entries(tmp_path)
+    keys = [k for k in entries if k.startswith("mbconv|")]
+    assert len(keys) == 2                      # no collision
+    (ukey,) = [k for k in keys if "|mesh1x1|" in k]
+    (skey,) = [k for k in keys if "|mesh2x4|" in k]
+    assert ukey.replace("|mesh1x1|", "|mesh2x4|") == skey   # same layer key
+
+    # round-trip: a measured edit to the SHARDED entry survives a
+    # "restart" and steers only the sharded lookup
+    entries[skey] = dict(entries[skey], tile_h=1, mode="recompute",
+                         source="measured")
+    (tmp_path / "convdk_schedules.json").write_text(
+        json.dumps({"version": 1, "entries": entries}))
+    cache.clear_memory()
+    again = get_mbconv_schedule(8, 14, 14, 80, 480, 112, 5, 1,
+                                mesh_shape=(2, 4))
+    assert (again.tile_h, again.mode) == (1, "recompute")
+    unsharded = get_mbconv_schedule(8, 14, 14, 80, 480, 112, 5, 1)
+    assert (unsharded.tile_h, unsharded.mode) == (base.tile_h, base.mode)
+
+    # separable family too, and non-divisible grids normalize to the
+    # EFFECTIVE factors — all-or-nothing, exactly the kernel routing's
+    # can_shard_fused policy, so the cache never holds a partitioning the
+    # kernels will not run
+    get_fused_schedule(8, 28, 28, 64, 64, 3, 1)
+    sharded_sep = get_fused_schedule(8, 28, 28, 64, 64, 3, 1,
+                                     mesh_shape=(4, 2))
+    assert sharded_sep.mesh_shape == (4, 2)
+    half = get_fused_schedule(8, 28, 28, 64, 63, 3, 1, mesh_shape=(4, 2))
+    assert half.mesh_shape == (1, 1)           # batch divides, c_out no ->
+    odd = get_fused_schedule(7, 28, 28, 64, 63, 3, 1, mesh_shape=(4, 2))
+    assert odd.mesh_shape == (1, 1)            # ... whole layer 1-core
+    sep_keys = [k for k in _entries(tmp_path) if k.startswith("sep|")]
+    assert sorted(k.split("|")[3] for k in sep_keys) == \
+        ["mesh1x1", "mesh1x1", "mesh1x1", "mesh4x2"]
+
+
+def test_legacy_pre_mesh_keys_migrate(cache_dir):
+    """Entries persisted before the mesh_shape key axis (no ``mesh``
+    segment) were all single-device picks: they must be honored as the
+    ``mesh1x1`` entries — a measured sweep from an old deployment keeps
+    outranking model picks instead of being silently orphaned."""
+    tmp_path, cache = cache_dir
+    sch = get_fused_schedule(1, 28, 28, 192, 64, 3, 2)
+    (key,) = list(_entries(tmp_path))
+    legacy_key = key.replace("|mesh1x1|", "|")
+    assert "|mesh" not in legacy_key and len(legacy_key.split("|")) == 5
+    edited = 2 if sch.tile_h != 2 else 4
+    (tmp_path / "convdk_schedules.json").write_text(json.dumps(
+        {"version": 1,
+         "entries": {legacy_key: {"tile_h": edited, "source": "measured"}}}))
+    cache.clear_memory()                       # "new process", old file
+    assert get_fused_schedule(1, 28, 28, 192, 64, 3, 2).tile_h == edited
+
+
 def test_corrupt_cache_file_is_ignored(cache_dir):
     tmp_path, _cache = cache_dir
     (tmp_path / "convdk_schedules.json").write_text("{not json")

@@ -11,16 +11,26 @@ DESIGN.md §Reproduction-fidelity:
 
 
 import pytest
+from hypothesis import given, settings, strategies as st
 
 from repro.core.perfmodel import (
     DATAFLOWS,
+    MBCONV_MODES,
     MacroConfig,
+    MBConvShape,
     compare_networks,
     cost_ws_convdk,
+    mbconv_fused_traffic,
     reduction,
+    sharded_mbconv_staged_traffic,
+    sharded_mbconv_traffic,
 )
 from repro.core.tiling import DWLayer, plan_layer
-from repro.core.workloads import NETWORKS, PAPER_BANDS
+from repro.core.workloads import (
+    EFFICIENTNET_B0_MBCONV,
+    NETWORKS,
+    PAPER_BANDS,
+)
 
 MACRO = MacroConfig()
 
@@ -191,6 +201,68 @@ def test_dram_traffic_pipelined(results):
     for name, flows in results.items():
         for cost in flows["ws_convdk"].layers:
             assert cost.dram_pipelined_ok(MACRO), (name, cost.layer)
+
+
+# ---------------------------------------------------------------------------
+# Sharded traffic: the paper's reduction claim must survive partitioning
+# ---------------------------------------------------------------------------
+
+SHARD_MESHES = ((8, 1), (4, 2), (2, 4))
+
+
+def _b0_shape(layer, b=8):
+    ci, co, e, k, s, hw = layer
+    return MBConvShape(b=b, h=hw, w=hw, c_in=ci, c_mid=ci * e, c_out=co,
+                       k=k, s=s)
+
+
+@given(layer=st.sampled_from(list(EFFICIENTNET_B0_MBCONV)),
+       mesh=st.sampled_from(SHARD_MESHES),
+       tile_h=st.sampled_from([1, 2, 4, 8, 16, 32]),
+       mode=st.sampled_from(list(MBCONV_MODES)))
+@settings(max_examples=150, deadline=None)
+def test_sharded_traffic_survives_partitioning(layer, mesh, tile_h, mode):
+    """Property, any B0 layer x mesh shape x (tile_h, mode):
+
+    (a) per-DEVICE sharded traffic never exceeds the single-device traffic
+        of the same schedule — sharding must divide the modeled HBM words,
+        never multiply them;
+    (b) the SE-squeeze/projection psum bytes are IDENTICAL for the fused
+        and staged pipelines (both reduce over the full c_mid), so
+    (c) total sharded bytes (every device's HBM + collectives) of the
+        AUTOTUNED schedule stay strictly below the identically partitioned
+        staged baseline — the paper's reduction claim under partitioning.
+    """
+    from repro.core.autotune import select_mbconv_schedule
+
+    shape = _b0_shape(layer)
+    tile_h = max(1, min(tile_h, shape.out_h))
+    sharded = sharded_mbconv_traffic(shape, tile_h, mode, mesh)
+    single = mbconv_fused_traffic(shape, tile_h, mode)
+    assert sharded.per_device_bytes <= single.total_bytes, (layer, mesh)
+    assert sharded.n_devices == mesh[0] * mesh[1]      # B0 grids all divide
+
+    staged = sharded_mbconv_staged_traffic(shape, tile_h, mesh)
+    assert sharded.collective_words == staged.collective_words
+
+    sch = select_mbconv_schedule(shape, mesh_shape=mesh)
+    assert sch.mesh_shape == mesh
+    assert sch.total_bytes < sch.staged_total_bytes, (layer, mesh, sch)
+
+
+def test_sharded_b0_gate_exhaustive():
+    """The (c) leg of the property, exhaustively: every B0 layer x every
+    mesh shape, at the autotuned schedule (the CI ``--mesh`` gate's exact
+    claim)."""
+    from repro.core.autotune import select_mbconv_schedule
+
+    for layer in EFFICIENTNET_B0_MBCONV:
+        for mesh in SHARD_MESHES + ((1, 1),):
+            shape = _b0_shape(layer)
+            sch = select_mbconv_schedule(shape, mesh_shape=mesh)
+            assert sch.total_bytes < sch.staged_total_bytes, (layer, mesh)
+            # the psum term is live exactly when the model axis shards
+            assert (sch.collective_words > 0) == (mesh[1] > 1), (layer, mesh)
 
 
 def test_macs_conserved():
