@@ -6,13 +6,19 @@ Emits ``name,us_per_call,derived`` CSV rows like benchmarks/run.py expects.
 ``--fused`` additionally prints the fused-vs-staged traffic comparison for
 BOTH fused block families (autotuned schedules):
 
-* every MobileNet-V2 separable block (single-pass fused kernel), and
+* every MobileNet-V2 separable block plus the EfficientNet-V2-style k=7
+  stem rows (single-pass fused kernel), and
 * every EfficientNet-B0 MBConv block (two-pass SE-aware fused kernel,
   per-layer retain/recompute choice),
 
-plus interpret-mode wall times on one block of each.  Exits nonzero if any
-layer's fused traffic is not strictly below the staged baseline — the CI
-gate for the tentpole claim.
+plus interpret-mode wall times on one block of each.  Every reported
+number is labeled with the **residency** (input-staging mode, see
+``kernels.staging``) it was modeled/measured under — ``--residency``
+selects the mode(s): ``auto`` (default; the autotuner solves residency per
+layer and the report shows its pick), one of ``resident`` / ``strip_dma``
+/ ``strip_dma_db``, or a comma list for a per-mode report.  Exits nonzero
+if any layer's fused traffic is not strictly below the staged baseline
+under any requested mode — the CI gate for the tentpole claim.
 """
 
 from __future__ import annotations
@@ -26,11 +32,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.autotune import get_fused_schedule, get_mbconv_schedule
-from repro.core.workloads import EFFICIENTNET_B0_MBCONV, MOBILENET_V2_SEPARABLE
+from repro.core.perfmodel import RESIDENCY_MODES
+from repro.core.workloads import (
+    EFFICIENTNET_B0_MBCONV,
+    EFFICIENTNET_V2_K7_SEPARABLE,
+    MOBILENET_V2_SEPARABLE,
+)
 from repro.kernels import (
-    causal_conv1d_ref, convdk_causal_conv1d, convdk_depthwise2d,
-    convdk_fused_separable, convdk_mbconv_fused, convdk_mbconv_staged,
-    convdk_separable_staged, depthwise2d_ref, mbconv_ref, separable_ref,
+    DEFAULT_RESIDENCY, causal_conv1d_ref, convdk_causal_conv1d,
+    convdk_depthwise2d, convdk_fused_separable, convdk_mbconv_fused,
+    convdk_mbconv_staged, convdk_separable_staged, depthwise2d_ref,
+    mbconv_ref, separable_ref,
 )
 
 
@@ -57,7 +69,9 @@ def rows():
     out.append(("convdk_dw2d_28x28x128_interp", us_k, f"maxerr={err:.1e}"))
     out.append(("lax_dw2d_28x28x128_ref", us_r, ""))
 
-    # fused separable block: same layer + 1x1 projection to 64 channels
+    # fused separable block: same layer + 1x1 projection to 64 channels.
+    # The fused kernel runs its default staging mode — labeled, so the
+    # wall time is never misattributed to a residency it did not run.
     wp = jnp.asarray(rng.normal(size=(128, 64)), jnp.float32)
     us_f = _time(lambda: convdk_fused_separable(x, w, wp, interpret=True))
     us_s = _time(lambda: convdk_separable_staged(x, w, wp, interpret=True))
@@ -65,7 +79,7 @@ def rows():
     err = float(jnp.abs(convdk_fused_separable(x, w, wp, interpret=True)
                         - separable_ref(x, w, wp)).max())
     out.append(("convdk_fused_sep_28x28x128to64_interp", us_f,
-                f"maxerr={err:.1e}"))
+                f"maxerr={err:.1e} res={DEFAULT_RESIDENCY}"))
     out.append(("convdk_staged_sep_28x28x128to64_interp", us_s, ""))
     out.append(("xla_sep_28x28x128to64_ref", us_x, ""))
 
@@ -81,37 +95,55 @@ def rows():
     return out
 
 
-def fused_traffic_report(mesh_shape=(1, 1)) -> bool:
+def fused_traffic_report(mesh_shape=(1, 1), residency=None) -> bool:
     """Modeled HBM traffic, fused vs staged, every MobileNet-V2 separable
-    block (f32).  Returns True iff fused < staged for ALL layers.
+    block plus the k=7 EfficientNet-V2 stem rows (f32).  Returns True iff
+    fused < staged for ALL layers.
 
-    With a non-trivial ``mesh_shape`` the comparison is the SHARDED one
-    (batch 8 over "data", c_out over "model"): per-device fused bytes vs
-    the staged pipeline partitioned identically, totals summed over the
-    mesh (the separable sharding is collective-free)."""
+    ``residency=None`` lets the autotuner solve the staging mode per layer
+    (the pick is the ``residency`` column); a pinned mode prices every
+    layer under that mode.  With a non-trivial ``mesh_shape`` the
+    comparison is the SHARDED one (batch 8 over "data", c_out over
+    "model"): per-device fused bytes vs the staged pipeline partitioned
+    identically, totals summed over the mesh (the separable sharding is
+    collective-free)."""
     b = 8 if mesh_shape != (1, 1) else 1
-    print(f"# mesh={mesh_shape[0]}x{mesh_shape[1]} batch={b}")
-    print("layer,c_in,hw,s,c_out,tile_h,per_dev_bytes,"
-          "fused_bytes,staged_bytes,saving_pct")
+    print(f"# mesh={mesh_shape[0]}x{mesh_shape[1]} batch={b} "
+          f"residency={residency or 'auto'}")
+    print("layer,c_in,hw,k,s,c_out,tile_h,residency,mesh,per_dev_bytes,"
+          "dma_issues,fused_bytes,staged_bytes,saving_pct")
     ok = True
-    for i, (layer, c_out) in enumerate(MOBILENET_V2_SEPARABLE):
+    table = ([(f"mbv2_dw{i}", layer, c_out)
+              for i, (layer, c_out) in enumerate(MOBILENET_V2_SEPARABLE)]
+             + [(f"effv2_k7_dw{i}", layer, c_out)
+                for i, (layer, c_out) in enumerate(
+                    EFFICIENTNET_V2_K7_SEPARABLE)])
+    for name, layer, c_out in table:
         sch = get_fused_schedule(b, layer.h, layer.w, layer.c, c_out,
-                                 layer.k, layer.s, mesh_shape=mesh_shape)
+                                 layer.k, layer.s, mesh_shape=mesh_shape,
+                                 residency=residency)
         f, s = sch.total_bytes, sch.staged_total_bytes
         ok &= f < s
-        print(f"mbv2_dw{i},{layer.c},{layer.h},{layer.s},{c_out},"
-              f"{sch.tile_h},{sch.traffic.total_bytes},{f},{s},"
+        # mesh column is the EFFECTIVE partitioning: a grid the mesh axes
+        # do not divide silently prices (and runs) single-device — the
+        # label keeps such rows from masquerading as sharded numbers
+        print(f"{name},{layer.c},{layer.h},{layer.k},{layer.s},{c_out},"
+              f"{sch.tile_h},{sch.residency},"
+              f"{sch.mesh_shape[0]}x{sch.mesh_shape[1]},"
+              f"{sch.traffic.total_bytes},"
+              f"{sch.traffic.dma_issues},{f},{s},"
               f"{100 * sch.modeled_saving:.1f}")
-    print(f"# fused strictly below staged on all layers: {ok}")
+    print(f"# fused strictly below staged on all layers "
+          f"[residency={residency or 'auto'}]: {ok}")
     return ok
 
 
-def mbconv_traffic_report(mesh_shape=(1, 1)) -> bool:
+def mbconv_traffic_report(mesh_shape=(1, 1), residency=None) -> bool:
     """Modeled HBM traffic of the two-pass fused MBConv pipeline vs the
     staged DW->HBM->SE->PW baseline for every EfficientNet-B0 MBConv block
-    (f32), with the autotuned (tile_h, retain/recompute) schedule.
-    Returns True iff the two-pass traffic is strictly below staged for ALL
-    layers.
+    (f32), with the autotuned (tile_h, retain/recompute, residency)
+    schedule — ``residency`` pins the staging mode when given.  Returns
+    True iff the two-pass traffic is strictly below staged for ALL layers.
 
     With a non-trivial ``mesh_shape`` the comparison is the SHARDED one
     (batch 8 over "data", c_mid over "model"): per-device fused bytes plus
@@ -119,26 +151,32 @@ def mbconv_traffic_report(mesh_shape=(1, 1)) -> bool:
     partitioned identically (which pays the SAME psums — its reductions
     over c_mid are the same collectives)."""
     b = 8 if mesh_shape != (1, 1) else 1
-    print(f"# mesh={mesh_shape[0]}x{mesh_shape[1]} batch={b}")
-    print("layer,c_in,c_mid,c_out,hw,k,s,tile_h,mode,per_dev_bytes,"
-          "psum_bytes,fused_bytes,staged_bytes,saving_pct")
+    print(f"# mesh={mesh_shape[0]}x{mesh_shape[1]} batch={b} "
+          f"residency={residency or 'auto'}")
+    print("layer,c_in,c_mid,c_out,hw,k,s,tile_h,mode,residency,mesh,"
+          "per_dev_bytes,dma_issues,psum_bytes,fused_bytes,staged_bytes,"
+          "saving_pct")
     ok = True
     for i, (ci, co, e, k, s, hw) in enumerate(EFFICIENTNET_B0_MBCONV):
         sch = get_mbconv_schedule(b, hw, hw, ci, ci * e, co, k, s,
-                                  mesh_shape=mesh_shape)
+                                  mesh_shape=mesh_shape, residency=residency)
         f, st = sch.total_bytes, sch.staged_total_bytes
         ok &= f < st
         print(f"b0_mbconv{i},{ci},{ci * e},{co},{hw},{k},{s},"
-              f"{sch.tile_h},{sch.mode},{sch.traffic.total_bytes},"
+              f"{sch.tile_h},{sch.mode},{sch.residency},"
+              f"{sch.mesh_shape[0]}x{sch.mesh_shape[1]},"
+              f"{sch.traffic.total_bytes},{sch.traffic.dma_issues},"
               f"{sch.collective_bytes},{f},{st},"
               f"{100 * sch.modeled_saving:.1f}")
-    print(f"# two-pass fused strictly below staged on all layers: {ok}")
+    print(f"# two-pass fused strictly below staged on all layers "
+          f"[residency={residency or 'auto'}]: {ok}")
     return ok
 
 
 def mbconv_walltime_row():
     """Interpret-mode wall times + numerics check on one small MBConv block
-    (fused two-pass vs staged vs the pure-lax reference)."""
+    (fused two-pass vs staged vs the pure-lax reference).  Fused rows are
+    labeled with the residency they executed under."""
     rng = np.random.default_rng(1)
     ci, e, co, k = 16, 4, 24, 3
     cm, cse = ci * e, max(1, ci // 4)
@@ -158,8 +196,9 @@ def mbconv_walltime_row():
         - mbconv_ref(*args, stride=2)).max())
     return [
         ("convdk_mbconv_retain_28x28x16e4to24_interp", us_f,
-         f"maxerr={err:.1e}"),
-        ("convdk_mbconv_recompute_28x28x16e4to24_interp", us_r, ""),
+         f"maxerr={err:.1e} res={DEFAULT_RESIDENCY}"),
+        ("convdk_mbconv_recompute_28x28x16e4to24_interp", us_r,
+         f"res={DEFAULT_RESIDENCY}"),
         ("convdk_mbconv_staged_28x28x16e4to24_interp", us_s, ""),
         ("xla_mbconv_28x28x16e4to24_ref", us_x, ""),
     ]
@@ -175,26 +214,55 @@ def _parse_mesh(text):
     return dp, mp
 
 
+def _parse_residencies(text):
+    """'auto' | mode | comma list -> list of residency requests (None =
+    solver's choice)."""
+    reqs = []
+    for token in text.lower().split(","):
+        token = token.strip()
+        if token == "auto":
+            reqs.append(None)
+        elif token in RESIDENCY_MODES:
+            reqs.append(token)
+        else:
+            raise SystemExit(
+                f"--residency wants auto or one of {RESIDENCY_MODES} "
+                f"(comma list ok), got {token!r}")
+    return reqs
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--fused", action="store_true",
                     help="print the fused-vs-staged HBM traffic comparison "
-                         "for every MobileNet-V2 separable block AND every "
-                         "EfficientNet-B0 MBConv block (exit 1 if the fused "
-                         "pipeline loses any layer)")
+                         "for every MobileNet-V2 separable block (+ k=7 "
+                         "stem rows) AND every EfficientNet-B0 MBConv "
+                         "block (exit 1 if the fused pipeline loses any "
+                         "layer under any requested residency)")
     ap.add_argument("--mesh", default=None, metavar="DxM",
                     help="with --fused: price the SHARDED pipelines over a "
                          "(data, model) mesh of this shape — per-device "
                          "traffic + psum bytes vs the identically "
                          "partitioned staged baseline (e.g. --mesh 2x4)")
+    ap.add_argument("--residency", default="auto", metavar="MODE[,MODE...]",
+                    help="with --fused: input-staging mode(s) to price the "
+                         "fused pipelines under — auto (default: the "
+                         "autotuner solves per layer), resident, strip_dma, "
+                         "strip_dma_db, or a comma list for per-mode "
+                         "reports")
     args = ap.parse_args()
     if args.mesh is not None and not args.fused:
         raise SystemExit("--mesh requires --fused")
+    if args.residency != "auto" and not args.fused:
+        raise SystemExit("--residency requires --fused")
     if args.fused:
         mesh_shape = _parse_mesh(args.mesh) if args.mesh else (1, 1)
-        ok = fused_traffic_report(mesh_shape)
-        print()
-        ok &= mbconv_traffic_report(mesh_shape)
+        ok = True
+        for res in _parse_residencies(args.residency):
+            ok &= fused_traffic_report(mesh_shape, res)
+            print()
+            ok &= mbconv_traffic_report(mesh_shape, res)
+            print()
         for name, us, derived in mbconv_walltime_row():
             print(f"{name},{us:.1f},{derived}")
         sys.exit(0 if ok else 1)

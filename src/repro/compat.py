@@ -54,6 +54,89 @@ def shard_map_compat(f, mesh, in_specs, out_specs):
                      check_rep=False)
 
 
+# ---------------------------------------------------------------------------
+# Pallas DMA surface (the strip-staging engine in kernels/staging.py)
+#
+# The production rendering of the fused ConvDK kernels keeps the input in
+# the ANY/HBM memory space and DMAs each halo'd strip window into VMEM
+# scratch with ``pltpu.make_async_copy``.  Interpret mode (the CI backend)
+# executes the SAME DMA-structured code path — the interpreter implements
+# the copy/semaphore primitives — so parity tests genuinely exercise the
+# staging structure.  These shims pin the few symbols that moved between
+# pallas releases (memory-space spelling, semaphore types) and degrade to a
+# synchronous-copy object on builds without DMA tracing support, keeping
+# the kernel code itself version-free.
+# ---------------------------------------------------------------------------
+
+def _pltpu():
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu
+
+
+def pallas_any_memory_space():
+    """The ANY (compiler-placed, HBM-capable) memory space marker."""
+    pltpu = _pltpu()
+    if hasattr(pltpu, "ANY"):
+        return pltpu.ANY
+    return pltpu.TPUMemorySpace.ANY  # pre-0.4.3x spelling
+
+
+def pallas_supports_dma() -> bool:
+    """True when this pallas build can trace async copies + DMA semaphores
+    (every supported JAX; the fallback exists so exotic builds still run the
+    staged structure, just with synchronous copies and no semaphores)."""
+    pltpu = _pltpu()
+    return hasattr(pltpu, "make_async_copy") \
+        and hasattr(pltpu, "SemaphoreType")
+
+
+def pallas_dma_semaphores(n: int):
+    """Scratch-shape entry for an ``n``-slot DMA semaphore array."""
+    return _pltpu().SemaphoreType.DMA((n,))
+
+
+class _SyncCopy:
+    """Degenerate async-copy object: copies on ``start``, no-op ``wait``.
+
+    Only used when ``pallas_supports_dma()`` is False — the staging engine
+    then runs the identical start/wait protocol without real semaphores.
+    """
+
+    def __init__(self, src, dst):
+        self.src, self.dst = src, dst
+
+    def start(self):
+        self.dst[...] = self.src[...]
+
+    def wait(self):
+        pass
+
+
+def pallas_async_copy(src, dst, sem):
+    """``pltpu.make_async_copy`` across versions (sync-copy fallback)."""
+    pltpu = _pltpu()
+    if sem is not None and hasattr(pltpu, "make_async_copy"):
+        return pltpu.make_async_copy(src, dst, sem)
+    return _SyncCopy(src, dst)
+
+
+def residual_barrier(res):
+    """Block jit's input->output forwarding on a custom_vjp residual tuple.
+
+    When a ``custom_vjp`` op whose residuals ARE its inputs sits under
+    ``jax.jit`` with a ``shard_map`` in its primal (the cached sharded
+    conv entry points), the installed JAX's partial-eval forwards the
+    inputs straight to the residual outputs and the cotangent of one
+    operand gets double-counted (observed: the sharded MBConv's ``w_dw``
+    gradient exactly 2x).  An ``optimization_barrier`` around the
+    residuals keeps them distinct values, restoring exact gradients; on
+    builds without the primitive this degrades to identity (those builds
+    predate the forwarding rewrite that miscounts).
+    """
+    barrier = getattr(jax.lax, "optimization_barrier", None)
+    return barrier(res) if barrier is not None else res
+
+
 @contextlib.contextmanager
 def activate_mesh(mesh):
     """Enter a mesh context: ``jax.set_mesh`` when available, else the

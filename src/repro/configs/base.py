@@ -34,9 +34,13 @@ class ConvKernelConfig:
     the staged DW->HBM->SE->PW baseline.
     ``mbconv_mode`` pins the pass-2 DW source ("retain" | "recompute");
     None lets the autotuner pick per layer shape from the traffic model.
-    ``autotune`` picks ``tile_h`` (and the MBConv mode) per layer shape from
-    the HBM traffic model (``core.autotune``); off = the fixed ``tile_h``
-    default.
+    ``residency`` pins the input-staging mode of the fused kernels
+    ("resident" | "strip_dma" | "strip_dma_db", see ``kernels.staging``);
+    None lets the autotuner solve it per layer shape (or falls back to the
+    kernels' double-buffered default when ``autotune`` is off).
+    ``autotune`` picks ``tile_h`` (plus the MBConv mode and the residency)
+    per layer shape from the HBM traffic model (``core.autotune``); off =
+    the fixed ``tile_h`` default.
     ``shard_fused`` routes the fused kernels through their ``shard_map``
     wrappers (``kernels.convdk_sharded``: batch on "data", the channel
     grid on "model", the MBConv SE pool psum'd across the model axis)
@@ -50,6 +54,7 @@ class ConvKernelConfig:
     fused_separable: bool = True
     fused_mbconv: bool = True
     mbconv_mode: Optional[str] = None
+    residency: Optional[str] = None
     autotune: bool = True
     shard_fused: bool = True
     tile_h: int = 8

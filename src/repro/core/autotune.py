@@ -7,11 +7,15 @@ optional measured fallback sweep (ground truth when the model cannot
 separate candidates, or when a deployment wants real timings).  Two block
 families are solved:
 
-* separable (``FusedSchedule``): DW + PW in one pass — pick ``tile_h``;
+* separable (``FusedSchedule``): DW + PW in one pass — pick ``tile_h`` AND
+  the input **residency** ("resident" | "strip_dma" | "strip_dma_db", the
+  staging-engine axis: VMEM feasibility counts the slot buffers — 2x strip
+  scratch for double-buffering — and the traffic model prices each mode);
 * MBConv (``MBConvSchedule``): expand + DW + SE + PW in two passes — pick
-  ``tile_h`` AND the pass-2 ``mode`` ("retain" writes the DW tensor to HBM
-  once and re-reads it; "recompute" re-runs expand+DW from the input
-  strips; the traffic model prices the crossover per layer shape).
+  ``tile_h``, the residency, AND the pass-2 ``mode`` ("retain" writes the
+  DW tensor to HBM once and re-reads it; "recompute" re-runs expand+DW
+  from the input strips; the traffic model prices the crossover per layer
+  shape).
 
 Schedule solving is trace-time work and must never re-run inside a jitted
 step, so selections are cached.  The cache has two layers:
@@ -36,21 +40,32 @@ from pathlib import Path
 from typing import Dict, Optional, Sequence, Tuple
 
 from .perfmodel import (
+    DEFAULT_RESIDENCY,
     MBCONV_MODES,
+    RESIDENCY_MODES,
     HBMTraffic,
     MBConvShape,
     SeparableShape,
     mbconv_shard,
+    mbconv_staging_bytes,
     pick_channel_block,
     separable_shard,
+    separable_staging_bytes,
     shard_factors,
     sharded_mbconv_staged_traffic,
     sharded_mbconv_traffic,
     sharded_separable_staged_traffic,
     sharded_separable_traffic,
+    validate_residency,
 )
 
 MeshShape = Tuple[int, int]   # ("data", "model") axis sizes, (1, 1) = 1 core
+
+# Solver preference among byte-identical residencies: double-buffering hides
+# the strip DMA behind compute at 2x scratch, single-slot DMA is the
+# VMEM-tight fallback, and full-height residency is the last resort (its
+# traffic collapses only for single-channel-block layers that fit VMEM).
+_RESIDENCY_RANK = {"strip_dma_db": 0, "strip_dma": 1, "resident": 2}
 
 
 @dataclass(frozen=True)
@@ -114,6 +129,7 @@ class FusedSchedule(_ScheduleTotals):
     staged_traffic: HBMTraffic   # modeled staged-pipeline traffic (baseline)
     mesh_shape: Tuple[int, int] = (1, 1)
     collective_words: int = 0
+    residency: str = DEFAULT_RESIDENCY   # input-staging mode (the new axis)
 
 
 @dataclass(frozen=True)
@@ -133,6 +149,7 @@ class MBConvSchedule(_ScheduleTotals):
     staged_traffic: HBMTraffic   # modeled staged MBConv pipeline (baseline)
     mesh_shape: Tuple[int, int] = (1, 1)
     collective_words: int = 0
+    residency: str = DEFAULT_RESIDENCY   # input-staging mode (the new axis)
 
 
 def _round_up(x: int, m: int) -> int:
@@ -178,17 +195,26 @@ class ScheduleCache:
 
     @staticmethod
     def _migrate_key(key: str) -> str:
-        """Upgrade a pre-mesh cache key in place: entries persisted before
-        the ``mesh_shape`` schedule axis (5 segments, no ``mesh`` segment)
-        were all solved single-device, so they ARE the ``mesh1x1`` picks —
-        a measured sweep recorded under the old format must keep outranking
-        model picks instead of being silently orphaned."""
+        """Upgrade legacy cache keys in place, chaining the two schema
+        migrations so measured sweeps keep outranking model picks instead
+        of being silently orphaned:
+
+        * pre-mesh entries (5 segments, no ``mesh`` segment) were all
+          solved single-device — they ARE the ``mesh1x1`` picks;
+        * pre-residency entries (no ``res=`` segment) were solved before
+          residency was a pinnable axis — they ARE the ``res=auto`` picks
+          (the solver now chooses the residency; a legacy measured tile_h
+          keeps its priority and the residency is re-solved at that
+          tile_h, see ``get_fused_schedule``)."""
         parts = key.split("|")
         if len(parts) == 5 and parts[0] in ("sep", "mbconv") \
                 and not parts[3].startswith("mesh"):
             parts.insert(3, "mesh1x1")
-            return "|".join(parts)
-        return key
+        if len(parts) == 6 and parts[0] in ("sep", "mbconv") \
+                and parts[3].startswith("mesh") \
+                and not parts[4].startswith("res="):
+            parts.insert(4, "res=auto")
+        return "|".join(parts)
 
     def _load_disk(self) -> Dict[str, dict]:
         if self._disk is None:
@@ -273,25 +299,45 @@ def _tpu_key(tpu: TPUConfig) -> str:
     return f"vmem{tpu.vmem_bytes}-cb{tpu.c_block}-th{ths}"
 
 
+def _res_segment(residency: Optional[str]) -> str:
+    """Key segment for the REQUESTED residency: a pinned mode gets its own
+    entry (its pick is solved under a different feasibility set); ``None``
+    (the solver chooses) is the ``res=auto`` entry that legacy keys migrate
+    into."""
+    if residency is not None:
+        validate_residency(residency)
+    return f"res={residency or 'auto'}"
+
+
 def _sep_key(shape: SeparableShape, tpu: TPUConfig,
-             mesh_shape: MeshShape = (1, 1)) -> str:
+             mesh_shape: MeshShape = (1, 1),
+             residency: Optional[str] = None) -> str:
     """Schedule-cache key.  The EFFECTIVE mesh factors are part of the key:
     a schedule solved for one partitioning (per-device shard shapes, psum
     terms, VMEM headroom) must never be echoed for another — sharded and
-    unsharded picks live in distinct entries."""
+    unsharded picks live in distinct entries.  Likewise the requested
+    residency (``res=auto`` when the solver chooses)."""
     dp, mp = shard_factors(shape.b, shape.c_out, mesh_shape)
     return (f"sep|b{shape.b}-h{shape.h}-w{shape.w}-ci{shape.c_in}"
             f"-co{shape.c_out}-k{shape.k}-s{shape.s}|dtb{shape.dtype_bytes}"
-            f"|mesh{dp}x{mp}|{_tpu_key(tpu)}|{_backend()}")
+            f"|mesh{dp}x{mp}|{_res_segment(residency)}|{_tpu_key(tpu)}"
+            f"|{_backend()}")
 
 
 def _mbconv_key(shape: MBConvShape, tpu: TPUConfig,
-                mesh_shape: MeshShape = (1, 1)) -> str:
+                mesh_shape: MeshShape = (1, 1),
+                residency: Optional[str] = None,
+                mode: Optional[str] = None) -> str:
     dp, mp = shard_factors(shape.b, shape.c_mid, mesh_shape)
+    # a pinned pass-2 mode gets its OWN entries (appended segment, so the
+    # unpinned key format — and its migration chain — is untouched): a
+    # tile_h/residency solved under one mode's VMEM footprint must never
+    # be echoed for the other
+    pin = f"|mode={mode}" if mode is not None else ""
     return (f"mbconv|b{shape.b}-h{shape.h}-w{shape.w}-ci{shape.c_in}"
             f"-cm{shape.c_mid}-co{shape.c_out}-k{shape.k}-s{shape.s}"
-            f"|dtb{shape.dtype_bytes}|mesh{dp}x{mp}|{_tpu_key(tpu)}"
-            f"|{_backend()}")
+            f"|dtb{shape.dtype_bytes}|mesh{dp}x{mp}"
+            f"|{_res_segment(residency)}|{_tpu_key(tpu)}|{_backend()}{pin}")
 
 
 def _entry_tile_h(hit, out_h: int):
@@ -305,75 +351,100 @@ def _entry_tile_h(hit, out_h: int):
     return tile_h if 1 <= tile_h <= out_h else None
 
 
+def _entry_residency(hit) -> Optional[str]:
+    """Validated residency from a cache entry; None for legacy entries
+    (recorded before the residency axis) or malformed values — the caller
+    then re-solves the residency at the entry's tile_h."""
+    res = hit.get("residency") if isinstance(hit, dict) else None
+    return res if res in RESIDENCY_MODES else None
+
+
 # ---------------------------------------------------------------------------
 # separable (single-pass) schedules
 # ---------------------------------------------------------------------------
 
 def vmem_footprint_bytes(shape: SeparableShape, tile_h: int,
-                         tpu: TPUConfig) -> int:
-    """Modeled VMEM residency of one fused grid cell (per-strip staging).
+                         tpu: TPUConfig,
+                         residency: str = DEFAULT_RESIDENCY) -> int:
+    """Modeled VMEM residency of one fused grid cell under one residency.
 
-    Counts the staged input window, the f32 DW accumulator, the f32 PW
-    scratch accumulator and both weight blocks — the production budget a
-    DMA'd (``ANY``-space input) rendering of the kernel must respect.
+    Counts the input staging (the strip-DMA slot buffer(s) — 2x for
+    double-buffering — or the full-height resident block), the f32 DW
+    accumulator, the f32 PW scratch accumulator and both weight blocks:
+    the budget the staging engine's rendering of the kernel must respect.
     """
     ci = pick_channel_block(shape.c_in, tpu.c_block)
     co = _blocks(shape.c_out, tpu.c_block)
     tile_h = max(1, min(tile_h, shape.out_h))
-    in_rows = (tile_h - 1) * shape.s + shape.k
-    x_win = in_rows * shape.padded_w * ci * shape.dtype_bytes
+    x_win = separable_staging_bytes(shape, tile_h, residency, tpu.c_block)
     dw_acc = tile_h * shape.out_w * ci * 4
     pw_acc = tile_h * shape.out_w * co * 4
     weights = (shape.k * shape.k * ci + ci * co) * shape.dtype_bytes
     return x_win + dw_acc + pw_acc + weights
 
 
+def _residency_set(residency: Optional[str]) -> Tuple[str, ...]:
+    if residency is None:
+        return RESIDENCY_MODES
+    validate_residency(residency)
+    return (residency,)
+
+
 def candidate_schedules(
     shape: SeparableShape, tpu: TPUConfig = TPUConfig(),
-    mesh_shape: MeshShape = (1, 1),
+    mesh_shape: MeshShape = (1, 1), residency: Optional[str] = None,
 ) -> Tuple[FusedSchedule, ...]:
-    """All VMEM-feasible schedules for one layer shape, model-priced.
+    """All VMEM-feasible (tile_h, residency) schedules, model-priced.
 
-    Under a mesh, feasibility and channel blocks are solved at the
-    PER-DEVICE shard shape (batch/data, c_out/model) — a shard has more
-    VMEM headroom per channel block than the whole layer."""
+    ``residency=None`` enumerates every staging mode (the solver's
+    default); a pinned mode restricts the candidate set.  Under a mesh,
+    feasibility and channel blocks are solved at the PER-DEVICE shard
+    shape (batch/data, c_out/model) — a shard has more VMEM headroom per
+    channel block than the whole layer."""
     local, eff = separable_shard(shape, mesh_shape)
     ci = pick_channel_block(local.c_in, tpu.c_block)
     co = _blocks(local.c_out, tpu.c_block)
     out: list[FusedSchedule] = []
     seen = set()
     ths = [max(1, min(th, shape.out_h)) for th in tpu.tile_h_candidates]
-    feasible = [th for th in ths
-                if vmem_footprint_bytes(local, th, tpu) <= tpu.vmem_bytes]
-    for th in feasible or [1]:
-        if th in seen:
+    feasible = [(th, res) for th in ths for res in _residency_set(residency)
+                if vmem_footprint_bytes(local, th, tpu, res)
+                <= tpu.vmem_bytes]
+    for th, res in feasible or [(1, residency or "strip_dma")]:
+        if (th, res) in seen:
             continue
-        seen.add(th)
-        sharded = sharded_separable_traffic(shape, th, eff, tpu.c_block)
+        seen.add((th, res))
+        sharded = sharded_separable_traffic(shape, th, eff, tpu.c_block, res)
         staged = sharded_separable_staged_traffic(shape, th, eff, tpu.c_block)
         out.append(FusedSchedule(
             tile_h=th, ci_block=ci, co_block=co,
             traffic=sharded.device, staged_traffic=staged.device,
             mesh_shape=eff, collective_words=sharded.collective_words,
+            residency=res,
         ))
     return tuple(out)
 
 
 def select_fused_schedule(
     shape: SeparableShape, tpu: TPUConfig = TPUConfig(),
-    mesh_shape: MeshShape = (1, 1),
+    mesh_shape: MeshShape = (1, 1), residency: Optional[str] = None,
 ) -> FusedSchedule:
-    """Pick the schedule minimizing modeled total traffic — per-device HBM
-    bytes across all devices plus collectives (ties -> larger tile_h:
-    fewer grid cells, bigger MXU contractions)."""
-    cands = candidate_schedules(shape, tpu, mesh_shape)
-    return min(cands, key=lambda c: (c.total_bytes, -c.tile_h))
+    """Pick the (tile_h, residency) minimizing modeled total traffic —
+    per-device HBM bytes across all devices plus collectives (ties ->
+    larger tile_h: fewer grid cells, bigger MXU contractions; then the
+    residency rank: double-buffered DMA > single-slot DMA > resident,
+    since equal bytes moved earlier hide latency)."""
+    cands = candidate_schedules(shape, tpu, mesh_shape, residency)
+    return min(cands, key=lambda c: (c.total_bytes, -c.tile_h,
+                                     _RESIDENCY_RANK[c.residency]))
 
 
 def _schedule_at(shape: SeparableShape, tile_h: int, tpu: TPUConfig,
-                 mesh_shape: MeshShape = (1, 1)) -> FusedSchedule:
+                 mesh_shape: MeshShape = (1, 1),
+                 residency: str = DEFAULT_RESIDENCY) -> FusedSchedule:
     local, eff = separable_shard(shape, mesh_shape)
-    sharded = sharded_separable_traffic(shape, tile_h, eff, tpu.c_block)
+    sharded = sharded_separable_traffic(shape, tile_h, eff, tpu.c_block,
+                                        residency)
     staged = sharded_separable_staged_traffic(shape, tile_h, eff, tpu.c_block)
     return FusedSchedule(
         tile_h=tile_h,
@@ -381,32 +452,52 @@ def _schedule_at(shape: SeparableShape, tile_h: int, tpu: TPUConfig,
         co_block=_blocks(local.c_out, tpu.c_block),
         traffic=sharded.device, staged_traffic=staged.device,
         mesh_shape=eff, collective_words=sharded.collective_words,
+        residency=residency,
     )
+
+
+def _solve_residency_at(shape: SeparableShape, tile_h: int, tpu: TPUConfig,
+                        mesh_shape: MeshShape) -> str:
+    """Best residency at a FIXED tile_h (legacy cache entries pin tile_h
+    but predate the residency axis): min bytes among VMEM-feasible modes,
+    ties broken by the residency rank."""
+    local, eff = separable_shard(shape, mesh_shape)
+    modes = [res for res in RESIDENCY_MODES
+             if vmem_footprint_bytes(local, tile_h, tpu, res)
+             <= tpu.vmem_bytes] or ["strip_dma"]
+    return min(modes, key=lambda res: (
+        sharded_separable_traffic(shape, tile_h, eff, tpu.c_block,
+                                  res).device.total_bytes,
+        _RESIDENCY_RANK[res]))
 
 
 def get_fused_schedule(
     b: int, h: int, w: int, c_in: int, c_out: int, k: int, s: int,
     dtype_bytes: int = 4, tpu: TPUConfig = TPUConfig(),
-    mesh_shape: MeshShape = (1, 1),
+    mesh_shape: MeshShape = (1, 1), residency: Optional[str] = None,
 ) -> FusedSchedule:
     """Cached per-layer-shape schedule lookup (trace-time safe).
 
     Consults the in-process cache, then the JSON cache (where a measured
     sweep may have recorded ground truth), then the analytical model.
     ``mesh_shape`` is the ("data", "model") partitioning the schedule will
-    run under — part of the cache key, so sharded and unsharded picks for
-    the same layer shape never collide."""
+    run under and ``residency`` the requested staging pin (None = solver's
+    choice) — both are cache-key axes, so different partitionings or pins
+    never collide.  Legacy entries (pre-residency) keep their tile_h
+    priority; the residency is re-solved at that tile_h."""
     shape = SeparableShape(b=b, h=h, w=w, c_in=c_in, c_out=c_out, k=k, s=s,
                            dtype_bytes=dtype_bytes)
     cache = get_schedule_cache()
-    key = _sep_key(shape, tpu, mesh_shape)
+    key = _sep_key(shape, tpu, mesh_shape, residency)
     hit = cache.get(key)
     tile_h = _entry_tile_h(hit, shape.out_h) if hit is not None else None
     if tile_h is not None:
-        return _schedule_at(shape, tile_h, tpu, mesh_shape)
-    sched = select_fused_schedule(shape, tpu, mesh_shape)
-    cache.put(key, {"tile_h": sched.tile_h, "source": "model",
-                    "recorded_at": time.time()})
+        res = residency or _entry_residency(hit) \
+            or _solve_residency_at(shape, tile_h, tpu, mesh_shape)
+        return _schedule_at(shape, tile_h, tpu, mesh_shape, res)
+    sched = select_fused_schedule(shape, tpu, mesh_shape, residency)
+    cache.put(key, {"tile_h": sched.tile_h, "residency": sched.residency,
+                    "source": "model", "recorded_at": time.time()})
     return sched
 
 
@@ -415,36 +506,51 @@ def get_fused_schedule(
 # ---------------------------------------------------------------------------
 
 def mbconv_vmem_footprint_bytes(shape: MBConvShape, tile_h: int,
-                                tpu: TPUConfig) -> int:
+                                tpu: TPUConfig,
+                                residency: str = DEFAULT_RESIDENCY,
+                                mode: str = "retain") -> int:
     """Modeled VMEM residency of one two-pass MBConv grid cell.
 
-    The dominant term is the f32 expand accumulator over the staged strip
-    window at ``cm_block`` lanes (pass 1 and recompute pass 2 share it);
-    pass 2 adds the f32 projection accumulator."""
+    The dominant terms are the input staging (slot buffers or the resident
+    block; ``retain`` adds the pass-2 DW re-read stream) and the f32
+    expand accumulator over the staged strip window at ``cm_block`` lanes
+    (pass 1 and recompute pass 2 share it); pass 2 adds the f32 projection
+    accumulator.  Summing both passes' terms is deliberately conservative
+    — the launches are separate, but a schedule that only fits one of them
+    is not worth distinguishing."""
     ci = pick_channel_block(shape.c_in, tpu.c_block)
     cm = pick_channel_block(shape.c_mid, tpu.c_block)
     co = _blocks(shape.c_out, tpu.c_block)
     tile_h = max(1, min(tile_h, shape.out_h))
     in_rows = (tile_h - 1) * shape.s + shape.k
     w_need = (shape.out_w - 1) * shape.s + shape.k
-    x_win = in_rows * shape.padded_w * ci * shape.dtype_bytes
+    staging = mbconv_staging_bytes(shape, tile_h, mode, residency,
+                                   tpu.c_block)
     exp_acc = in_rows * w_need * cm * 4
     dw_blk = tile_h * shape.out_w * cm * 4
     proj_acc = tile_h * shape.out_w * co * 4
     weights = (ci * cm + shape.k * shape.k * cm + cm * co) * shape.dtype_bytes
-    return x_win + exp_acc + dw_blk + proj_acc + weights
+    return staging + exp_acc + dw_blk + proj_acc + weights
 
 
 def candidate_mbconv_schedules(
     shape: MBConvShape, tpu: TPUConfig = TPUConfig(),
-    mesh_shape: MeshShape = (1, 1),
+    mesh_shape: MeshShape = (1, 1), residency: Optional[str] = None,
+    mode: Optional[str] = None,
 ) -> Tuple[MBConvSchedule, ...]:
-    """All VMEM-feasible (tile_h, mode) schedules, model-priced.
+    """All VMEM-feasible (tile_h, mode, residency) schedules, model-priced.
 
-    Under a mesh, feasibility and channel blocks are solved at the
-    per-device shard shape (batch/data, c_mid/model); the retain/recompute
-    crossover therefore re-solves per partitioning — a shard's DW slice is
-    mp-fold cheaper to retain than the whole expanded tensor."""
+    A pinned ``mode`` restricts the candidate set, so tile_h/residency are
+    solved (and VMEM-checked) under THAT mode's footprint — a retain pin
+    must pay for the retained-DW stream buffers the recompute winner never
+    carried.  Under a mesh, feasibility and channel blocks are solved at
+    the per-device shard shape (batch/data, c_mid/model); the
+    retain/recompute crossover therefore re-solves per partitioning — a
+    shard's DW slice is mp-fold cheaper to retain than the whole expanded
+    tensor."""
+    if mode is not None and mode not in MBCONV_MODES:
+        raise ValueError(mode)
+    modes = MBCONV_MODES if mode is None else (mode,)
     local, eff = mbconv_shard(shape, mesh_shape)
     ci = pick_channel_block(local.c_in, tpu.c_block)
     cm = pick_channel_block(local.c_mid, tpu.c_block)
@@ -452,42 +558,55 @@ def candidate_mbconv_schedules(
     out: list[MBConvSchedule] = []
     seen = set()
     ths = [max(1, min(th, shape.out_h)) for th in tpu.tile_h_candidates]
-    feasible = [th for th in ths
-                if mbconv_vmem_footprint_bytes(local, th, tpu)
-                <= tpu.vmem_bytes]
-    for th in feasible or [1]:
-        if th in seen:
+    combos = [(th, md, res)
+              for th in ths for md in modes
+              for res in _residency_set(residency)
+              if mbconv_vmem_footprint_bytes(local, th, tpu, res, md)
+              <= tpu.vmem_bytes]
+    if not combos:
+        combos = [(1, md, residency or "strip_dma") for md in modes]
+    staged_cache: dict = {}
+    for th, md, res in combos:
+        if (th, md, res) in seen:
             continue
-        seen.add(th)
-        staged = sharded_mbconv_staged_traffic(shape, th, eff, tpu.c_block)
-        for mode in MBCONV_MODES:
-            sharded = sharded_mbconv_traffic(shape, th, mode, eff,
-                                             tpu.c_block)
-            out.append(MBConvSchedule(
-                tile_h=th, mode=mode, ci_block=ci, cm_block=cm, co_block=co,
-                traffic=sharded.device, staged_traffic=staged.device,
-                mesh_shape=eff, collective_words=sharded.collective_words,
-            ))
+        seen.add((th, md, res))
+        if th not in staged_cache:
+            staged_cache[th] = sharded_mbconv_staged_traffic(
+                shape, th, eff, tpu.c_block)
+        staged = staged_cache[th]
+        sharded = sharded_mbconv_traffic(shape, th, md, eff, tpu.c_block,
+                                         res)
+        out.append(MBConvSchedule(
+            tile_h=th, mode=md, ci_block=ci, cm_block=cm, co_block=co,
+            traffic=sharded.device, staged_traffic=staged.device,
+            mesh_shape=eff, collective_words=sharded.collective_words,
+            residency=res,
+        ))
     return tuple(out)
 
 
 def select_mbconv_schedule(
     shape: MBConvShape, tpu: TPUConfig = TPUConfig(),
-    mesh_shape: MeshShape = (1, 1),
+    mesh_shape: MeshShape = (1, 1), residency: Optional[str] = None,
+    mode: Optional[str] = None,
 ) -> MBConvSchedule:
-    """Pick (tile_h, mode) minimizing modeled total two-pass traffic (ties
-    -> larger tile_h, then retain: one DW round-trip beats recompute
-    MACs)."""
-    cands = candidate_mbconv_schedules(shape, tpu, mesh_shape)
+    """Pick (tile_h, mode, residency) minimizing modeled total two-pass
+    traffic (ties -> larger tile_h, then retain: one DW round-trip beats
+    recompute MACs; then the residency rank).  ``mode``/``residency`` pins
+    restrict the solve."""
+    cands = candidate_mbconv_schedules(shape, tpu, mesh_shape, residency,
+                                       mode)
     return min(cands, key=lambda c: (c.total_bytes, -c.tile_h,
-                                     c.mode != "retain"))
+                                     c.mode != "retain",
+                                     _RESIDENCY_RANK[c.residency]))
 
 
 def _mbconv_schedule_at(shape: MBConvShape, tile_h: int, mode: str,
-                        tpu: TPUConfig,
-                        mesh_shape: MeshShape = (1, 1)) -> MBConvSchedule:
+                        tpu: TPUConfig, mesh_shape: MeshShape = (1, 1),
+                        residency: str = DEFAULT_RESIDENCY) -> MBConvSchedule:
     local, eff = mbconv_shard(shape, mesh_shape)
-    sharded = sharded_mbconv_traffic(shape, tile_h, mode, eff, tpu.c_block)
+    sharded = sharded_mbconv_traffic(shape, tile_h, mode, eff, tpu.c_block,
+                                     residency)
     staged = sharded_mbconv_staged_traffic(shape, tile_h, eff, tpu.c_block)
     return MBConvSchedule(
         tile_h=tile_h, mode=mode,
@@ -496,30 +615,56 @@ def _mbconv_schedule_at(shape: MBConvShape, tile_h: int, mode: str,
         co_block=_blocks(local.c_out, tpu.c_block),
         traffic=sharded.device, staged_traffic=staged.device,
         mesh_shape=eff, collective_words=sharded.collective_words,
+        residency=residency,
     )
+
+
+def _solve_mbconv_residency_at(shape: MBConvShape, tile_h: int, mode: str,
+                               tpu: TPUConfig, mesh_shape: MeshShape) -> str:
+    """Best residency at a FIXED (tile_h, mode) — see
+    ``_solve_residency_at``."""
+    local, eff = mbconv_shard(shape, mesh_shape)
+    modes = [res for res in RESIDENCY_MODES
+             if mbconv_vmem_footprint_bytes(local, tile_h, tpu, res, mode)
+             <= tpu.vmem_bytes] or ["strip_dma"]
+    return min(modes, key=lambda res: (
+        sharded_mbconv_traffic(shape, tile_h, mode, eff, tpu.c_block,
+                               res).device.total_bytes,
+        _RESIDENCY_RANK[res]))
 
 
 def get_mbconv_schedule(
     b: int, h: int, w: int, c_in: int, c_mid: int, c_out: int, k: int,
     s: int, se_ratio: float = 0.25, dtype_bytes: int = 4,
     tpu: TPUConfig = TPUConfig(), mesh_shape: MeshShape = (1, 1),
+    residency: Optional[str] = None, mode: Optional[str] = None,
 ) -> MBConvSchedule:
     """Cached per-layer-shape two-pass schedule lookup (trace-time safe).
 
-    ``mesh_shape`` enters the cache key (see ``get_fused_schedule``)."""
+    ``mesh_shape`` and the requested ``residency``/``mode`` pins enter the
+    cache key (see ``get_fused_schedule``): a pinned pass-2 mode solves
+    tile_h and residency under that mode's VMEM footprint instead of
+    echoing a schedule solved for the other mode.  Legacy entries keep
+    their (tile_h, mode) priority with the residency re-solved at that
+    point."""
     shape = MBConvShape(b=b, h=h, w=w, c_in=c_in, c_mid=c_mid, c_out=c_out,
                         k=k, s=s, se_ratio=se_ratio, dtype_bytes=dtype_bytes)
     cache = get_schedule_cache()
-    key = _mbconv_key(shape, tpu, mesh_shape)
+    key = _mbconv_key(shape, tpu, mesh_shape, residency, mode)
     hit = cache.get(key)
     tile_h = _entry_tile_h(hit, shape.out_h) if hit is not None else None
-    if tile_h is not None and isinstance(hit, dict) \
-            and hit.get("mode") in MBCONV_MODES:
-        return _mbconv_schedule_at(shape, tile_h, hit["mode"], tpu,
-                                   mesh_shape)
-    sched = select_mbconv_schedule(shape, tpu, mesh_shape)
+    hit_mode = hit.get("mode") if isinstance(hit, dict) else None
+    if tile_h is not None and hit_mode in MBCONV_MODES \
+            and (mode is None or hit_mode == mode):
+        res = residency or _entry_residency(hit) \
+            or _solve_mbconv_residency_at(shape, tile_h, hit_mode, tpu,
+                                          mesh_shape)
+        return _mbconv_schedule_at(shape, tile_h, hit_mode, tpu,
+                                   mesh_shape, res)
+    sched = select_mbconv_schedule(shape, tpu, mesh_shape, residency, mode)
     cache.put(key, {"tile_h": sched.tile_h, "mode": sched.mode,
-                    "source": "model", "recorded_at": time.time()})
+                    "residency": sched.residency, "source": "model",
+                    "recorded_at": time.time()})
     return sched
 
 
@@ -531,21 +676,24 @@ def benchmark_fused_sweep(
     x, w_dw, w_pw, *, stride: int, padding: str = "SAME",
     tile_hs: Optional[Sequence[int]] = None, iters: int = 3,
     interpret: Optional[bool] = None, persist: bool = False,
-    tpu: TPUConfig = TPUConfig(),
+    tpu: TPUConfig = TPUConfig(), residency: Optional[str] = None,
 ) -> Tuple[int, Tuple[Tuple[int, float], ...]]:
     """Measured fallback: time the real fused kernel per candidate tile_h.
 
     Returns (best_tile_h, ((tile_h, seconds_per_call), ...)).  Use when the
     analytical model ties candidates or a deployment wants ground truth; the
-    sweep runs each candidate ``iters`` times after one warmup call.  With
-    ``persist=True`` the winning tile_h is recorded in the schedule cache as
-    a ``"measured"`` entry (which outranks model picks and, when a cache dir
+    sweep runs each candidate ``iters`` times after one warmup call, under
+    ``residency`` (None = the kernels' default staging mode).  With
+    ``persist=True`` the winning tile_h is recorded in the schedule cache —
+    under the same residency request it was measured at — as a
+    ``"measured"`` entry (which outranks model picks and, when a cache dir
     is configured, survives restarts).
     """
     import jax
 
     from ..kernels.convdk_fused import convdk_fused_separable
 
+    res_used = residency or DEFAULT_RESIDENCY
     out_h = -(-x.shape[1] // stride)
     if tile_hs is None:
         tile_hs = [t for t in TPUConfig().tile_h_candidates if t <= out_h] or [1]
@@ -553,7 +701,7 @@ def benchmark_fused_sweep(
     for th in tile_hs:
         fn = lambda: convdk_fused_separable(  # noqa: E731
             x, w_dw, w_pw, stride=stride, padding=padding, tile_h=th,
-            interpret=interpret)
+            interpret=interpret, residency=res_used)
         jax.block_until_ready(fn())                      # warmup / compile
         t0 = time.perf_counter()
         for _ in range(iters):
@@ -565,8 +713,15 @@ def benchmark_fused_sweep(
         shape = SeparableShape(
             b=b, h=h, w=w_in, c_in=c_in, c_out=w_pw.shape[1],
             k=w_dw.shape[0], s=stride, dtype_bytes=x.dtype.itemsize)
+        entry = {"tile_h": best, "source": "measured",
+                 "recorded_at": time.time(),
+                 "timings_s": {str(th): t for th, t in results}}
+        if residency is not None:
+            # only a REQUESTED residency is ground truth worth recording;
+            # an unpinned sweep timed one mode's tile_h candidates without
+            # comparing modes, so the auto entry leaves residency to the
+            # solver (re-solved at the measured tile_h on lookup)
+            entry["residency"] = res_used
         get_schedule_cache().put(
-            _sep_key(shape, tpu),
-            {"tile_h": best, "source": "measured", "recorded_at": time.time(),
-             "timings_s": {str(th): t for th, t in results}})
+            _sep_key(shape, tpu, residency=residency), entry)
     return best, tuple(results)

@@ -365,6 +365,44 @@ def _round_up(x: int, m: int) -> int:
     return -(-x // m) * m
 
 
+# ---------------------------------------------------------------------------
+# Input residency: how the fused kernels stage their big input streams.
+#
+# ``resident``      — BlockSpec keeps the full padded height of a channel
+#                     block in VMEM; strip windows are pl.ds slices.  Pallas
+#                     refetches the whole block every time the block index
+#                     changes, so with more than one channel block the input
+#                     is re-read at FULL height per revisiting grid cell.
+# ``strip_dma``     — input lives in ANY/HBM; each grid cell DMAs exactly
+#                     its halo'd strip window into one VMEM scratch slot.
+#                     HBM words = the strip-staging accounting (halo rows
+#                     re-read across strips, never re-written).
+# ``strip_dma_db``  — same windows, double-buffered (2 slots + prefetch of
+#                     the next cell's window): identical HBM words, 2x the
+#                     strip scratch, DMA latency hidden behind compute.
+#
+# The executable engine is ``kernels.staging``; these constants and the
+# residency-aware pricing below keep the model and the kernels in lockstep.
+# ---------------------------------------------------------------------------
+
+RESIDENCY_MODES: Tuple[str, ...] = ("resident", "strip_dma", "strip_dma_db")
+DEFAULT_RESIDENCY = "strip_dma_db"
+
+
+def validate_residency(residency: str) -> str:
+    if residency not in RESIDENCY_MODES:
+        raise ValueError(
+            f"residency must be one of {RESIDENCY_MODES}, got {residency!r}")
+    return residency
+
+
+def staging_slots(residency: str) -> int:
+    """VMEM strip-scratch slots a residency mode allocates (0 = the input
+    is BlockSpec-resident instead of engine-staged)."""
+    validate_residency(residency)
+    return {"resident": 0, "strip_dma": 1, "strip_dma_db": 2}[residency]
+
+
 def pick_channel_block(c: int, cap: int = 128) -> int:
     """Channel block size minimizing zero-padding, then maximizing width.
 
@@ -420,11 +458,18 @@ class SeparableShape:
 
 @dataclass(frozen=True)
 class HBMTraffic:
-    """HBM words moved by one separable block under one pipeline."""
+    """HBM words moved by one block under one pipeline.
+
+    ``dma_issues`` counts the explicit strip-window async copies the
+    staging engine issues (0 for ``resident``, whose input moves through
+    implicit BlockSpec fetches, and for the staged baselines) — the
+    issue-rate side of the latency story the byte counts cannot show.
+    """
 
     read_words: int
     write_words: int
     dtype_bytes: int = 4
+    dma_issues: int = 0
 
     @property
     def total_words(self) -> int:
@@ -441,6 +486,16 @@ def _strip_counts(shape: SeparableShape, tile_h: int) -> Tuple[int, int]:
     n_th = -(-shape.out_h // tile_h)
     in_rows = (tile_h - 1) * shape.s + shape.k
     return n_th, in_rows
+
+
+def _covered_rows(shape, tile_h: int) -> int:
+    """Rows of the input as LAUNCHED: the kernels height-cover-pad so the
+    last strip's window stays in bounds, so when ``tile_h`` does not
+    divide ``out_h`` this exceeds ``padded_h`` — the resident BlockSpec
+    keeps (and refetches) this full height, not just ``padded_h``."""
+    tile_h = max(1, min(tile_h, shape.out_h))
+    n_th = -(-shape.out_h // tile_h)
+    return (n_th * tile_h - 1) * shape.s + shape.k
 
 
 def staged_separable_traffic(
@@ -470,25 +525,67 @@ def _n_co_blocks(c_out: int, c_block: int) -> int:
     return -(-c_out // min(c_block, max(8, _round_up(c_out, 8))))
 
 
-def fused_separable_traffic(
-    shape: SeparableShape, tile_h: int, c_block: int = 128
-) -> HBMTraffic:
-    """HBM traffic of the fused in-kernel-staging pipeline.
+def _n_chan_blocks(c: int, c_block: int) -> int:
+    cb = pick_channel_block(c, c_block)
+    return _round_up(c, cb) // cb
 
-    Each (strip, c_in block) window is DMA'd once per c_out block straight
-    from the unstaged input (halo rows re-read across strips but never
-    written); DW output lives and dies in VMEM; the only write is the block
-    output.  Weight blocks are re-fetched per revisiting grid cell.
+
+def fused_separable_traffic(
+    shape: SeparableShape, tile_h: int, c_block: int = 128,
+    residency: str = DEFAULT_RESIDENCY,
+) -> HBMTraffic:
+    """HBM traffic of the fused single-pass pipeline under one residency.
+
+    ``strip_dma`` / ``strip_dma_db``: each (strip, c_in block) window is
+    DMA'd once per c_out block straight from the unstaged HBM input (halo
+    rows re-read across strips but never written) — double-buffering moves
+    the same words, earlier.  ``resident``: the full padded height of a
+    channel block is BlockSpec-fetched, and REFETCHED whenever the block
+    index changes — with more than one c_in block that is every grid cell,
+    which is exactly the honest price of the legacy rendering.  In every
+    mode the DW output lives and dies in VMEM, the only activation write
+    is the block output, and weight blocks are re-fetched per revisiting
+    grid cell.
     """
+    validate_residency(residency)
     n_th, in_rows = _strip_counts(shape, tile_h)
     n_co = -(-shape.c_out // min(c_block, max(8, shape.c_out)))
+    n_ci = _n_chan_blocks(shape.c_in, c_block)
     strips = shape.b * n_th * in_rows * shape.padded_w * shape.c_in
+    # resident fetches move the input at its LAUNCHED height (height-cover
+    # padding included), not just padded_h
+    x_full = shape.b * _covered_rows(shape, tile_h) * shape.padded_w \
+        * shape.c_in
     out = shape.b * shape.out_h * shape.out_w * shape.c_out
     w_dw = shape.k * shape.k * shape.c_in * n_th * n_co
     w_pw = shape.c_in * shape.c_out * n_th
-    reads = strips * n_co + w_dw + w_pw
+    if residency == "resident":
+        x_reads = x_full * (n_th * n_co if n_ci > 1 else 1)
+        issues = 0
+    else:
+        x_reads = strips * n_co
+        issues = shape.b * n_th * n_co * n_ci
+    reads = x_reads + w_dw + w_pw
     writes = out
-    return HBMTraffic(reads, writes, shape.dtype_bytes)
+    return HBMTraffic(reads, writes, shape.dtype_bytes, issues)
+
+
+def separable_staging_bytes(
+    shape: SeparableShape, tile_h: int,
+    residency: str = DEFAULT_RESIDENCY, c_block: int = 128,
+) -> int:
+    """VMEM bytes the fused separable kernel's INPUT stream occupies under
+    one residency: the slot buffer(s) for the DMA modes (2x for
+    double-buffering), the full-padded-height channel block otherwise."""
+    validate_residency(residency)
+    _n_th, in_rows = _strip_counts(shape, tile_h)
+    ci = pick_channel_block(shape.c_in, c_block)
+    if residency == "resident":
+        # the launched (height-cover-padded) block, not just padded_h
+        return (_covered_rows(shape, tile_h) * shape.padded_w * ci
+                * shape.dtype_bytes)
+    return (staging_slots(residency) * in_rows * shape.padded_w * ci
+            * shape.dtype_bytes)
 
 
 # ---------------------------------------------------------------------------
@@ -583,9 +680,10 @@ def _mbconv_common(shape: MBConvShape, tile_h: int, c_block: int):
 
 def mbconv_fused_traffic(
     shape: MBConvShape, tile_h: int, mode: str = "retain",
-    c_block: int = 128,
+    c_block: int = 128, residency: str = DEFAULT_RESIDENCY,
 ) -> HBMTraffic:
-    """HBM traffic of the two-pass fused MBConv pipeline (one mode).
+    """HBM traffic of the two-pass fused MBConv pipeline (one mode, one
+    residency).
 
     Pass 1 reads each input strip once per c_mid block (expand reduction
     innermost) and writes only the on-chip-accumulated SE pool — plus the
@@ -594,14 +692,32 @@ def mbconv_fused_traffic(
     input strips and expand/DW weights instead; either way the SE scale and
     projection happen in the same VMEM residency, and the only activation
     write of the whole block is the final output.
+
+    Residency changes how the INPUT streams price: the DMA modes move
+    exactly the halo'd strip windows (``strip_dma_db`` double-buffers the
+    same words); ``resident`` BlockSpec-refetches the full padded height of
+    a c_in block every revisiting grid cell.  The retained-DW re-read is a
+    non-overlapping block stream, so its words are residency-invariant.
     """
     if mode not in MBCONV_MODES:
         raise ValueError(mode)
+    validate_residency(residency)
     (n_th, n_cm, n_co, strips, e_rows, out, w_exp, w_dw, w_proj,
      pool) = _mbconv_common(shape, tile_h, c_block)
+    n_ci = _n_chan_blocks(shape.c_in, c_block)
+    # launched height incl. height-cover padding (see _covered_rows)
+    x_full = shape.b * _covered_rows(shape, tile_h) * shape.padded_w \
+        * shape.c_in
+    resident = residency == "resident"
     scale = pool                                   # SE gate, (B, C_mid) words
+    issues = 0
     # pass 1: strips per c_mid block + per-strip weight refetches + pool
-    reads = strips * n_cm + (w_exp + w_dw) * n_th
+    if resident:
+        reads = x_full * (n_cm * n_th if n_ci > 1 else 1)
+    else:
+        reads = strips * n_cm
+        issues += shape.b * n_cm * n_th * n_ci
+    reads += (w_exp + w_dw) * n_th
     writes = pool
     # SE MLP between passes (host-side; tiny but accounted)
     reads += pool + shape.se_words
@@ -610,18 +726,55 @@ def mbconv_fused_traffic(
     if mode == "retain":
         writes += e_rows                           # pass-1 DW retain write
         reads += e_rows * n_co + scale * n_th * n_co + w_proj * n_th
+        if not resident:
+            issues += shape.b * n_co * n_th * n_cm
     else:
-        reads += (strips * n_cm * n_co + (w_exp + w_dw) * n_th * n_co
+        if resident:
+            reads += x_full * (n_co * n_th * n_cm if n_ci > 1 else 1)
+        else:
+            reads += strips * n_cm * n_co
+            issues += shape.b * n_co * n_th * n_cm * n_ci
+        reads += ((w_exp + w_dw) * n_th * n_co
                   + scale * n_th * n_co + w_proj * n_th)
     writes += out
-    return HBMTraffic(reads, writes, shape.dtype_bytes)
+    return HBMTraffic(reads, writes, shape.dtype_bytes, issues)
+
+
+def mbconv_staging_bytes(
+    shape: MBConvShape, tile_h: int, mode: str = "retain",
+    residency: str = DEFAULT_RESIDENCY, c_block: int = 128,
+) -> int:
+    """VMEM bytes the two-pass MBConv kernels' staged input streams occupy
+    under one residency: the halo'd input-window stream (both passes'
+    launches stage it identically) plus, for ``mode == "retain"``, the
+    retained-DW block stream pass 2 re-reads."""
+    validate_residency(residency)
+    if mode not in MBCONV_MODES:
+        raise ValueError(mode)
+    tile_h_eff = max(1, min(tile_h, shape.out_h))
+    in_rows = (tile_h_eff - 1) * shape.s + shape.k
+    ci = pick_channel_block(shape.c_in, c_block)
+    cm = pick_channel_block(shape.c_mid, c_block)
+    slots = staging_slots(residency)
+    dw_stream = tile_h_eff * shape.out_w * cm * shape.dtype_bytes
+    if residency == "resident":
+        # the launched (height-cover-padded) block, not just padded_h
+        x_bytes = (_covered_rows(shape, tile_h) * shape.padded_w * ci
+                   * shape.dtype_bytes)
+        dw_bytes = dw_stream                      # per-strip resident block
+    else:
+        x_bytes = slots * in_rows * shape.padded_w * ci * shape.dtype_bytes
+        dw_bytes = slots * dw_stream
+    return x_bytes + (dw_bytes if mode == "retain" else 0)
 
 
 def mbconv_best_fused_traffic(
-    shape: MBConvShape, tile_h: int, c_block: int = 128
+    shape: MBConvShape, tile_h: int, c_block: int = 128,
+    residency: str = DEFAULT_RESIDENCY,
 ) -> Tuple[str, HBMTraffic]:
-    """(mode, traffic) of the cheaper two-pass variant at this tile_h."""
-    priced = [(m, mbconv_fused_traffic(shape, tile_h, m, c_block))
+    """(mode, traffic) of the cheaper two-pass variant at this (tile_h,
+    residency)."""
+    priced = [(m, mbconv_fused_traffic(shape, tile_h, m, c_block, residency))
               for m in MBCONV_MODES]
     return min(priced, key=lambda mt: mt[1].total_bytes)
 
@@ -750,15 +903,17 @@ def mbconv_shard(
 
 def sharded_separable_traffic(
     shape: SeparableShape, tile_h: int, mesh_shape: Tuple[int, int] = (1, 1),
-    c_block: int = 128,
+    c_block: int = 128, residency: str = DEFAULT_RESIDENCY,
 ) -> ShardedTraffic:
     """Per-device traffic of the sharded fused separable block.
 
     Batch splits over "data", c_out over "model"; c_in stays replicated so
-    the PW reduction is device-local and the collective term is zero."""
+    the PW reduction is device-local and the collective term is zero.
+    ``residency`` prices each device's input staging (the sharded wrapper
+    runs the same strip-staging engine per shard)."""
     local, (dp, mp) = separable_shard(shape, mesh_shape)
     return ShardedTraffic(
-        device=fused_separable_traffic(local, tile_h, c_block),
+        device=fused_separable_traffic(local, tile_h, c_block, residency),
         collective_words=0, n_devices=dp * mp, mesh_shape=(dp, mp))
 
 
@@ -789,16 +944,18 @@ def _mbconv_psum_words(shape: MBConvShape, dp: int, mp: int) -> int:
 def sharded_mbconv_traffic(
     shape: MBConvShape, tile_h: int, mode: str = "retain",
     mesh_shape: Tuple[int, int] = (1, 1), c_block: int = 128,
+    residency: str = DEFAULT_RESIDENCY,
 ) -> ShardedTraffic:
     """Per-device traffic + psum bytes of the sharded two-pass MBConv.
 
     Batch splits over "data", c_mid over "model".  Two psums cross the
     model groups: the (B_local, C_se) SE squeeze partial (the pass-1 pool
     leaving the chip once, before the pass-2 gate) and the
-    (B_local, H', W', C_out) projection partial."""
+    (B_local, H', W', C_out) projection partial.  ``residency`` prices
+    each device's input staging."""
     local, (dp, mp) = mbconv_shard(shape, mesh_shape)
     return ShardedTraffic(
-        device=mbconv_fused_traffic(local, tile_h, mode, c_block),
+        device=mbconv_fused_traffic(local, tile_h, mode, c_block, residency),
         collective_words=_mbconv_psum_words(shape, dp, mp),
         n_devices=dp * mp, mesh_shape=(dp, mp))
 

@@ -162,6 +162,26 @@ assert [(k, ci * e, s, hw) for ci, _co, e, k, s, hw
         in EFFICIENTNET_B0_MBCONV] == _EFFB0
 
 
+# EfficientNet-V2-style k=7 stem probes (ROADMAP "stride/kernel
+# generality"): the fused-MBConv heads of the V2 family push the DW kernel
+# to 7x7 at stem resolutions.  The ConvDK tap loop, the staging engine and
+# the HBM traffic model are k-generic; these rows pin k=7 in the workload
+# tables so schedule solving, the parity sweeps and the traffic gates
+# exercise it alongside the paper's k in {3, 5}.
+EFFICIENTNET_V2_K7_STEM: List[DWLayer] = [
+    _dw(48, 112, 7, 2),      # stem head, stride-2 downsample
+    _dw(96, 56, 7, 1),       # first body stage at 56x56
+]
+
+# (DW stage, pointwise C_out) pairs — the full separable block per k=7 row
+# (drives the fused separable-block traffic accounting, as the V2 head's
+# projection widths).
+EFFICIENTNET_V2_K7_SEPARABLE: List[Tuple[DWLayer, int]] = [
+    (EFFICIENTNET_V2_K7_STEM[0], 64),
+    (EFFICIENTNET_V2_K7_STEM[1], 96),
+]
+
+
 NETWORKS: Dict[str, List[DWLayer]] = {
     "mobilenet_v1": MOBILENET_V1,
     "mobilenet_v2": MOBILENET_V2,

@@ -10,6 +10,13 @@ from .convdk_sharded import (
     convdk_fused_separable_sharded,
     convdk_mbconv_fused_sharded,
 )
+from .staging import (
+    DEFAULT_RESIDENCY,
+    RESIDENCY_MODES,
+    StripPlan,
+    StripStream,
+    strip_plan,
+)
 from .ops import (
     convdk_causal_conv1d,
     convdk_depthwise2d,
@@ -26,6 +33,11 @@ from .ref import (
 )
 
 __all__ = [
+    "DEFAULT_RESIDENCY",
+    "RESIDENCY_MODES",
+    "StripPlan",
+    "StripStream",
+    "strip_plan",
     "can_shard_fused",
     "conv_mesh_shape",
     "convdk_causal_conv1d",

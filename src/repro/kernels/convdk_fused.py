@@ -11,12 +11,15 @@ round-trips through HBM twice per separable block:
 Both trips are exactly the IB<->TRF buffer traffic Algorithms 1-2 of the
 paper are designed to eliminate.  This kernel removes them:
 
-* **In-kernel strip staging** — the kernel receives the *unstaged*
-  ``(B, H_pad, W_pad, C)`` input; each grid cell selects its overlapping
-  ``(tile_h-1)*s + k_h`` row window with a dynamic ``pl.ds`` load instead of
-  consuming a pre-duplicated strips tensor.  Halo rows are re-read from the
-  resident block, never re-written to HBM (the TRF-residency property of
-  Algorithm 1's shift cycles).
+* **Strip staging through the shared engine** (``kernels.staging``) — the
+  kernel receives the *unstaged* ``(B, H_tot, W_pad, C)`` input and stages
+  each grid cell's overlapping ``(tile_h-1)*s + k_h`` row window per the
+  schedule's **residency**: a VMEM-resident ``pl.ds`` slice
+  (``"resident"``), a per-cell async DMA from the ``ANY``/HBM space
+  (``"strip_dma"``), or a double-buffered DMA stream that prefetches the
+  next cell's window while this one computes (``"strip_dma_db"``, the
+  production default).  Halo rows are re-read, never re-written to HBM
+  (the TRF-residency property of Algorithm 1's shift cycles).
 * **Fused pointwise projection** — the DW accumulator is contracted with the
   ``(C_in, C_out)`` pointwise weight on the lane axis while still in VMEM.
   Depthwise outputs never touch HBM at all; the only HBM write is the final
@@ -30,11 +33,11 @@ complete before the PW contraction of that block — so a DW-stage activation
 (the BN-free stand-in for MobileNet's ReLU6 between DW and PW) can be fused
 exactly.
 
-On CPU the kernel runs in interpret mode (CI gate); the BlockSpec keeps the
-whole padded height of one channel block resident per cell, which is the
-interpret-friendly rendering of a production ``ANY``-space input + per-strip
-async DMA.  The traffic *model* for schedule selection lives in
-``core.perfmodel`` / ``core.autotune`` and accounts per-strip staging.
+Interpret mode (the CI backend) executes the SAME DMA-structured code path
+— the pallas interpreter implements the copy/semaphore primitives — so the
+parity suite exercises the production staging structure, not a CI-only
+twin.  The traffic model for schedule selection lives in ``core.perfmodel``
+/ ``core.autotune`` and prices every residency.
 """
 
 from __future__ import annotations
@@ -47,32 +50,33 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from ..core.perfmodel import pick_channel_block
+from ..core.perfmodel import DEFAULT_RESIDENCY, pick_channel_block
 from .common import default_interpret, round_up as _round_up, spatial_pads
 from .ref import _act_ref, separable_ref
+from .staging import StripPlan, StripStream, strip_plan
 
 
-def _fused_kernel(x_ref, wdw_ref, wpw_ref, o_ref, acc_ref, *, k_h: int,
-                  k_w: int, stride: int, tile_h: int, out_w: int,
+def _fused_kernel(x_ref, wdw_ref, wpw_ref, o_ref, *scratch, plan: StripPlan,
+                  k_h: int, k_w: int, stride: int, tile_h: int, out_w: int,
                   dw_act: Optional[str], act: Optional[str]):
     """One (batch, row-strip, c_out-block, c_in-block) grid cell.
 
-    x_ref   : (1, H_tot, W_pad, CI)  unstaged input, full padded height
+    x_ref   : unstaged input — a full-height VMEM channel block
+              (``resident``) or the whole ``ANY``-space tensor (DMA modes)
     wdw_ref : (k_h, k_w, CI)         depthwise taps (the "TM")
     wpw_ref : (CI, CO)               pointwise projection block
     o_ref   : (1, tile_h, out_w, CO)
-    acc_ref : (tile_h, out_w, CO) f32 VMEM scratch — PW partial sums across
-              the innermost (c_in reduction) grid dimension.
+    scratch : (tile_h, out_w, CO) f32 PW accumulator (partial sums across
+              the innermost c_in grid dim) + the staging engine's refs.
     """
     s = stride
-    ti = pl.program_id(1)
+    stage_refs, (acc_ref,) = plan.take_scratch(scratch)
     ci = pl.program_id(3)
     n_ci = pl.num_programs(3)
-    in_rows = (tile_h - 1) * s + k_h
 
-    # In-kernel staging: the overlapping row strip is a dynamic window into
-    # the resident block — replaces the HBM-materialized stage_row_strips.
-    x = x_ref[0, pl.ds(ti * tile_h * s, in_rows)]        # (in_rows, W_pad, CI)
+    # The staged strip window: (in_rows, w_span, CI).  Under strip_dma_db
+    # this wait also kicks off the prefetch of the NEXT cell's window.
+    x = StripStream(plan, x_ref, stage_refs).get()
 
     # Algorithm-2 tap loop: l shift cycles x k_h row taps over the resident
     # strip, all width blocks updated per tap (see convdk_dw._dw2d_kernel).
@@ -127,6 +131,7 @@ def fused_separable_pallas(
     dw_act: Optional[str] = None,
     act: Optional[str] = None,
     interpret: bool = False,
+    residency: str = DEFAULT_RESIDENCY,
 ) -> jax.Array:
     """Raw fused kernel launch over a pre-padded input.
 
@@ -141,18 +146,21 @@ def fused_separable_pallas(
     assert c_out % co_block == 0, (c_out, co_block)
     grid = (b, n_th, c_out // co_block, c_in // ci_block)
 
+    plan = strip_plan(
+        h_tot=h_tot, w_tot=w_pad,
+        w_span=min(w_pad, (out_w - 1) * stride + k_w),
+        c_block=ci_block, tile_h=tile_h, grid=grid, window_dims=(0, 1, 3),
+        stride=stride, k_h=k_h, residency=residency)
+
     kernel = functools.partial(
-        _fused_kernel, k_h=k_h, k_w=k_w, stride=stride, tile_h=tile_h,
-        out_w=out_w, dw_act=dw_act, act=act,
+        _fused_kernel, plan=plan, k_h=k_h, k_w=k_w, stride=stride,
+        tile_h=tile_h, out_w=out_w, dw_act=dw_act, act=act,
     )
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec(
-                (1, h_tot, w_pad, ci_block),
-                lambda bi, ti, co, ci: (bi, 0, 0, ci),
-            ),
+            plan.in_spec(lambda bi, ti, co, ci: (bi, 0, 0, ci)),
             pl.BlockSpec((k_h, k_w, ci_block),
                          lambda bi, ti, co, ci: (0, 0, ci)),
             pl.BlockSpec((ci_block, co_block),
@@ -164,13 +172,14 @@ def fused_separable_pallas(
         ),
         out_shape=jax.ShapeDtypeStruct(
             (b, n_th * tile_h, out_w, c_out), x_pad.dtype),
-        scratch_shapes=[pltpu.VMEM((tile_h, out_w, co_block), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((tile_h, out_w, co_block), jnp.float32),
+                        *plan.scratch_shapes(x_pad.dtype)],
         interpret=interpret,
     )(x_pad, w_dw, w_pw)
 
 
 def _fused_impl(x, w_dw, w_pw, stride, padding, tile_h, dw_act, act,
-                interpret):
+                interpret, residency=DEFAULT_RESIDENCY):
     b, h, w_in, c = x.shape
     k_h, k_w, cw = w_dw.shape
     c_in_pw, c_out = w_pw.shape
@@ -196,7 +205,7 @@ def _fused_impl(x, w_dw, w_pw, stride, padding, tile_h, dw_act, act,
 
     tile_h = max(1, min(tile_h, out_h))
     n_th = -(-out_h // tile_h)
-    # height cover so the last strip's pl.ds window stays in bounds
+    # height cover so the last strip's window stays in bounds
     need_h = (n_th - 1) * tile_h * s + (tile_h - 1) * s + k_h
     if need_h > xp.shape[1]:
         xp = jnp.pad(xp, ((0, 0), (0, need_h - xp.shape[1]), (0, 0), (0, 0)))
@@ -204,24 +213,27 @@ def _fused_impl(x, w_dw, w_pw, stride, padding, tile_h, dw_act, act,
     out = fused_separable_pallas(
         xp, wdp, wpp, stride=s, out_w=out_w, tile_h=tile_h, n_th=n_th,
         ci_block=ci_block, co_block=co_block, dw_act=dw_act, act=act,
-        interpret=interpret,
+        interpret=interpret, residency=residency,
     )
     return out[:, :out_h, :, :c_out]
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
-def _fused_op(x, w_dw, w_pw, stride, padding, tile_h, dw_act, act, interpret):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9))
+def _fused_op(x, w_dw, w_pw, stride, padding, tile_h, dw_act, act, interpret,
+              residency):
     return _fused_impl(x, w_dw, w_pw, stride, padding, tile_h, dw_act, act,
-                       interpret)
+                       interpret, residency)
 
 
-def _fused_fwd(x, w_dw, w_pw, stride, padding, tile_h, dw_act, act, interpret):
+def _fused_fwd(x, w_dw, w_pw, stride, padding, tile_h, dw_act, act, interpret,
+               residency):
     out = _fused_op(x, w_dw, w_pw, stride, padding, tile_h, dw_act, act,
-                    interpret)
+                    interpret, residency)
     return out, (x, w_dw, w_pw)
 
 
-def _fused_bwd(stride, padding, tile_h, dw_act, act, interpret, res, g):
+def _fused_bwd(stride, padding, tile_h, dw_act, act, interpret, residency,
+               res, g):
     # Backward through the mathematically identical reference composition —
     # the kernel computes the same separable block, so the VJP is exact.
     x, w_dw, w_pw = res
@@ -240,7 +252,7 @@ _fused_op.defvjp(_fused_fwd, _fused_bwd)
 @functools.partial(
     jax.jit,
     static_argnames=("stride", "padding", "tile_h", "dw_act", "act",
-                     "interpret"),
+                     "interpret", "residency"),
 )
 def convdk_fused_separable(
     x: jax.Array,
@@ -253,6 +265,7 @@ def convdk_fused_separable(
     dw_act: Optional[str] = None,
     act: Optional[str] = None,
     interpret: Optional[bool] = None,
+    residency: Optional[str] = None,
 ) -> jax.Array:
     """Fused depthwise-separable block via one ConvDK Pallas kernel
     (differentiable).
@@ -264,9 +277,15 @@ def convdk_fused_separable(
     w_dw : (k_h, k_w, C_in) depthwise taps
     w_pw : (C_in, C_out) pointwise projection
     dw_act / act : None | "relu" | "relu6", fused mid-block / output
-    activations.  Returns (B, H', W', C_out).
+    activations.
+    residency : "resident" | "strip_dma" | "strip_dma_db" (default) — how
+    the input stream is staged (see ``kernels.staging``); the autotuner's
+    per-layer pick routes through ``models.common.separable_block``.
+    Returns (B, H', W', C_out).
     """
     if interpret is None:
         interpret = default_interpret()
+    if residency is None:
+        residency = DEFAULT_RESIDENCY
     return _fused_op(x, w_dw, w_pw, stride, padding, tile_h, dw_act, act,
-                     interpret)
+                     interpret, residency)

@@ -17,12 +17,12 @@ for plain separable blocks.
 This module closes the gap with a **two-pass fused schedule**:
 
 * **Pass 1** (``_mbconv_pass1_kernel``): per (c_mid block, row strip), the
-  expand PW runs over the in-kernel-staged input window (reduction over
-  c_in blocks in the innermost grid dim), the DW taps consume the expanded
-  strip while it is still in VMEM, and the SE pool is accumulated on-chip
-  into a tiny (B, C_mid) output — masked so padded strip rows never enter
-  the pool.  The DW output either goes to HBM ONCE (``mode="retain"``) or
-  is discarded (``mode="recompute"``).
+  expand PW runs over the staged input window (reduction over c_in blocks
+  in the innermost grid dim), the DW taps consume the expanded strip while
+  it is still in VMEM, and the SE pool is accumulated on-chip into a tiny
+  (B, C_mid) output — masked so padded strip rows never enter the pool.
+  The DW output either goes to HBM ONCE (``mode="retain"``) or is
+  discarded (``mode="recompute"``).
 * **SE MLP** (host-side, between passes): two tiny FCs + sigmoid on the
   pooled (B, C_mid) vector — negligible traffic, accounted by the model.
 * **Pass 2**: the SE gate folds into the projection contraction in the same
@@ -31,6 +31,14 @@ This module closes the gap with a **two-pass fused schedule**:
   (``recompute``, ``_mbconv_pass2_recompute_kernel``, same expand+DW loop
   as pass 1).  The only activation write of the whole block is the final
   output.
+
+Every big input stream goes through the shared strip-staging engine
+(``kernels.staging``) under the schedule's **residency** axis: the input
+windows of pass 1 / recompute pass 2 are halo'd conv strips, and the
+``retain`` pass-2 re-read of the DW tensor is a non-overlapping row-block
+stream — under ``strip_dma_db`` it becomes a double-buffered DMA stream
+that prefetches the next (strip, c_mid block) while the projection of the
+current one runs.
 
 Retain pays ``E * (1 + n_co)`` HBM words for the DW tensor ``E``; recompute
 re-reads the input strips and expand/DW weights ``n_co`` more times.  The
@@ -52,9 +60,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from ..core.perfmodel import pick_channel_block
+from ..core.perfmodel import DEFAULT_RESIDENCY, pick_channel_block
 from .common import default_interpret, round_up as _round_up, spatial_pads
 from .ref import _act_ref, mbconv_ref
+from .staging import StripPlan, StripStream, strip_plan
 
 
 def _dw_taps(e, w_dw_ref, *, k_h, k_w, stride, tile_h, out_w):
@@ -77,21 +86,16 @@ def _dw_taps(e, w_dw_ref, *, k_h, k_w, stride, tile_h, out_w):
     return dw
 
 
-def _expand_accumulate(x_ref, wexp_ref, acc_ref, *, ti, ci, stride, k_h,
-                       k_w, tile_h, out_w):
+def _expand_accumulate(win, wexp_ref, acc_ref, *, ci):
     """One c_in-block partial of the expand PW over the staged strip window.
 
-    Stages the overlapping ``in_rows`` row window with a dynamic ``pl.ds``
-    load (in-kernel staging: halo rows are re-read from the resident block,
-    never re-written to HBM) and contracts it with the (CI, CM) expand
-    block, accumulating across the innermost c_in grid dimension.
+    ``win`` is the engine-staged ``(in_rows, w_need, CI)`` window; the
+    contraction with the (CI, CM) expand block accumulates across the
+    innermost c_in grid dimension.
     """
-    s = stride
-    in_rows = (tile_h - 1) * s + k_h
-    w_need = (out_w - 1) * s + k_w
-    x = x_ref[0, pl.ds(ti * tile_h * s, in_rows)][:, :w_need]
+    in_rows, w_need = win.shape[0], win.shape[1]
     partial = jax.lax.dot_general(
-        x.reshape(in_rows * w_need, x.shape[-1]).astype(jnp.float32),
+        win.reshape(in_rows * w_need, win.shape[-1]).astype(jnp.float32),
         wexp_ref[:, :].astype(jnp.float32),
         dimension_numbers=(((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32,
@@ -106,27 +110,28 @@ def _expand_accumulate(x_ref, wexp_ref, acc_ref, *, ti, ci, stride, k_h,
         acc_ref[...] = acc_ref[...] + partial
 
 
-def _mbconv_pass1_kernel(x_ref, wexp_ref, wdw_ref, pool_ref, *rest, k_h,
-                         k_w, stride, tile_h, out_w, out_h,
-                         exp_act: Optional[str], dw_act: Optional[str],
-                         retain: bool):
+def _mbconv_pass1_kernel(x_ref, wexp_ref, wdw_ref, pool_ref, *rest,
+                         plan: StripPlan, k_h, k_w, stride, tile_h, out_w,
+                         out_h, exp_act: Optional[str],
+                         dw_act: Optional[str], retain: bool):
     """One (batch, c_mid-block, row-strip, c_in-block) grid cell of pass 1.
 
-    x_ref    : (1, H_tot, W_pad, CI)  unstaged input, full padded height
+    x_ref    : unstaged input (engine-staged per ``plan``)
     wexp_ref : (CI, CM)               expand-PW block
     wdw_ref  : (k_h, k_w, CM)         depthwise taps
     pool_ref : (1, 1, CM)             on-chip SE pool accumulator (sums)
-    rest     : (dw_out_ref,) acc_ref for retain, else just acc_ref
+    rest     : (dw_out_ref,) if retain, then acc_ref + staging refs
     """
     if retain:
-        dwo_ref, acc_ref = rest
+        dwo_ref, *scratch = rest
     else:
-        (acc_ref,) = rest
+        scratch = rest
+    stage_refs, (acc_ref,) = plan.take_scratch(tuple(scratch))
     ti = pl.program_id(2)
     ci = pl.program_id(3)
     n_ci = pl.num_programs(3)
-    _expand_accumulate(x_ref, wexp_ref, acc_ref, ti=ti, ci=ci, stride=stride,
-                       k_h=k_h, k_w=k_w, tile_h=tile_h, out_w=out_w)
+    win = StripStream(plan, x_ref, stage_refs).get()
+    _expand_accumulate(win, wexp_ref, acc_ref, ci=ci)
 
     @pl.when(ci == n_ci - 1)
     def _finish_strip():
@@ -153,9 +158,9 @@ def _mbconv_pass1_kernel(x_ref, wexp_ref, wdw_ref, pool_ref, *rest, k_h,
 
 
 def _mbconv_pass2_recompute_kernel(x_ref, wexp_ref, wdw_ref, scale_ref,
-                                   wproj_ref, o_ref, acc_ref, proj_ref, *,
-                                   k_h, k_w, stride, tile_h, out_w,
-                                   exp_act: Optional[str],
+                                   wproj_ref, o_ref, *scratch,
+                                   plan: StripPlan, k_h, k_w, stride,
+                                   tile_h, out_w, exp_act: Optional[str],
                                    dw_act: Optional[str]):
     """One (batch, c_out-block, row-strip, c_mid-block, c_in-block) cell.
 
@@ -163,13 +168,13 @@ def _mbconv_pass2_recompute_kernel(x_ref, wexp_ref, wdw_ref, scale_ref,
     HBM), multiplies by the SE gate and contracts with the projection block
     — partial projection sums carried across the c_mid grid dimension.
     """
-    ti = pl.program_id(2)
+    stage_refs, (acc_ref, proj_ref) = plan.take_scratch(scratch)
     cm = pl.program_id(3)
     ci = pl.program_id(4)
     n_cm = pl.num_programs(3)
     n_ci = pl.num_programs(4)
-    _expand_accumulate(x_ref, wexp_ref, acc_ref, ti=ti, ci=ci, stride=stride,
-                       k_h=k_h, k_w=k_w, tile_h=tile_h, out_w=out_w)
+    win = StripStream(plan, x_ref, stage_refs).get()
+    _expand_accumulate(win, wexp_ref, acc_ref, ci=ci)
 
     @pl.when(ci == n_ci - 1)
     def _project():
@@ -198,13 +203,16 @@ def _mbconv_pass2_recompute_kernel(x_ref, wexp_ref, wdw_ref, scale_ref,
 
 
 def _mbconv_pass2_retain_kernel(dw_ref, scale_ref, wproj_ref, o_ref,
-                                proj_ref, *, tile_h, out_w):
-    """One (batch, c_out-block, row-strip, c_mid-block) cell: read the
-    retained DW block back once, fold in the SE gate, contract with the
-    projection block (partial sums across the c_mid grid dimension)."""
+                                *scratch, plan: StripPlan, tile_h, out_w):
+    """One (batch, c_out-block, row-strip, c_mid-block) cell: stage the
+    retained DW block back (a non-overlapping row-block stream — double-
+    buffered DMA under ``strip_dma_db``), fold in the SE gate, contract
+    with the projection block (partial sums across the c_mid grid dim)."""
+    stage_refs, (proj_ref,) = plan.take_scratch(scratch)
     cm = pl.program_id(3)
     n_cm = pl.num_programs(3)
-    dw = dw_ref[0].astype(jnp.float32) * scale_ref[0, 0].astype(jnp.float32)
+    dw_win = StripStream(plan, dw_ref, stage_refs).get()
+    dw = dw_win.astype(jnp.float32) * scale_ref[0, 0].astype(jnp.float32)
     partial = jax.lax.dot_general(
         dw.reshape(tile_h * out_w, dw.shape[-1]),
         wproj_ref[:, :].astype(jnp.float32),
@@ -227,7 +235,7 @@ def _mbconv_pass2_retain_kernel(dw_ref, scale_ref, wproj_ref, o_ref,
 
 def mbconv_pass1_pallas(x_pad, w_exp, w_dw, *, stride, out_w, out_h, tile_h,
                         n_th, ci_block, cm_block, exp_act, dw_act, retain,
-                        interpret):
+                        interpret, residency=DEFAULT_RESIDENCY):
     """Raw pass-1 launch: (pool_sums, dw_retained-or-None)."""
     b, h_tot, w_pad, ci_pad = x_pad.shape
     k_h, k_w, cm_pad = w_dw.shape
@@ -235,10 +243,14 @@ def mbconv_pass1_pallas(x_pad, w_exp, w_dw, *, stride, out_w, out_h, tile_h,
     in_rows = (tile_h - 1) * stride + k_h
     w_need = (out_w - 1) * stride + k_w
 
+    plan = strip_plan(
+        h_tot=h_tot, w_tot=w_pad, w_span=w_need, c_block=ci_block,
+        tile_h=tile_h, grid=grid, window_dims=(0, 2, 3), stride=stride,
+        k_h=k_h, residency=residency)
     kernel = functools.partial(
-        _mbconv_pass1_kernel, k_h=k_h, k_w=k_w, stride=stride, tile_h=tile_h,
-        out_w=out_w, out_h=out_h, exp_act=exp_act, dw_act=dw_act,
-        retain=retain)
+        _mbconv_pass1_kernel, plan=plan, k_h=k_h, k_w=k_w, stride=stride,
+        tile_h=tile_h, out_w=out_w, out_h=out_h, exp_act=exp_act,
+        dw_act=dw_act, retain=retain)
     out_shape = [jax.ShapeDtypeStruct((b, 1, cm_pad), jnp.float32)]
     out_specs = [pl.BlockSpec((1, 1, cm_block),
                               lambda bi, cm, ti, ci: (bi, 0, cm))]
@@ -252,8 +264,7 @@ def mbconv_pass1_pallas(x_pad, w_exp, w_dw, *, stride, out_w, out_h, tile_h,
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, h_tot, w_pad, ci_block),
-                         lambda bi, cm, ti, ci: (bi, 0, 0, ci)),
+            plan.in_spec(lambda bi, cm, ti, ci: (bi, 0, 0, ci)),
             pl.BlockSpec((ci_block, cm_block),
                          lambda bi, cm, ti, ci: (ci, cm)),
             pl.BlockSpec((k_h, k_w, cm_block),
@@ -261,7 +272,8 @@ def mbconv_pass1_pallas(x_pad, w_exp, w_dw, *, stride, out_w, out_h, tile_h,
         ],
         out_specs=out_specs,
         out_shape=out_shape,
-        scratch_shapes=[pltpu.VMEM((in_rows, w_need, cm_block), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((in_rows, w_need, cm_block), jnp.float32),
+                        *plan.scratch_shapes(x_pad.dtype)],
         interpret=interpret,
     )(x_pad, w_exp, w_dw)
     return (outs[0], outs[1]) if retain else (outs[0], None)
@@ -270,7 +282,7 @@ def mbconv_pass1_pallas(x_pad, w_exp, w_dw, *, stride, out_w, out_h, tile_h,
 def mbconv_pass2_recompute_pallas(x_pad, w_exp, w_dw, scale, w_proj, *,
                                   stride, out_w, tile_h, n_th, ci_block,
                                   cm_block, co_block, exp_act, dw_act,
-                                  interpret):
+                                  interpret, residency=DEFAULT_RESIDENCY):
     b, h_tot, w_pad, ci_pad = x_pad.shape
     k_h, k_w, cm_pad = w_dw.shape
     co_pad = w_proj.shape[1]
@@ -279,15 +291,19 @@ def mbconv_pass2_recompute_pallas(x_pad, w_exp, w_dw, scale, w_proj, *,
     in_rows = (tile_h - 1) * stride + k_h
     w_need = (out_w - 1) * stride + k_w
 
+    plan = strip_plan(
+        h_tot=h_tot, w_tot=w_pad, w_span=w_need, c_block=ci_block,
+        tile_h=tile_h, grid=grid, window_dims=(0, 2, 4), stride=stride,
+        k_h=k_h, residency=residency)
     kernel = functools.partial(
-        _mbconv_pass2_recompute_kernel, k_h=k_h, k_w=k_w, stride=stride,
-        tile_h=tile_h, out_w=out_w, exp_act=exp_act, dw_act=dw_act)
+        _mbconv_pass2_recompute_kernel, plan=plan, k_h=k_h, k_w=k_w,
+        stride=stride, tile_h=tile_h, out_w=out_w, exp_act=exp_act,
+        dw_act=dw_act)
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, h_tot, w_pad, ci_block),
-                         lambda bi, co, ti, cm, ci: (bi, 0, 0, ci)),
+            plan.in_spec(lambda bi, co, ti, cm, ci: (bi, 0, 0, ci)),
             pl.BlockSpec((ci_block, cm_block),
                          lambda bi, co, ti, cm, ci: (ci, cm)),
             pl.BlockSpec((k_h, k_w, cm_block),
@@ -305,26 +321,33 @@ def mbconv_pass2_recompute_pallas(x_pad, w_exp, w_dw, scale, w_proj, *,
         scratch_shapes=[
             pltpu.VMEM((in_rows, w_need, cm_block), jnp.float32),
             pltpu.VMEM((tile_h, out_w, co_block), jnp.float32),
+            *plan.scratch_shapes(x_pad.dtype),
         ],
         interpret=interpret,
     )(x_pad, w_exp, w_dw, scale, w_proj)
 
 
 def mbconv_pass2_retain_pallas(dw_ret, scale, w_proj, *, out_w, tile_h,
-                               n_th, cm_block, co_block, interpret):
+                               n_th, cm_block, co_block, interpret,
+                               residency=DEFAULT_RESIDENCY):
     b = dw_ret.shape[0]
     cm_pad = dw_ret.shape[-1]
     co_pad = w_proj.shape[1]
     grid = (b, co_pad // co_block, n_th, cm_pad // cm_block)
 
-    kernel = functools.partial(_mbconv_pass2_retain_kernel, tile_h=tile_h,
-                               out_w=out_w)
+    # The retained-DW re-read: non-overlapping tile_h-row blocks (k_h=1,
+    # stride=1 geometry) — the double-buffered DMA stream of the tentpole.
+    plan = strip_plan(
+        h_tot=dw_ret.shape[1], w_tot=dw_ret.shape[2], w_span=out_w,
+        c_block=cm_block, tile_h=tile_h, grid=grid, window_dims=(0, 2, 3),
+        residency=residency)
+    kernel = functools.partial(_mbconv_pass2_retain_kernel, plan=plan,
+                               tile_h=tile_h, out_w=out_w)
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, tile_h, out_w, cm_block),
-                         lambda bi, co, ti, cm: (bi, ti, 0, cm)),
+            plan.in_spec(lambda bi, co, ti, cm: (bi, ti, 0, cm)),
             pl.BlockSpec((1, 1, cm_block),
                          lambda bi, co, ti, cm: (bi, 0, cm)),
             pl.BlockSpec((cm_block, co_block),
@@ -335,13 +358,15 @@ def mbconv_pass2_retain_pallas(dw_ret, scale, w_proj, *, out_w, tile_h,
             lambda bi, co, ti, cm: (bi, ti, 0, co)),
         out_shape=jax.ShapeDtypeStruct(
             (b, n_th * tile_h, out_w, co_pad), dw_ret.dtype),
-        scratch_shapes=[pltpu.VMEM((tile_h, out_w, co_block), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((tile_h, out_w, co_block), jnp.float32),
+                        *plan.scratch_shapes(dw_ret.dtype)],
         interpret=interpret,
     )(dw_ret, scale, w_proj)
 
 
 def _mbconv_impl(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj, stride,
                  padding, tile_h, mode, exp_act, dw_act, interpret,
+                 residency=DEFAULT_RESIDENCY,
                  axis_name: Optional[str] = None):
     """Two-pass fused MBConv on one device — or on one SHARD of the c_mid
     grid when ``axis_name`` names a mesh axis (``shard_map`` body).
@@ -387,7 +412,7 @@ def _mbconv_impl(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj, stride,
 
     tile_h = max(1, min(tile_h, out_h))
     n_th = -(-out_h // tile_h)
-    # height cover so the last strip's pl.ds window stays in bounds
+    # height cover so the last strip's window stays in bounds
     need_h = (n_th - 1) * tile_h * s + (tile_h - 1) * s + k_h
     if need_h > xp.shape[1]:
         xp = jnp.pad(xp, ((0, 0), (0, need_h - xp.shape[1]), (0, 0), (0, 0)))
@@ -395,7 +420,8 @@ def _mbconv_impl(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj, stride,
     pool, dw_ret = mbconv_pass1_pallas(
         xp, wexp_p, wdw_p, stride=s, out_w=out_w, out_h=out_h, tile_h=tile_h,
         n_th=n_th, ci_block=ci_block, cm_block=cm_block, exp_act=exp_act,
-        dw_act=dw_act, retain=(mode == "retain"), interpret=interpret)
+        dw_act=dw_act, retain=(mode == "retain"), interpret=interpret,
+        residency=residency)
 
     # SE MLP on the on-chip-accumulated pool (masked rows excluded; the
     # mean uses the true output element count).  The squeeze FC reduces
@@ -413,13 +439,14 @@ def _mbconv_impl(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj, stride,
     if mode == "retain":
         out = mbconv_pass2_retain_pallas(
             dw_ret, scale, wproj_p, out_w=out_w, tile_h=tile_h, n_th=n_th,
-            cm_block=cm_block, co_block=co_block, interpret=interpret)
+            cm_block=cm_block, co_block=co_block, interpret=interpret,
+            residency=residency)
     else:
         out = mbconv_pass2_recompute_pallas(
             xp, wexp_p, wdw_p, scale, wproj_p, stride=s, out_w=out_w,
             tile_h=tile_h, n_th=n_th, ci_block=ci_block, cm_block=cm_block,
             co_block=co_block, exp_act=exp_act, dw_act=dw_act,
-            interpret=interpret)
+            interpret=interpret, residency=residency)
     out = out[:, :out_h, :, :c_out]
     if axis_name is not None:
         # projection partials: each shard contracted only its c_mid slice
@@ -427,24 +454,25 @@ def _mbconv_impl(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj, stride,
     return out
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(8, 9, 10, 11, 12, 13, 14))
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(8, 9, 10, 11, 12, 13, 14, 15))
 def _mbconv_op(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj, stride,
-               padding, tile_h, mode, exp_act, dw_act, interpret):
+               padding, tile_h, mode, exp_act, dw_act, interpret, residency):
     return _mbconv_impl(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj,
                         stride, padding, tile_h, mode, exp_act, dw_act,
-                        interpret)
+                        interpret, residency)
 
 
 def _mbconv_fwd(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj, stride,
-                padding, tile_h, mode, exp_act, dw_act, interpret):
+                padding, tile_h, mode, exp_act, dw_act, interpret, residency):
     out = _mbconv_op(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj,
                      stride, padding, tile_h, mode, exp_act, dw_act,
-                     interpret)
+                     interpret, residency)
     return out, (x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj)
 
 
 def _mbconv_bwd(stride, padding, tile_h, mode, exp_act, dw_act, interpret,
-                res, g):
+                residency, res, g):
     # Backward through the mathematically identical reference composition —
     # the two-pass kernel computes the same MBConv block, so the VJP is
     # exact (same pattern as convdk_fused's VJP).
@@ -462,7 +490,7 @@ _mbconv_op.defvjp(_mbconv_fwd, _mbconv_bwd)
 @functools.partial(
     jax.jit,
     static_argnames=("stride", "padding", "tile_h", "mode", "exp_act",
-                     "dw_act", "interpret"),
+                     "dw_act", "interpret", "residency"),
 )
 def convdk_mbconv_fused(
     x: jax.Array,
@@ -481,6 +509,7 @@ def convdk_mbconv_fused(
     exp_act: Optional[str] = "silu",
     dw_act: Optional[str] = "silu",
     interpret: Optional[bool] = None,
+    residency: Optional[str] = None,
 ) -> jax.Array:
     """Two-pass fused MBConv block via the ConvDK Pallas kernels
     (differentiable).  No residual add — the model layer owns that.
@@ -493,13 +522,17 @@ def convdk_mbconv_fused(
     w_proj : (C_mid, C_out) projection PW (linear)
     mode   : "retain" | "recompute" — pass-2 DW source (see module doc;
              ``core.autotune.get_mbconv_schedule`` picks per layer shape).
+    residency : "resident" | "strip_dma" | "strip_dma_db" (default) — how
+             the input / retained-DW streams are staged (``kernels.staging``).
     Returns (B, H', W', C_out).
     """
     if interpret is None:
         interpret = default_interpret()
+    if residency is None:
+        residency = DEFAULT_RESIDENCY
     return _mbconv_op(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj,
                       stride, padding, tile_h, mode, exp_act, dw_act,
-                      interpret)
+                      interpret, residency)
 
 
 @functools.partial(

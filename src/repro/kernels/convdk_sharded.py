@@ -21,25 +21,37 @@ re-prove, they do not transfer).  This module wraps both pipelines in
   ``_mbconv_impl``: the pass-1 SE pool leaves the chip once as a tiny
   (B, C_se) squeeze partial, and pass 2 psums the projection partials.
 
+Each shard runs the shared strip-staging engine (``kernels.staging``)
+under the schedule's residency, so the DMA-structured input streams are
+identical on and off the mesh.
+
 Both wrappers are differentiable with the same pattern as their
 single-device counterparts: the VJP runs through the mathematically
 identical reference composition on the full (replicated) tensors.
 
+**Serving-rate call sites**: the public wrappers dispatch through a
+process-wide cache of ``jax.jit``-ted entry points keyed on (mesh, static
+schedule) — without it every eager call rebuilt the ``shard_map`` closure
+and re-traced the whole fused pipeline (the ROADMAP re-trace edge).
+``TRACE_COUNTS`` records actual impl traces per family so the regression
+test can pin the cache down.
+
 Per-device HBM traffic and the psum bytes are priced by
 ``core.perfmodel.sharded_separable_traffic`` /
-``sharded_mbconv_traffic``; ``core.autotune`` solves schedules under a
-``mesh_shape`` axis so sharded and unsharded picks never collide.
+``sharded_mbconv_traffic``; ``core.autotune`` solves schedules under
+``mesh_shape`` and ``residency`` axes so partitionings never collide.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 from jax.sharding import PartitionSpec as P
 
-from ..compat import shard_map_compat
+from ..compat import residual_barrier, shard_map_compat
+from ..core.perfmodel import DEFAULT_RESIDENCY
 from .common import default_interpret
 from .convdk_fused import _fused_impl
 from .convdk_mbconv import _mbconv_impl
@@ -47,6 +59,11 @@ from .ref import mbconv_ref, separable_ref
 
 DATA_AXIS = "data"
 MODEL_AXIS = "model"
+
+# Times each sharded impl body was TRACED (not called) — a jit-cache hit
+# leaves these untouched.  tests/test_distributed_fused.py pins the
+# serving-rate contract: N calls at one (mesh, schedule, shapes) == 1 trace.
+TRACE_COUNTS: Dict[str, int] = {"separable": 0, "mbconv": 0}
 
 
 def conv_mesh_shape(mesh) -> Tuple[int, int]:
@@ -82,12 +99,13 @@ def _require_shardable(mesh, batch: int, channels: int, channel_name: str):
 # ---------------------------------------------------------------------------
 
 def _sep_sharded_impl(x, w_dw, w_pw, mesh, stride, padding, tile_h, dw_act,
-                      act, interpret):
+                      act, interpret, residency):
     _require_shardable(mesh, x.shape[0], w_pw.shape[1], "c_out")
+    TRACE_COUNTS["separable"] += 1
 
     def local(xl, wdl, wpl):
         return _fused_impl(xl, wdl, wpl, stride, padding, tile_h, dw_act,
-                           act, interpret)
+                           act, interpret, residency)
 
     return shard_map_compat(
         local, mesh,
@@ -98,22 +116,24 @@ def _sep_sharded_impl(x, w_dw, w_pw, mesh, stride, padding, tile_h, dw_act,
     )(x, w_dw, w_pw)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9, 10))
 def _sep_sharded_op(x, w_dw, w_pw, mesh, stride, padding, tile_h, dw_act,
-                    act, interpret):
+                    act, interpret, residency):
     return _sep_sharded_impl(x, w_dw, w_pw, mesh, stride, padding, tile_h,
-                             dw_act, act, interpret)
+                             dw_act, act, interpret, residency)
 
 
 def _sep_sharded_fwd(x, w_dw, w_pw, mesh, stride, padding, tile_h, dw_act,
-                     act, interpret):
+                     act, interpret, residency):
     out = _sep_sharded_op(x, w_dw, w_pw, mesh, stride, padding, tile_h,
-                          dw_act, act, interpret)
-    return out, (x, w_dw, w_pw)
+                          dw_act, act, interpret, residency)
+    # barrier: under the jitted entry, raw-input residuals get forwarded
+    # and a cotangent double-counts (see compat.residual_barrier)
+    return out, residual_barrier((x, w_dw, w_pw))
 
 
 def _sep_sharded_bwd(mesh, stride, padding, tile_h, dw_act, act, interpret,
-                     res, g):
+                     residency, res, g):
     x, w_dw, w_pw = res
     _, vjp = jax.vjp(
         lambda x_, wd_, wp_: separable_ref(
@@ -125,6 +145,23 @@ def _sep_sharded_bwd(mesh, stride, padding, tile_h, dw_act, act, interpret,
 
 
 _sep_sharded_op.defvjp(_sep_sharded_fwd, _sep_sharded_bwd)
+
+
+@functools.lru_cache(maxsize=256)
+def _sep_sharded_entry(mesh, stride, padding, tile_h, dw_act, act, interpret,
+                       residency):
+    """One jitted entry point per (mesh, static schedule).
+
+    The lru_cache makes repeated calls at serving rate reuse ONE
+    ``jax.jit`` callable, whose own cache then keys on shapes/dtypes — the
+    shard_map closure is built once per trace instead of once per call."""
+
+    @jax.jit
+    def entry(x, w_dw, w_pw):
+        return _sep_sharded_op(x, w_dw, w_pw, mesh, stride, padding, tile_h,
+                               dw_act, act, interpret, residency)
+
+    return entry
 
 
 def convdk_fused_separable_sharded(
@@ -139,23 +176,29 @@ def convdk_fused_separable_sharded(
     dw_act: Optional[str] = None,
     act: Optional[str] = None,
     interpret: Optional[bool] = None,
+    residency: Optional[str] = None,
 ) -> jax.Array:
     """Mesh-sharded fused depthwise-separable block (differentiable).
 
     ``shard_map`` over ``mesh``: batch on "data", output channels on
-    "model"; every device runs the single-device fused kernel on its
-    (batch, c_out) tile.  The c_in reduction is device-local (c_in is
-    replicated), so no collective is needed — per-device HBM traffic is
-    the single-device model evaluated at the shard shape.
+    "model"; every device runs the single-device fused kernel — including
+    its strip-staging engine, per ``residency`` — on its (batch, c_out)
+    tile.  The c_in reduction is device-local (c_in is replicated), so no
+    collective is needed — per-device HBM traffic is the single-device
+    model evaluated at the shard shape.
 
     Requires ``b % data == 0`` and ``c_out % model == 0``
     (``can_shard_fused`` pre-checks; the model layer falls back to the
-    unsharded kernel when the grid does not divide).
+    unsharded kernel when the grid does not divide).  Dispatches through a
+    cached jitted entry point, so repeated serving-rate calls do not
+    re-trace the ``shard_map`` closure.
     """
     if interpret is None:
         interpret = default_interpret()
-    return _sep_sharded_op(x, w_dw, w_pw, mesh, stride, padding, tile_h,
-                           dw_act, act, interpret)
+    if residency is None:
+        residency = DEFAULT_RESIDENCY
+    return _sep_sharded_entry(mesh, stride, padding, tile_h, dw_act, act,
+                              interpret, residency)(x, w_dw, w_pw)
 
 
 # ---------------------------------------------------------------------------
@@ -164,13 +207,14 @@ def convdk_fused_separable_sharded(
 
 def _mbconv_sharded_impl(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj,
                          mesh, stride, padding, tile_h, mode, exp_act,
-                         dw_act, interpret):
+                         dw_act, interpret, residency):
     _require_shardable(mesh, x.shape[0], w_dw.shape[-1], "c_mid")
+    TRACE_COUNTS["mbconv"] += 1
 
     def local(xl, wel, wdl, s1l, b1l, s2l, b2l, wpl):
         return _mbconv_impl(xl, wel, wdl, s1l, b1l, s2l, b2l, wpl, stride,
                             padding, tile_h, mode, exp_act, dw_act,
-                            interpret, axis_name=MODEL_AXIS)
+                            interpret, residency, axis_name=MODEL_AXIS)
 
     return shard_map_compat(
         local, mesh,
@@ -188,26 +232,29 @@ def _mbconv_sharded_impl(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj,
 
 
 @functools.partial(jax.custom_vjp,
-                   nondiff_argnums=(8, 9, 10, 11, 12, 13, 14, 15))
+                   nondiff_argnums=(8, 9, 10, 11, 12, 13, 14, 15, 16))
 def _mbconv_sharded_op(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj,
                        mesh, stride, padding, tile_h, mode, exp_act, dw_act,
-                       interpret):
+                       interpret, residency):
     return _mbconv_sharded_impl(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2,
                                 w_proj, mesh, stride, padding, tile_h, mode,
-                                exp_act, dw_act, interpret)
+                                exp_act, dw_act, interpret, residency)
 
 
 def _mbconv_sharded_fwd(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj,
                         mesh, stride, padding, tile_h, mode, exp_act, dw_act,
-                        interpret):
+                        interpret, residency):
     out = _mbconv_sharded_op(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2,
                              w_proj, mesh, stride, padding, tile_h, mode,
-                             exp_act, dw_act, interpret)
-    return out, (x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj)
+                             exp_act, dw_act, interpret, residency)
+    # barrier: under the jitted entry, raw-input residuals get forwarded
+    # and the w_dw cotangent double-counts (see compat.residual_barrier)
+    return out, residual_barrier(
+        (x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj))
 
 
 def _mbconv_sharded_bwd(mesh, stride, padding, tile_h, mode, exp_act,
-                        dw_act, interpret, res, g):
+                        dw_act, interpret, residency, res, g):
     _, vjp = jax.vjp(
         lambda *p: mbconv_ref(*p, stride=stride, padding=padding,
                               exp_act=exp_act, dw_act=dw_act),
@@ -217,6 +264,22 @@ def _mbconv_sharded_bwd(mesh, stride, padding, tile_h, mode, exp_act,
 
 
 _mbconv_sharded_op.defvjp(_mbconv_sharded_fwd, _mbconv_sharded_bwd)
+
+
+@functools.lru_cache(maxsize=256)
+def _mbconv_sharded_entry(mesh, stride, padding, tile_h, mode, exp_act,
+                          dw_act, interpret, residency):
+    """One jitted entry point per (mesh, static schedule) — see
+    ``_sep_sharded_entry``."""
+
+    @jax.jit
+    def entry(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj):
+        return _mbconv_sharded_op(x, w_exp, w_dw, w_se1, b_se1, w_se2,
+                                  b_se2, w_proj, mesh, stride, padding,
+                                  tile_h, mode, exp_act, dw_act, interpret,
+                                  residency)
+
+    return entry
 
 
 def convdk_mbconv_fused_sharded(
@@ -237,20 +300,26 @@ def convdk_mbconv_fused_sharded(
     exp_act: Optional[str] = "silu",
     dw_act: Optional[str] = "silu",
     interpret: Optional[bool] = None,
+    residency: Optional[str] = None,
 ) -> jax.Array:
     """Mesh-sharded two-pass fused MBConv block (differentiable).
 
     ``shard_map`` over ``mesh``: batch on "data", the expanded c_mid grid
-    on "model".  Each device runs both fused passes on its channel slice;
-    the pass-1 SE pool crosses devices exactly once (a (B, C_se) squeeze
-    ``psum`` before the pass-2 gate), and the pass-2 projection partials
-    are psum'd into the replicated block output.  Collective bytes are
-    priced by ``core.perfmodel.sharded_mbconv_traffic``.
+    on "model".  Each device runs both fused passes on its channel slice —
+    staged per ``residency`` by the shared engine, including the
+    double-buffered retained-DW re-read; the pass-1 SE pool crosses
+    devices exactly once (a (B, C_se) squeeze ``psum`` before the pass-2
+    gate), and the pass-2 projection partials are psum'd into the
+    replicated block output.  Collective bytes are priced by
+    ``core.perfmodel.sharded_mbconv_traffic``.
 
-    Requires ``b % data == 0`` and ``c_mid % model == 0``.
+    Requires ``b % data == 0`` and ``c_mid % model == 0``.  Dispatches
+    through a cached jitted entry point (no per-call re-tracing).
     """
     if interpret is None:
         interpret = default_interpret()
-    return _mbconv_sharded_op(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2,
-                              w_proj, mesh, stride, padding, tile_h, mode,
-                              exp_act, dw_act, interpret)
+    if residency is None:
+        residency = DEFAULT_RESIDENCY
+    return _mbconv_sharded_entry(mesh, stride, padding, tile_h, mode,
+                                 exp_act, dw_act, interpret, residency)(
+        x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj)

@@ -114,22 +114,28 @@ def separable_block(
     sharded = (mesh is not None and kcfg.shard_fused and kcfg.fused_separable
                and can_shard_fused(mesh, x.shape[0], w_pw.shape[1]))
     mesh_shape = conv_mesh_shape(mesh) if sharded else (1, 1)
-    tile_h = kcfg.tile_h
+    tile_h, residency = kcfg.tile_h, kcfg.residency
     if kcfg.autotune:
         from ..core.autotune import get_fused_schedule
         b, h, w, c_in = x.shape
-        tile_h = get_fused_schedule(
+        sch = get_fused_schedule(
             b, h, w, c_in, w_pw.shape[1], w_dw.shape[0], stride,
-            dtype_bytes=x.dtype.itemsize, mesh_shape=mesh_shape).tile_h
+            dtype_bytes=x.dtype.itemsize, mesh_shape=mesh_shape,
+            residency=kcfg.residency)
+        tile_h, residency = sch.tile_h, sch.residency
     if sharded:
         return convdk_fused_separable_sharded(
             x, w_dw, w_pw, mesh=mesh, stride=stride, padding=padding,
-            tile_h=tile_h, dw_act=dw_act, act=act, interpret=kcfg.interpret)
-    route = (convdk_fused_separable if kcfg.fused_separable
-             else convdk_separable_staged)
-    return route(x, w_dw, w_pw, stride=stride, padding=padding,
-                 tile_h=tile_h, dw_act=dw_act, act=act,
-                 interpret=kcfg.interpret)
+            tile_h=tile_h, dw_act=dw_act, act=act, interpret=kcfg.interpret,
+            residency=residency)
+    if kcfg.fused_separable:
+        return convdk_fused_separable(
+            x, w_dw, w_pw, stride=stride, padding=padding, tile_h=tile_h,
+            dw_act=dw_act, act=act, interpret=kcfg.interpret,
+            residency=residency)
+    return convdk_separable_staged(
+        x, w_dw, w_pw, stride=stride, padding=padding, tile_h=tile_h,
+        dw_act=dw_act, act=act, interpret=kcfg.interpret)
 
 
 # ---------------------------------------------------------------------------

@@ -154,10 +154,11 @@ def mbconv_block(
     With ``kcfg.fused_mbconv`` (the default) the block runs the two-pass
     fused ConvDK pipeline: pass 1 fuses expand-PW + DW per strip and
     accumulates the SE pool on-chip; pass 2 folds the SE gate into the
-    projection in the same VMEM residency.  The per-layer (tile_h, mode)
-    schedule comes from ``core.autotune.get_mbconv_schedule`` unless
-    ``kcfg`` pins one.  The identity residual is added when the shapes
-    allow (s == 1, C_in == C_out).
+    projection in the same VMEM residency.  The per-layer (tile_h, mode,
+    residency) schedule — residency being the strip-staging mode of
+    ``kernels.staging`` — comes from ``core.autotune.get_mbconv_schedule``
+    unless ``kcfg`` pins one.  The identity residual is added when the
+    shapes allow (s == 1, C_in == C_out).
 
     With a ``mesh`` (and ``kcfg.shard_fused``), the fused pipeline runs
     mesh-sharded via ``shard_map``: batch on "data", the expanded c_mid
@@ -193,16 +194,21 @@ def mbconv_block(
                and can_shard_fused(mesh, x.shape[0], c_mid))
     mesh_shape = conv_mesh_shape(mesh) if sharded else (1, 1)
     tile_h, mode = kcfg.tile_h, kcfg.mbconv_mode or "retain"
+    residency = kcfg.residency
     if kcfg.autotune:
         from ..core.autotune import get_mbconv_schedule
         b, h, w, _ = x.shape
         se_ratio = params["se_w1"].shape[1] / max(1, c_in)
+        # a pinned mbconv_mode enters the solve: tile_h/residency must be
+        # VMEM-feasible under THAT mode's footprint, not the free winner's
         sch = get_mbconv_schedule(
             b, h, w, c_in, c_mid, c_out, params["dw"].shape[0], stride,
             se_ratio=se_ratio, dtype_bytes=x.dtype.itemsize,
-            mesh_shape=mesh_shape)
+            mesh_shape=mesh_shape, residency=kcfg.residency,
+            mode=kcfg.mbconv_mode)
         tile_h = sch.tile_h
-        mode = kcfg.mbconv_mode or sch.mode
+        mode = sch.mode
+        residency = sch.residency
 
     args = (x, w_exp, params["dw"].astype(x.dtype),
             params["se_w1"], params["se_b1"], params["se_w2"],
@@ -211,11 +217,12 @@ def mbconv_block(
         out = convdk_mbconv_fused_sharded(
             *args, mesh=mesh, stride=stride, padding=padding, tile_h=tile_h,
             mode=mode, exp_act=eff_exp_act, dw_act=dw_act,
-            interpret=kcfg.interpret)
+            interpret=kcfg.interpret, residency=residency)
     elif kcfg.fused_mbconv:
         out = convdk_mbconv_fused(
             *args, stride=stride, padding=padding, tile_h=tile_h, mode=mode,
-            exp_act=eff_exp_act, dw_act=dw_act, interpret=kcfg.interpret)
+            exp_act=eff_exp_act, dw_act=dw_act, interpret=kcfg.interpret,
+            residency=residency)
     else:
         out = convdk_mbconv_staged(
             *args, stride=stride, padding=padding, tile_h=tile_h,

@@ -191,8 +191,10 @@ def test_legacy_pre_mesh_keys_migrate(cache_dir):
     tmp_path, cache = cache_dir
     sch = get_fused_schedule(1, 28, 28, 192, 64, 3, 2)
     (key,) = list(_entries(tmp_path))
-    legacy_key = key.replace("|mesh1x1|", "|")
-    assert "|mesh" not in legacy_key and len(legacy_key.split("|")) == 5
+    # the pre-mesh era predates BOTH later key axes (mesh and residency)
+    legacy_key = key.replace("|mesh1x1|", "|").replace("|res=auto|", "|")
+    assert "|mesh" not in legacy_key and "|res=" not in legacy_key \
+        and len(legacy_key.split("|")) == 5
     edited = 2 if sch.tile_h != 2 else 4
     (tmp_path / "convdk_schedules.json").write_text(json.dumps(
         {"version": 1,

@@ -184,6 +184,14 @@ def test_mbconv_pool_psum_intercepted():
     (B_local, H', W', C_out) projection partial — in BOTH pass-2 modes,
     while the separable sharding stays collective-free."""
     run_case("""
+    # the interception counts psums at TRACE time — drop the cached jitted
+    # entry points so this case traces fresh instead of reusing a trace an
+    # earlier test already built (the no-retrace behavior under test in
+    # test_staging.py::test_sharded_entry_point_traces_once)
+    from repro.kernels.convdk_sharded import (
+        _mbconv_sharded_entry, _sep_sharded_entry)
+    _mbconv_sharded_entry.cache_clear()
+    _sep_sharded_entry.cache_clear()
     mesh = parse_mesh("2x4")
     rng = np.random.default_rng(3)
     b, h, w_in, ci, e, co, k, s = 8, 9, 9, 8, 2, 16, 3, 1

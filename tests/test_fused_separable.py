@@ -189,7 +189,8 @@ def test_autotune_respects_vmem_budget():
     tpu = TPUConfig(vmem_bytes=256 * 1024)
     shape = SeparableShape(b=1, h=112, w=112, c_in=96, c_out=24, k=3, s=1)
     for cand in candidate_schedules(shape, tpu):
-        assert vmem_footprint_bytes(shape, cand.tile_h, tpu) <= tpu.vmem_bytes
+        assert vmem_footprint_bytes(shape, cand.tile_h, tpu,
+                                    cand.residency) <= tpu.vmem_bytes
 
 
 def test_autotune_selects_minimum_traffic():

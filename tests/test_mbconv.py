@@ -208,7 +208,8 @@ def test_mbconv_schedule_choice_never_exceeds_staged(shape):
     retain/recompute at its tile_h, (b) minimal over all candidates, and
     (c) strictly below the staged baseline."""
     sch = select_mbconv_schedule(shape)
-    mode, best = mbconv_best_fused_traffic(shape, sch.tile_h)
+    mode, best = mbconv_best_fused_traffic(shape, sch.tile_h,
+                                           residency=sch.residency)
     assert sch.traffic.total_bytes == best.total_bytes
     for cand in candidate_mbconv_schedules(shape):
         assert sch.traffic.total_bytes <= cand.traffic.total_bytes
@@ -246,7 +247,8 @@ def test_mbconv_autotune_respects_vmem_budget():
     tpu = TPUConfig(vmem_bytes=512 * 1024)
     shape = _shape(16, 6, 56, 3, 1, 24)
     for cand in candidate_mbconv_schedules(shape, tpu):
-        assert mbconv_vmem_footprint_bytes(shape, cand.tile_h, tpu) \
+        assert mbconv_vmem_footprint_bytes(
+            shape, cand.tile_h, tpu, cand.residency, cand.mode) \
             <= tpu.vmem_bytes
 
 
