@@ -32,7 +32,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.autotune import get_fused_schedule, get_mbconv_schedule
-from repro.core.perfmodel import RESIDENCY_MODES
+from repro.core.perfmodel import (
+    COLLECTIVE_MODES,
+    RESIDENCY_MODES,
+    MBConvShape,
+    can_psum_scatter,
+)
 from repro.core.workloads import (
     EFFICIENTNET_B0_MBCONV,
     EFFICIENTNET_V2_K7_SEPARABLE,
@@ -95,6 +100,17 @@ def rows():
     return out
 
 
+def _is_fallback(effective, requested) -> bool:
+    """True when a sharded request silently priced single-device (the
+    all-or-nothing kernel routing: a mesh axis did not divide)."""
+    return requested != (1, 1) and effective != requested
+
+
+def _mesh_label(effective, fallback: bool) -> str:
+    label = f"{effective[0]}x{effective[1]}"
+    return f"{label} (fallback)" if fallback else label
+
+
 def fused_traffic_report(mesh_shape=(1, 1), residency=None) -> bool:
     """Modeled HBM traffic, fused vs staged, every MobileNet-V2 separable
     block plus the k=7 EfficientNet-V2 stem rows (f32).  Returns True iff
@@ -113,6 +129,7 @@ def fused_traffic_report(mesh_shape=(1, 1), residency=None) -> bool:
     print("layer,c_in,hw,k,s,c_out,tile_h,residency,mesh,per_dev_bytes,"
           "dma_issues,fused_bytes,staged_bytes,saving_pct")
     ok = True
+    fallbacks = 0
     table = ([(f"mbv2_dw{i}", layer, c_out)
               for i, (layer, c_out) in enumerate(MOBILENET_V2_SEPARABLE)]
              + [(f"effv2_k7_dw{i}", layer, c_out)
@@ -123,54 +140,128 @@ def fused_traffic_report(mesh_shape=(1, 1), residency=None) -> bool:
                                  layer.k, layer.s, mesh_shape=mesh_shape,
                                  residency=residency)
         f, s = sch.total_bytes, sch.staged_total_bytes
-        ok &= f < s
-        # mesh column is the EFFECTIVE partitioning: a grid the mesh axes
-        # do not divide silently prices (and runs) single-device — the
-        # label keeps such rows from masquerading as sharded numbers
+        # a grid the mesh axes do not divide prices (and runs) on ONE
+        # device: label it explicitly and keep it OUT of the sharded
+        # gate — the gate must never pass on mislabeled numbers (such
+        # rows are gated by the single-device run instead)
+        fallback = _is_fallback(sch.mesh_shape, mesh_shape)
+        if fallback:
+            fallbacks += 1
+        else:
+            ok &= f < s
         print(f"{name},{layer.c},{layer.h},{layer.k},{layer.s},{c_out},"
               f"{sch.tile_h},{sch.residency},"
-              f"{sch.mesh_shape[0]}x{sch.mesh_shape[1]},"
+              f"{_mesh_label(sch.mesh_shape, fallback)},"
               f"{sch.traffic.total_bytes},"
               f"{sch.traffic.dma_issues},{f},{s},"
               f"{100 * sch.modeled_saving:.1f}")
-    print(f"# fused strictly below staged on all layers "
+    if fallbacks:
+        print(f"# {fallbacks} fallback row(s) excluded from the gate")
+        if fallbacks == len(table):
+            # a mesh that divides NOTHING must not turn the gate green
+            # vacuously (e.g. a typo'd --mesh in CI)
+            print("# every row fell back: nothing was gated -> FAIL")
+            ok = False
+    print(f"# fused strictly below staged on all sharded layers "
           f"[residency={residency or 'auto'}]: {ok}")
     return ok
 
 
-def mbconv_traffic_report(mesh_shape=(1, 1), residency=None) -> bool:
+def mbconv_traffic_report(mesh_shape=(1, 1), residency=None,
+                          collective=None):
     """Modeled HBM traffic of the two-pass fused MBConv pipeline vs the
     staged DW->HBM->SE->PW baseline for every EfficientNet-B0 MBConv block
-    (f32), with the autotuned (tile_h, retain/recompute, residency)
-    schedule — ``residency`` pins the staging mode when given.  Returns
-    True iff the two-pass traffic is strictly below staged for ALL layers.
+    (f32), with the autotuned (tile_h, retain/recompute, residency,
+    collective) schedule — ``residency``/``collective`` pin their axes
+    when given.  Returns (ok, totals): ok iff the two-pass traffic is
+    strictly below staged for ALL sharded layers (fallback rows labeled
+    and excluded), totals mapping layer name -> mesh-wide fused bytes
+    (None for fallback rows).
 
     With a non-trivial ``mesh_shape`` the comparison is the SHARDED one
     (batch 8 over "data", c_mid over "model"): per-device fused bytes plus
-    the SE-squeeze/projection psum bytes vs the staged pipeline
-    partitioned identically (which pays the SAME psums — its reductions
-    over c_mid are the same collectives)."""
+    the SE-squeeze/projection collective bytes — surfaced in their own
+    ``collective_bytes`` column — vs the staged pipeline partitioned
+    identically (which pays the SAME collectives: its reductions over
+    c_mid are the same, under the same layout)."""
     b = 8 if mesh_shape != (1, 1) else 1
     print(f"# mesh={mesh_shape[0]}x{mesh_shape[1]} batch={b} "
-          f"residency={residency or 'auto'}")
-    print("layer,c_in,c_mid,c_out,hw,k,s,tile_h,mode,residency,mesh,"
-          "per_dev_bytes,dma_issues,psum_bytes,fused_bytes,staged_bytes,"
-          "saving_pct")
+          f"residency={residency or 'auto'} "
+          f"collective={collective or 'auto'}")
+    print("layer,c_in,c_mid,c_out,hw,k,s,tile_h,mode,residency,collective,"
+          "mesh,per_dev_bytes,dma_issues,collective_bytes,fused_bytes,"
+          "staged_bytes,saving_pct")
     ok = True
+    fallbacks = 0
+    dropped = 0
+    totals = {}
     for i, (ci, co, e, k, s, hw) in enumerate(EFFICIENTNET_B0_MBCONV):
-        sch = get_mbconv_schedule(b, hw, hw, ci, ci * e, co, k, s,
-                                  mesh_shape=mesh_shape, residency=residency)
+        name = f"b0_mbconv{i}"
+        # a pinned psum_scatter may not be runnable on a layer (c_out
+        # does not divide the model axis): price the ring instead, label
+        # the row, keep it out of the pinned gate — same policy as the
+        # mesh-fallback rows.  The model's own pre-check keeps every
+        # other ValueError (solver/cache regressions) loud.
+        pin_dropped = (collective == "psum_scatter"
+                       and mesh_shape[1] > 1
+                       and not can_psum_scatter(
+                           MBConvShape(b=b, h=hw, w=hw, c_in=ci,
+                                       c_mid=ci * e, c_out=co, k=k, s=s),
+                           mesh_shape))
+        sch = get_mbconv_schedule(
+            b, hw, hw, ci, ci * e, co, k, s, mesh_shape=mesh_shape,
+            residency=residency,
+            collective="ring_allreduce" if pin_dropped else collective)
         f, st = sch.total_bytes, sch.staged_total_bytes
-        ok &= f < st
-        print(f"b0_mbconv{i},{ci},{ci * e},{co},{hw},{k},{s},"
-              f"{sch.tile_h},{sch.mode},{sch.residency},"
-              f"{sch.mesh_shape[0]}x{sch.mesh_shape[1]},"
+        fallback = _is_fallback(sch.mesh_shape, mesh_shape)
+        if fallback or pin_dropped:
+            fallbacks += fallback
+            dropped += pin_dropped and not fallback
+            totals[name] = None
+        else:
+            ok &= f < st
+            totals[name] = f
+        coll_label = sch.collective + (" (pin dropped)" if pin_dropped
+                                       else "")
+        print(f"{name},{ci},{ci * e},{co},{hw},{k},{s},"
+              f"{sch.tile_h},{sch.mode},{sch.residency},{coll_label},"
+              f"{_mesh_label(sch.mesh_shape, fallback)},"
               f"{sch.traffic.total_bytes},{sch.traffic.dma_issues},"
               f"{sch.collective_bytes},{f},{st},"
               f"{100 * sch.modeled_saving:.1f}")
-    print(f"# two-pass fused strictly below staged on all layers "
-          f"[residency={residency or 'auto'}]: {ok}")
-    return ok
+    if dropped:
+        print(f"# {dropped} row(s) could not run the pinned collective "
+              f"(c_out does not divide the model axis): priced as "
+              f"ring_allreduce, excluded from the gate")
+    if fallbacks:
+        print(f"# {fallbacks} fallback row(s) excluded from the gate")
+        if fallbacks == len(EFFICIENTNET_B0_MBCONV):
+            # a mesh that divides NOTHING must not turn the gate green
+            # vacuously (e.g. a typo'd --mesh in CI)
+            print("# every row fell back: nothing was gated -> FAIL")
+            ok = False
+    print(f"# two-pass fused strictly below staged on all sharded layers "
+          f"[residency={residency or 'auto'}, "
+          f"collective={collective or 'auto'}]: {ok}")
+    return ok, totals
+
+
+def mbconv_collective_sweep(mesh_shape, residency=None) -> bool:
+    """The model-sharded collective gate: price every B0 block under BOTH
+    collective modes — the autotuned pick (scatter where it is runnable
+    and wins) and the ring pin — and require the autotuned total <= the
+    ring-pinned total on every sharded layer.  Returns True iff both
+    fused-vs-staged gates AND the autotuned-vs-ring comparison hold."""
+    auto_ok, auto_totals = mbconv_traffic_report(mesh_shape, residency, None)
+    print()
+    ring_ok, ring_totals = mbconv_traffic_report(mesh_shape, residency,
+                                                 "ring_allreduce")
+    worse = [name for name, t in auto_totals.items()
+             if t is not None and ring_totals.get(name) is not None
+             and t > ring_totals[name]]
+    print(f"# autotuned collective <= ring-pinned on all sharded layers: "
+          f"{not worse}" + (f" (worse: {','.join(worse)})" if worse else ""))
+    return auto_ok and ring_ok and not worse
 
 
 def mbconv_walltime_row():
@@ -231,6 +322,19 @@ def _parse_residencies(text):
     return reqs
 
 
+def _parse_collective(text):
+    """'auto' -> None (the solver picks; under a model-sharded mesh the
+    report then also runs the ring-pinned sweep), else a pinned mode."""
+    token = text.lower().strip()
+    if token == "auto":
+        return None
+    if token in COLLECTIVE_MODES:
+        return token
+    raise SystemExit(
+        f"--collective wants auto or one of {COLLECTIVE_MODES}, "
+        f"got {token!r}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--fused", action="store_true",
@@ -250,18 +354,38 @@ def main():
                          "autotuner solves per layer), resident, strip_dma, "
                          "strip_dma_db, or a comma list for per-mode "
                          "reports")
+    ap.add_argument("--collective", default="auto", metavar="MODE",
+                    help="with --fused --mesh: MBConv projection-reduction "
+                         "layout — auto (default: the autotuner solves per "
+                         "layer AND the gate re-runs ring-pinned, requiring "
+                         "the autotuned total <= the ring total), "
+                         "ring_allreduce, or psum_scatter")
     args = ap.parse_args()
     if args.mesh is not None and not args.fused:
         raise SystemExit("--mesh requires --fused")
     if args.residency != "auto" and not args.fused:
         raise SystemExit("--residency requires --fused")
+    if args.collective != "auto" and not args.fused:
+        raise SystemExit("--collective requires --fused")
+    if args.collective != "auto" \
+            and (args.mesh is None or _parse_mesh(args.mesh)[1] <= 1):
+        # without a model-sharded mesh the collective axis is degenerate
+        # and a pin would be silently normalized to the ring — reject
+        # instead of mislabeling the report
+        raise SystemExit("--collective requires --mesh DxM with M > 1")
     if args.fused:
         mesh_shape = _parse_mesh(args.mesh) if args.mesh else (1, 1)
+        collective = _parse_collective(args.collective)
         ok = True
         for res in _parse_residencies(args.residency):
             ok &= fused_traffic_report(mesh_shape, res)
             print()
-            ok &= mbconv_traffic_report(mesh_shape, res)
+            if collective is None and mesh_shape[1] > 1:
+                ok &= mbconv_collective_sweep(mesh_shape, res)
+            else:
+                r_ok, _totals = mbconv_traffic_report(mesh_shape, res,
+                                                      collective)
+                ok &= r_ok
             print()
         for name, us, derived in mbconv_walltime_row():
             print(f"{name},{us:.1f},{derived}")

@@ -34,6 +34,11 @@ class ConvKernelConfig:
     the staged DW->HBM->SE->PW baseline.
     ``mbconv_mode`` pins the pass-2 DW source ("retain" | "recompute");
     None lets the autotuner pick per layer shape from the traffic model.
+    ``collective`` pins the MBConv projection-reduction layout under a
+    model-sharded mesh ("ring_allreduce" | "psum_scatter" — scatter
+    leaves the block output sharded on c_out and halves the wire words);
+    None lets the autotuner solve it per layer shape (ring wherever
+    scatter is not runnable).
     ``residency`` pins the input-staging mode of the fused kernels
     ("resident" | "strip_dma" | "strip_dma_db", see ``kernels.staging``);
     None lets the autotuner solve it per layer shape (or falls back to the
@@ -55,6 +60,7 @@ class ConvKernelConfig:
     fused_mbconv: bool = True
     mbconv_mode: Optional[str] = None
     residency: Optional[str] = None
+    collective: Optional[str] = None
     autotune: bool = True
     shard_fused: bool = True
     tile_h: int = 8

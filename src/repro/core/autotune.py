@@ -12,10 +12,18 @@ families are solved:
   staging-engine axis: VMEM feasibility counts the slot buffers — 2x strip
   scratch for double-buffering — and the traffic model prices each mode);
 * MBConv (``MBConvSchedule``): expand + DW + SE + PW in two passes — pick
-  ``tile_h``, the residency, AND the pass-2 ``mode`` ("retain" writes the
+  ``tile_h``, the residency, the pass-2 ``mode`` ("retain" writes the
   DW tensor to HBM once and re-reads it; "recompute" re-runs expand+DW
   from the input strips; the traffic model prices the crossover per layer
-  shape).
+  shape), AND — under a model-sharded mesh — the ``collective`` axis
+  ("ring_allreduce" | "psum_scatter": how the pass-2 projection partial
+  is reduced across the model groups; scatter halves the wire words and
+  leaves the output sharded on c_out).
+
+Every schedule carries the ``perfmodel.ShardedTraffic`` pair it was
+solved from and DELEGATES all byte totals to it (``_ScheduleTraffic``):
+the solver optimizes exactly the bytes the model prices — there is no
+second accounting to drift.
 
 Schedule solving is trace-time work and must never re-run inside a jitted
 step, so selections are cached.  The cache has two layers:
@@ -40,12 +48,16 @@ from pathlib import Path
 from typing import Dict, Optional, Sequence, Tuple
 
 from .perfmodel import (
+    COLLECTIVE_MODES,
+    DEFAULT_COLLECTIVE,
     DEFAULT_RESIDENCY,
     MBCONV_MODES,
     RESIDENCY_MODES,
     HBMTraffic,
     MBConvShape,
     SeparableShape,
+    ShardedTraffic,
+    can_psum_scatter,
     mbconv_shard,
     mbconv_staging_bytes,
     pick_channel_block,
@@ -56,6 +68,7 @@ from .perfmodel import (
     sharded_mbconv_traffic,
     sharded_separable_staged_traffic,
     sharded_separable_traffic,
+    validate_collective,
     validate_residency,
 )
 
@@ -77,79 +90,108 @@ class TPUConfig:
     tile_h_candidates: Tuple[int, ...] = (1, 2, 4, 8, 16, 32)
 
 
-class _ScheduleTotals:
-    """Mesh-wide byte accounting shared by both schedule families.
+class _ScheduleTraffic:
+    """Accounting VIEW shared by both schedule families.
 
-    ``traffic`` / ``staged_traffic`` are PER-DEVICE: for the default
-    ``mesh_shape == (1, 1)`` that is the whole layer (the PR-1 semantics,
-    unchanged); under a (data, model) mesh they price one shard of the
-    sharded launch.  ``collective_words`` is identical for the fused and
-    staged pipelines (the staged path's reductions over the sharded
-    channel axis are the same psums), so the fused-vs-staged margin stays
-    an HBM-side comparison."""
+    A schedule carries the two ``perfmodel.ShardedTraffic`` objects it was
+    solved from — ``sharded`` (the fused pipeline) and ``staged`` (the
+    identically partitioned staged baseline) — and every byte total here
+    DELEGATES to them.  ``perfmodel`` is the single pricing authority for
+    device bytes, collective bytes and DMA issues; the solver never
+    re-derives a mesh-wide total, so the bytes the autotuner optimizes
+    are — identically, not approximately — the bytes the traffic model
+    prices (the anti-divergence property in tests/test_perfmodel_bands.py
+    pins this down).  For the default ``mesh_shape == (1, 1)`` the device
+    traffic is the whole layer (the PR-1 semantics, unchanged).  The
+    staged baseline pays the SAME collective words (its reductions over
+    the sharded channel axis are the same collectives, priced under the
+    same ``collective`` mode), so the fused-vs-staged margin stays an
+    HBM-side comparison."""
+
+    @property
+    def traffic(self) -> HBMTraffic:
+        """PER-DEVICE fused HBM traffic (one shard of the launch)."""
+        return self.sharded.device
+
+    @property
+    def staged_traffic(self) -> HBMTraffic:
+        """PER-DEVICE staged-baseline HBM traffic."""
+        return self.staged.device
+
+    @property
+    def mesh_shape(self) -> Tuple[int, int]:
+        return self.sharded.mesh_shape
 
     @property
     def n_devices(self) -> int:
-        return self.mesh_shape[0] * self.mesh_shape[1]
+        return self.sharded.n_devices
+
+    @property
+    def collective(self) -> str:
+        """The reduction layout the collectives were priced under."""
+        return self.sharded.collective
+
+    @property
+    def collective_words(self) -> int:
+        return self.sharded.collective_words
 
     @property
     def collective_bytes(self) -> int:
-        return self.collective_words * self.traffic.dtype_bytes
+        return self.sharded.collective_bytes
 
     @property
     def total_bytes(self) -> int:
-        """All bytes moved anywhere (every device's HBM + collectives)."""
-        return self.traffic.total_bytes * self.n_devices \
-            + self.collective_bytes
+        """All bytes moved anywhere (every device's HBM + collectives) —
+        ``perfmodel.ShardedTraffic.total_bytes``, verbatim."""
+        return self.sharded.total_bytes
 
     @property
     def staged_total_bytes(self) -> int:
-        return self.staged_traffic.total_bytes * self.n_devices \
-            + self.collective_bytes
+        return self.staged.total_bytes
 
     @property
     def modeled_saving(self) -> float:
         """Fraction of staged bytes the fused schedule avoids."""
-        base = self.staged_total_bytes
-        return 1.0 - self.total_bytes / base if base else 0.0
+        base = self.staged.total_bytes
+        return 1.0 - self.sharded.total_bytes / base if base else 0.0
 
 
 @dataclass(frozen=True)
-class FusedSchedule(_ScheduleTotals):
+class FusedSchedule(_ScheduleTraffic):
     """One selected schedule for ``convdk_fused_separable``.
 
     The separable partitioning (c_out on "model") is collective-free, so
-    ``collective_words`` is always 0 here — it exists for symmetry with
-    ``MBConvSchedule`` (accounting doc on ``_ScheduleTotals``)."""
+    its ``ShardedTraffic`` always has 0 collective words — the accounting
+    view exists for symmetry with ``MBConvSchedule`` (doc on
+    ``_ScheduleTraffic``)."""
 
     tile_h: int
     ci_block: int
     co_block: int
-    traffic: HBMTraffic          # modeled fused HBM traffic at this tile_h
-    staged_traffic: HBMTraffic   # modeled staged-pipeline traffic (baseline)
-    mesh_shape: Tuple[int, int] = (1, 1)
-    collective_words: int = 0
-    residency: str = DEFAULT_RESIDENCY   # input-staging mode (the new axis)
+    sharded: ShardedTraffic      # fused pricing (the solver's objective)
+    staged: ShardedTraffic       # identically partitioned staged baseline
+    residency: str = DEFAULT_RESIDENCY   # input-staging mode
 
 
 @dataclass(frozen=True)
-class MBConvSchedule(_ScheduleTotals):
+class MBConvSchedule(_ScheduleTraffic):
     """One selected two-pass schedule for ``convdk_mbconv_fused``.
 
-    Under a mesh the c_mid partitioning pays two psums (SE squeeze +
-    projection partials), priced in ``collective_words`` (accounting doc
-    on ``_ScheduleTotals``)."""
+    Under a mesh the c_mid partitioning pays two cross-device reductions
+    (SE squeeze + projection partials) priced inside ``sharded`` /
+    ``staged`` under the schedule's **collective** axis — ring all-reduce
+    or the psum_scatter pass-2 variant whose output leaves the kernel
+    sharded on c_out (doc on ``_ScheduleTraffic``; ``self.collective``
+    reads the solved mode)."""
 
     tile_h: int
     mode: str                    # "retain" | "recompute"
     ci_block: int
     cm_block: int
     co_block: int
-    traffic: HBMTraffic          # modeled two-pass traffic at (tile_h, mode)
-    staged_traffic: HBMTraffic   # modeled staged MBConv pipeline (baseline)
-    mesh_shape: Tuple[int, int] = (1, 1)
-    collective_words: int = 0
-    residency: str = DEFAULT_RESIDENCY   # input-staging mode (the new axis)
+    sharded: ShardedTraffic      # fused pricing (the solver's objective)
+    staged: ShardedTraffic       # identically partitioned staged baseline
+    residency: str = DEFAULT_RESIDENCY   # input-staging mode
 
 
 def _round_up(x: int, m: int) -> int:
@@ -195,7 +237,7 @@ class ScheduleCache:
 
     @staticmethod
     def _migrate_key(key: str) -> str:
-        """Upgrade legacy cache keys in place, chaining the two schema
+        """Upgrade legacy cache keys in place, chaining the three schema
         migrations so measured sweeps keep outranking model picks instead
         of being silently orphaned:
 
@@ -205,7 +247,12 @@ class ScheduleCache:
           residency was a pinnable axis — they ARE the ``res=auto`` picks
           (the solver now chooses the residency; a legacy measured tile_h
           keeps its priority and the residency is re-solved at that
-          tile_h, see ``get_fused_schedule``)."""
+          tile_h, see ``get_fused_schedule``);
+        * pre-collective MBConv entries (no ``coll=`` segment) were
+          solved before the projection-reduction layout was an axis —
+          they ARE the ``coll=auto`` picks (the collective is re-solved
+          at the entry's (tile_h, mode, residency); separable keys never
+          grow the segment — that partitioning is collective-free)."""
         parts = key.split("|")
         if len(parts) == 5 and parts[0] in ("sep", "mbconv") \
                 and not parts[3].startswith("mesh"):
@@ -214,6 +261,11 @@ class ScheduleCache:
                 and parts[3].startswith("mesh") \
                 and not parts[4].startswith("res="):
             parts.insert(4, "res=auto")
+        if len(parts) >= 7 and parts[0] == "mbconv" \
+                and parts[3].startswith("mesh") \
+                and parts[4].startswith("res=") \
+                and not parts[5].startswith("coll="):
+            parts.insert(5, "coll=auto")
         return "|".join(parts)
 
     def _load_disk(self) -> Dict[str, dict]:
@@ -324,10 +376,19 @@ def _sep_key(shape: SeparableShape, tpu: TPUConfig,
             f"|{_backend()}")
 
 
+def _coll_segment(collective: Optional[str]) -> str:
+    """Key segment for the REQUESTED collective mode (``coll=auto`` when
+    the solver chooses — the segment legacy MBConv keys migrate into)."""
+    if collective is not None:
+        validate_collective(collective)
+    return f"coll={collective or 'auto'}"
+
+
 def _mbconv_key(shape: MBConvShape, tpu: TPUConfig,
                 mesh_shape: MeshShape = (1, 1),
                 residency: Optional[str] = None,
-                mode: Optional[str] = None) -> str:
+                mode: Optional[str] = None,
+                collective: Optional[str] = None) -> str:
     dp, mp = shard_factors(shape.b, shape.c_mid, mesh_shape)
     # a pinned pass-2 mode gets its OWN entries (appended segment, so the
     # unpinned key format — and its migration chain — is untouched): a
@@ -337,7 +398,8 @@ def _mbconv_key(shape: MBConvShape, tpu: TPUConfig,
     return (f"mbconv|b{shape.b}-h{shape.h}-w{shape.w}-ci{shape.c_in}"
             f"-cm{shape.c_mid}-co{shape.c_out}-k{shape.k}-s{shape.s}"
             f"|dtb{shape.dtype_bytes}|mesh{dp}x{mp}"
-            f"|{_res_segment(residency)}|{_tpu_key(tpu)}|{_backend()}{pin}")
+            f"|{_res_segment(residency)}|{_coll_segment(collective)}"
+            f"|{_tpu_key(tpu)}|{_backend()}{pin}")
 
 
 def _entry_tile_h(hit, out_h: int):
@@ -357,6 +419,48 @@ def _entry_residency(hit) -> Optional[str]:
     then re-solves the residency at the entry's tile_h."""
     res = hit.get("residency") if isinstance(hit, dict) else None
     return res if res in RESIDENCY_MODES else None
+
+
+def _entry_collective(hit) -> Optional[str]:
+    """Validated collective mode from a cache entry; None for legacy
+    entries (recorded before the collective axis) or malformed values —
+    the caller then re-solves the collective at the entry's pick."""
+    coll = hit.get("collective") if isinstance(hit, dict) else None
+    return coll if coll in COLLECTIVE_MODES else None
+
+
+# Solver preference among byte-identical collective modes: the ring
+# all-reduce is the conservative default (output replicated, any consumer
+# layout); ties essentially never occur — psum_scatter strictly undercuts
+# the ring whenever the projection payload is nonzero.
+_COLLECTIVE_RANK = {"ring_allreduce": 0, "psum_scatter": 1}
+
+
+def _collective_set(shape: MBConvShape, eff: MeshShape,
+                    collective: Optional[str]) -> Tuple[str, ...]:
+    """Collective modes the solver may price at this partitioning.
+
+    Off-mesh (effective model factor 1) the axis is degenerate: nothing
+    crosses devices, so everything normalizes to the ring default — a
+    scatter pin is meaningless there and is ignored rather than cached as
+    a distinct non-schedule.  On-mesh, ``None`` enumerates the ring plus
+    (where ``c_out`` divides the model groups) the psum_scatter pass-2
+    variant; a pin restricts to that mode, raising when the pinned
+    scatter is not runnable — the solver must never describe a layout the
+    kernels will reject."""
+    _dp, mp = eff
+    if mp <= 1:
+        return (DEFAULT_COLLECTIVE,)
+    if collective is None:
+        if can_psum_scatter(shape, eff):
+            return COLLECTIVE_MODES
+        return (DEFAULT_COLLECTIVE,)
+    validate_collective(collective)
+    if collective == "psum_scatter" and not can_psum_scatter(shape, eff):
+        raise ValueError(
+            f"psum_scatter pinned but c_out={shape.c_out} does not divide "
+            f"over model={mp}")
+    return (collective,)
 
 
 # ---------------------------------------------------------------------------
@@ -414,12 +518,12 @@ def candidate_schedules(
         if (th, res) in seen:
             continue
         seen.add((th, res))
-        sharded = sharded_separable_traffic(shape, th, eff, tpu.c_block, res)
-        staged = sharded_separable_staged_traffic(shape, th, eff, tpu.c_block)
         out.append(FusedSchedule(
             tile_h=th, ci_block=ci, co_block=co,
-            traffic=sharded.device, staged_traffic=staged.device,
-            mesh_shape=eff, collective_words=sharded.collective_words,
+            sharded=sharded_separable_traffic(shape, th, eff, tpu.c_block,
+                                              res),
+            staged=sharded_separable_staged_traffic(shape, th, eff,
+                                                    tpu.c_block),
             residency=res,
         ))
     return tuple(out)
@@ -443,15 +547,14 @@ def _schedule_at(shape: SeparableShape, tile_h: int, tpu: TPUConfig,
                  mesh_shape: MeshShape = (1, 1),
                  residency: str = DEFAULT_RESIDENCY) -> FusedSchedule:
     local, eff = separable_shard(shape, mesh_shape)
-    sharded = sharded_separable_traffic(shape, tile_h, eff, tpu.c_block,
-                                        residency)
-    staged = sharded_separable_staged_traffic(shape, tile_h, eff, tpu.c_block)
     return FusedSchedule(
         tile_h=tile_h,
         ci_block=pick_channel_block(local.c_in, tpu.c_block),
         co_block=_blocks(local.c_out, tpu.c_block),
-        traffic=sharded.device, staged_traffic=staged.device,
-        mesh_shape=eff, collective_words=sharded.collective_words,
+        sharded=sharded_separable_traffic(shape, tile_h, eff, tpu.c_block,
+                                          residency),
+        staged=sharded_separable_staged_traffic(shape, tile_h, eff,
+                                                tpu.c_block),
         residency=residency,
     )
 
@@ -536,9 +639,10 @@ def mbconv_vmem_footprint_bytes(shape: MBConvShape, tile_h: int,
 def candidate_mbconv_schedules(
     shape: MBConvShape, tpu: TPUConfig = TPUConfig(),
     mesh_shape: MeshShape = (1, 1), residency: Optional[str] = None,
-    mode: Optional[str] = None,
+    mode: Optional[str] = None, collective: Optional[str] = None,
 ) -> Tuple[MBConvSchedule, ...]:
-    """All VMEM-feasible (tile_h, mode, residency) schedules, model-priced.
+    """All VMEM-feasible (tile_h, mode, residency, collective) schedules,
+    model-priced.
 
     A pinned ``mode`` restricts the candidate set, so tile_h/residency are
     solved (and VMEM-checked) under THAT mode's footprint — a retain pin
@@ -547,11 +651,15 @@ def candidate_mbconv_schedules(
     the per-device shard shape (batch/data, c_mid/model); the
     retain/recompute crossover therefore re-solves per partitioning — a
     shard's DW slice is mp-fold cheaper to retain than the whole expanded
-    tensor."""
+    tensor.  The **collective** axis (projection reduction layout) only
+    exists on-mesh: ring all-reduce always, psum_scatter where c_out
+    divides the model groups (``_collective_set``); it does not enter the
+    VMEM check — both layouts run the identical kernels."""
     if mode is not None and mode not in MBCONV_MODES:
         raise ValueError(mode)
     modes = MBCONV_MODES if mode is None else (mode,)
     local, eff = mbconv_shard(shape, mesh_shape)
+    colls = _collective_set(shape, eff, collective)
     ci = pick_channel_block(local.c_in, tpu.c_block)
     cm = pick_channel_block(local.c_mid, tpu.c_block)
     co = _blocks(local.c_out, tpu.c_block)
@@ -567,54 +675,58 @@ def candidate_mbconv_schedules(
         combos = [(1, md, residency or "strip_dma") for md in modes]
     staged_cache: dict = {}
     for th, md, res in combos:
-        if (th, md, res) in seen:
-            continue
-        seen.add((th, md, res))
-        if th not in staged_cache:
-            staged_cache[th] = sharded_mbconv_staged_traffic(
-                shape, th, eff, tpu.c_block)
-        staged = staged_cache[th]
-        sharded = sharded_mbconv_traffic(shape, th, md, eff, tpu.c_block,
-                                         res)
-        out.append(MBConvSchedule(
-            tile_h=th, mode=md, ci_block=ci, cm_block=cm, co_block=co,
-            traffic=sharded.device, staged_traffic=staged.device,
-            mesh_shape=eff, collective_words=sharded.collective_words,
-            residency=res,
-        ))
+        for coll in colls:
+            if (th, md, res, coll) in seen:
+                continue
+            seen.add((th, md, res, coll))
+            if (th, coll) not in staged_cache:
+                staged_cache[th, coll] = sharded_mbconv_staged_traffic(
+                    shape, th, eff, tpu.c_block, coll)
+            out.append(MBConvSchedule(
+                tile_h=th, mode=md, ci_block=ci, cm_block=cm, co_block=co,
+                sharded=sharded_mbconv_traffic(shape, th, md, eff,
+                                               tpu.c_block, res, coll),
+                staged=staged_cache[th, coll],
+                residency=res,
+            ))
     return tuple(out)
 
 
 def select_mbconv_schedule(
     shape: MBConvShape, tpu: TPUConfig = TPUConfig(),
     mesh_shape: MeshShape = (1, 1), residency: Optional[str] = None,
-    mode: Optional[str] = None,
+    mode: Optional[str] = None, collective: Optional[str] = None,
 ) -> MBConvSchedule:
-    """Pick (tile_h, mode, residency) minimizing modeled total two-pass
-    traffic (ties -> larger tile_h, then retain: one DW round-trip beats
-    recompute MACs; then the residency rank).  ``mode``/``residency`` pins
-    restrict the solve."""
+    """Pick (tile_h, mode, residency, collective) minimizing modeled total
+    two-pass traffic (ties -> larger tile_h, then retain: one DW
+    round-trip beats recompute MACs; then the residency rank, then the
+    ring default).  ``mode``/``residency``/``collective`` pins restrict
+    the solve."""
     cands = candidate_mbconv_schedules(shape, tpu, mesh_shape, residency,
-                                       mode)
+                                       mode, collective)
     return min(cands, key=lambda c: (c.total_bytes, -c.tile_h,
                                      c.mode != "retain",
-                                     _RESIDENCY_RANK[c.residency]))
+                                     _RESIDENCY_RANK[c.residency],
+                                     _COLLECTIVE_RANK[c.collective]))
 
 
 def _mbconv_schedule_at(shape: MBConvShape, tile_h: int, mode: str,
                         tpu: TPUConfig, mesh_shape: MeshShape = (1, 1),
-                        residency: str = DEFAULT_RESIDENCY) -> MBConvSchedule:
+                        residency: str = DEFAULT_RESIDENCY,
+                        collective: str = DEFAULT_COLLECTIVE
+                        ) -> MBConvSchedule:
     local, eff = mbconv_shard(shape, mesh_shape)
-    sharded = sharded_mbconv_traffic(shape, tile_h, mode, eff, tpu.c_block,
-                                     residency)
-    staged = sharded_mbconv_staged_traffic(shape, tile_h, eff, tpu.c_block)
+    if eff[1] <= 1:
+        collective = DEFAULT_COLLECTIVE   # degenerate axis: nothing crosses
     return MBConvSchedule(
         tile_h=tile_h, mode=mode,
         ci_block=pick_channel_block(local.c_in, tpu.c_block),
         cm_block=pick_channel_block(local.c_mid, tpu.c_block),
         co_block=_blocks(local.c_out, tpu.c_block),
-        traffic=sharded.device, staged_traffic=staged.device,
-        mesh_shape=eff, collective_words=sharded.collective_words,
+        sharded=sharded_mbconv_traffic(shape, tile_h, mode, eff,
+                                       tpu.c_block, residency, collective),
+        staged=sharded_mbconv_staged_traffic(shape, tile_h, eff,
+                                             tpu.c_block, collective),
         residency=residency,
     )
 
@@ -622,7 +734,8 @@ def _mbconv_schedule_at(shape: MBConvShape, tile_h: int, mode: str,
 def _solve_mbconv_residency_at(shape: MBConvShape, tile_h: int, mode: str,
                                tpu: TPUConfig, mesh_shape: MeshShape) -> str:
     """Best residency at a FIXED (tile_h, mode) — see
-    ``_solve_residency_at``."""
+    ``_solve_residency_at``.  Collective words are residency-invariant,
+    so per-device bytes decide."""
     local, eff = mbconv_shard(shape, mesh_shape)
     modes = [res for res in RESIDENCY_MODES
              if mbconv_vmem_footprint_bytes(local, tile_h, tpu, res, mode)
@@ -633,24 +746,40 @@ def _solve_mbconv_residency_at(shape: MBConvShape, tile_h: int, mode: str,
         _RESIDENCY_RANK[res]))
 
 
+def _solve_mbconv_collective_at(shape: MBConvShape, tile_h: int, mode: str,
+                                tpu: TPUConfig, mesh_shape: MeshShape,
+                                residency: str) -> str:
+    """Best collective at a FIXED (tile_h, mode, residency) — legacy
+    cache entries predate the collective axis: min total bytes among the
+    runnable layouts, ties to the ring default."""
+    _local, eff = mbconv_shard(shape, mesh_shape)
+    return min(_collective_set(shape, eff, None), key=lambda coll: (
+        sharded_mbconv_traffic(shape, tile_h, mode, eff, tpu.c_block,
+                               residency, coll).total_bytes,
+        _COLLECTIVE_RANK[coll]))
+
+
 def get_mbconv_schedule(
     b: int, h: int, w: int, c_in: int, c_mid: int, c_out: int, k: int,
     s: int, se_ratio: float = 0.25, dtype_bytes: int = 4,
     tpu: TPUConfig = TPUConfig(), mesh_shape: MeshShape = (1, 1),
     residency: Optional[str] = None, mode: Optional[str] = None,
+    collective: Optional[str] = None,
 ) -> MBConvSchedule:
     """Cached per-layer-shape two-pass schedule lookup (trace-time safe).
 
-    ``mesh_shape`` and the requested ``residency``/``mode`` pins enter the
-    cache key (see ``get_fused_schedule``): a pinned pass-2 mode solves
-    tile_h and residency under that mode's VMEM footprint instead of
-    echoing a schedule solved for the other mode.  Legacy entries keep
-    their (tile_h, mode) priority with the residency re-solved at that
-    point."""
+    ``mesh_shape`` and the requested ``residency``/``mode``/``collective``
+    pins enter the cache key (see ``get_fused_schedule``): a pinned
+    pass-2 mode solves tile_h and residency under that mode's VMEM
+    footprint instead of echoing a schedule solved for the other mode,
+    and a pinned collective prices (and caches) under that reduction
+    layout only.  Legacy entries keep their (tile_h, mode) priority with
+    the residency — and, for pre-collective entries, the collective —
+    re-solved at that point."""
     shape = MBConvShape(b=b, h=h, w=w, c_in=c_in, c_mid=c_mid, c_out=c_out,
                         k=k, s=s, se_ratio=se_ratio, dtype_bytes=dtype_bytes)
     cache = get_schedule_cache()
-    key = _mbconv_key(shape, tpu, mesh_shape, residency, mode)
+    key = _mbconv_key(shape, tpu, mesh_shape, residency, mode, collective)
     hit = cache.get(key)
     tile_h = _entry_tile_h(hit, shape.out_h) if hit is not None else None
     hit_mode = hit.get("mode") if isinstance(hit, dict) else None
@@ -659,11 +788,16 @@ def get_mbconv_schedule(
         res = residency or _entry_residency(hit) \
             or _solve_mbconv_residency_at(shape, tile_h, hit_mode, tpu,
                                           mesh_shape)
+        coll = collective or _entry_collective(hit) \
+            or _solve_mbconv_collective_at(shape, tile_h, hit_mode, tpu,
+                                           mesh_shape, res)
         return _mbconv_schedule_at(shape, tile_h, hit_mode, tpu,
-                                   mesh_shape, res)
-    sched = select_mbconv_schedule(shape, tpu, mesh_shape, residency, mode)
+                                   mesh_shape, res, coll)
+    sched = select_mbconv_schedule(shape, tpu, mesh_shape, residency, mode,
+                                   collective)
     cache.put(key, {"tile_h": sched.tile_h, "mode": sched.mode,
-                    "residency": sched.residency, "source": "model",
+                    "residency": sched.residency,
+                    "collective": sched.collective, "source": "model",
                     "recorded_at": time.time()})
     return sched
 

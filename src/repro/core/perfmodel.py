@@ -824,20 +824,43 @@ def mbconv_staged_traffic(
 # Sharded traffic: per-device HBM + collective bytes
 #
 # ``kernels.convdk_sharded`` partitions the fused pipelines over the
-# ("data", "model") mesh: batch on "data" for both families, c_out on
-# "model" for separable (collective-free: the c_in reduction is local) and
-# c_mid on "model" for MBConv (the SE squeeze FC and the projection PW
-# reduce over the full expanded width, so each becomes a cross-device
-# psum).  The paper's reduction claim must be re-proved under this
-# partitioning — Eyeriss-style reuse analysis does not transfer for free —
-# so the model prices BOTH terms:
+# ("data", "model") mesh (an optional "pod" axis folds into the data
+# factor as a pure data-parallel outer multiplier): batch on "data" for
+# both families, c_out on "model" for separable (collective-free: the
+# c_in reduction is local) and c_mid on "model" for MBConv (the SE
+# squeeze FC and the projection PW reduce over the full expanded width,
+# so each becomes a cross-device reduction).  The paper's reduction claim
+# must be re-proved under this partitioning — Eyeriss-style reuse
+# analysis does not transfer for free — so the model prices BOTH terms:
 #
 # * per-device HBM traffic = the single-device model evaluated at the
 #   shard shape (batch/dp, channel grid/mp), and
-# * collective words = ring all-reduce accounting, 2*(mp-1) words per
-#   psum'd word per model group (reduce-scatter + all-gather), times the
-#   dp groups.  Non-divisible axes drop to 1 (the ``spec_for`` policy).
+# * collective words, per the schedule's **collective** axis:
+#   - ``ring_allreduce``: 2*(mp-1) words per reduced word per model group
+#     (reduce-scatter + all-gather; the result lands replicated), and
+#   - ``psum_scatter`` (MBConv projection only): (mp-1) words per reduced
+#     word — the reduce-scatter half alone, the pass-2 output leaving the
+#     kernel SHARDED on c_out for a consumer that wants it that way.  The
+#     SE squeeze partial always rings: the excite FC needs it replicated.
+#   Words are summed over the dp model groups.  Non-divisible axes drop
+#   to 1 (the ``spec_for`` policy).
+#
+# ``ShardedTraffic`` is the SINGLE source of truth for mesh-wide byte
+# totals: ``core.autotune`` schedules carry these objects and delegate
+# every total to them, so the solver and the model cannot diverge.
 # ---------------------------------------------------------------------------
+
+
+COLLECTIVE_MODES: Tuple[str, ...] = ("ring_allreduce", "psum_scatter")
+DEFAULT_COLLECTIVE = "ring_allreduce"
+
+
+def validate_collective(collective: str) -> str:
+    if collective not in COLLECTIVE_MODES:
+        raise ValueError(
+            f"collective must be one of {COLLECTIVE_MODES}, "
+            f"got {collective!r}")
+    return collective
 
 
 @dataclass(frozen=True)
@@ -848,6 +871,7 @@ class ShardedTraffic:
     collective_words: int        # interconnect words, summed over the mesh
     n_devices: int
     mesh_shape: Tuple[int, int] = (1, 1)
+    collective: str = DEFAULT_COLLECTIVE   # reduction layout priced above
 
     @property
     def dtype_bytes(self) -> int:
@@ -930,49 +954,80 @@ def sharded_separable_staged_traffic(
         collective_words=0, n_devices=dp * mp, mesh_shape=(dp, mp))
 
 
-def _mbconv_psum_words(shape: MBConvShape, dp: int, mp: int) -> int:
-    """Ring-all-reduce words for the two c_mid-reduction psums: the
-    (B_local, C_se) SE squeeze partial and the (B_local, H', W', C_out)
-    projection partial, 2*(mp-1) words per psum'd word per model group."""
+def can_psum_scatter(shape: MBConvShape,
+                     mesh_shape: Tuple[int, int]) -> bool:
+    """True iff the psum_scatter pass-2 variant is runnable at this
+    partitioning: the layer actually shards on "model" AND c_out divides
+    into the model groups (the scattered output is sharded on c_out)."""
+    _dp, mp = shard_factors(shape.b, shape.c_mid, mesh_shape)
+    return mp > 1 and shape.c_out % mp == 0
+
+
+def _mbconv_collective_words(shape: MBConvShape, dp: int, mp: int,
+                             collective: str = DEFAULT_COLLECTIVE) -> int:
+    """Interconnect words for the two c_mid reductions, per ``collective``:
+
+    * the (B_local, C_se) SE squeeze partial always ring-all-reduces
+      (2*(mp-1) words per reduced word per model group — the excite FC
+      consumes it replicated);
+    * the (B_local, H', W', C_out) projection partial ring-all-reduces
+      under ``ring_allreduce`` or pays only the reduce-scatter half,
+      (mp-1) words per reduced word, under ``psum_scatter`` — the pass-2
+      output then leaves the kernel sharded on c_out."""
+    validate_collective(collective)
     if mp <= 1:
         return 0
-    payload = (shape.b // dp) * (shape.c_se
-                                 + shape.out_h * shape.out_w * shape.c_out)
-    return dp * 2 * (mp - 1) * payload
+    b_local = shape.b // dp
+    squeeze = b_local * shape.c_se
+    proj = b_local * shape.out_h * shape.out_w * shape.c_out
+    if collective == "psum_scatter":
+        if shape.c_out % mp != 0:
+            raise ValueError(
+                f"psum_scatter needs c_out % model == 0, got c_out="
+                f"{shape.c_out} over model={mp}")
+        words = 2 * (mp - 1) * squeeze + (mp - 1) * proj
+    else:
+        words = 2 * (mp - 1) * (squeeze + proj)
+    return dp * words
 
 
 def sharded_mbconv_traffic(
     shape: MBConvShape, tile_h: int, mode: str = "retain",
     mesh_shape: Tuple[int, int] = (1, 1), c_block: int = 128,
     residency: str = DEFAULT_RESIDENCY,
+    collective: str = DEFAULT_COLLECTIVE,
 ) -> ShardedTraffic:
-    """Per-device traffic + psum bytes of the sharded two-pass MBConv.
+    """Per-device traffic + collective bytes of the sharded two-pass
+    MBConv.
 
-    Batch splits over "data", c_mid over "model".  Two psums cross the
-    model groups: the (B_local, C_se) SE squeeze partial (the pass-1 pool
-    leaving the chip once, before the pass-2 gate) and the
-    (B_local, H', W', C_out) projection partial.  ``residency`` prices
-    each device's input staging."""
+    Batch splits over "data", c_mid over "model".  Two reductions cross
+    the model groups: the (B_local, C_se) SE squeeze partial (the pass-1
+    pool leaving the chip once, before the pass-2 gate) and the
+    (B_local, H', W', C_out) projection partial — the latter priced per
+    ``collective`` (``ring_allreduce`` replicates the output,
+    ``psum_scatter`` halves the wire words and leaves it sharded on
+    c_out).  ``residency`` prices each device's input staging."""
     local, (dp, mp) = mbconv_shard(shape, mesh_shape)
     return ShardedTraffic(
         device=mbconv_fused_traffic(local, tile_h, mode, c_block, residency),
-        collective_words=_mbconv_psum_words(shape, dp, mp),
-        n_devices=dp * mp, mesh_shape=(dp, mp))
+        collective_words=_mbconv_collective_words(shape, dp, mp, collective),
+        n_devices=dp * mp, mesh_shape=(dp, mp), collective=collective)
 
 
 def sharded_mbconv_staged_traffic(
     shape: MBConvShape, tile_h: int, mesh_shape: Tuple[int, int] = (1, 1),
-    c_block: int = 128,
+    c_block: int = 128, collective: str = DEFAULT_COLLECTIVE,
 ) -> ShardedTraffic:
     """The staged MBConv pipeline under the SAME partitioning.
 
-    With c_mid sharded, the staged path pays the IDENTICAL two psums (its
-    SE squeeze and projection also reduce over the full expanded width) on
-    top of its per-device DW round-trips — so the fused-vs-staged margin
-    under sharding is decided by the HBM side, exactly the paper's claim
-    re-proved per partition."""
+    With c_mid sharded, the staged path pays the IDENTICAL collectives
+    (its SE squeeze and projection also reduce over the full expanded
+    width, and its projection could equally reduce-scatter) — priced
+    under the SAME ``collective`` mode as the fused pipeline, so the
+    fused-vs-staged margin under sharding is decided by the HBM side,
+    exactly the paper's claim re-proved per partition."""
     local, (dp, mp) = mbconv_shard(shape, mesh_shape)
     return ShardedTraffic(
         device=mbconv_staged_traffic(local, tile_h, c_block),
-        collective_words=_mbconv_psum_words(shape, dp, mp),
-        n_devices=dp * mp, mesh_shape=(dp, mp))
+        collective_words=_mbconv_collective_words(shape, dp, mp, collective),
+        n_devices=dp * mp, mesh_shape=(dp, mp), collective=collective)

@@ -60,7 +60,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from ..core.perfmodel import DEFAULT_RESIDENCY, pick_channel_block
+from ..core.perfmodel import (
+    DEFAULT_COLLECTIVE,
+    DEFAULT_RESIDENCY,
+    pick_channel_block,
+    validate_collective,
+)
 from .common import default_interpret, round_up as _round_up, spatial_pads
 from .ref import _act_ref, mbconv_ref
 from .staging import StripPlan, StripStream, strip_plan
@@ -367,22 +372,30 @@ def mbconv_pass2_retain_pallas(dw_ret, scale, w_proj, *, out_w, tile_h,
 def _mbconv_impl(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj, stride,
                  padding, tile_h, mode, exp_act, dw_act, interpret,
                  residency=DEFAULT_RESIDENCY,
-                 axis_name: Optional[str] = None):
+                 axis_name: Optional[str] = None,
+                 collective: str = DEFAULT_COLLECTIVE):
     """Two-pass fused MBConv on one device — or on one SHARD of the c_mid
     grid when ``axis_name`` names a mesh axis (``shard_map`` body).
 
     Under c_mid sharding every device runs pass 1 / pass 2 on its own
     channel slice, and the two contractions over the full expanded width
-    become cross-device ``psum``s:
+    become cross-device reductions:
 
     * the SE squeeze FC (``mean @ w_se1`` reduces over C_mid) — the pass-1
-      pool leaves the chip exactly once, as a tiny (B, C_se) partial;
+      pool leaves the chip exactly once, as a tiny (B, C_se) partial,
+      always a full ``psum`` (the excite FC consumes it replicated);
     * the projection PW (``dw @ w_proj`` reduces over C_mid) — each device
-      contributes its channel slice's partial output.
+      contributes its channel slice's partial output.  This is the
+      **collective axis hook**: ``collective == "ring_allreduce"`` emits
+      ``jax.lax.psum`` (output replicated), ``"psum_scatter"`` emits
+      ``jax.lax.psum_scatter`` over the channel dim — half the wire
+      words, and the pass-2 output leaves the kernel SHARDED on c_out for
+      a consumer that wants it that way.
 
     Everything else (expand columns, DW taps, the excite FC rows, the
     retained DW tensor) is local to the shard.
     """
+    validate_collective(collective)
     b, h, w_in, c_in = x.shape
     k_h, k_w, c_mid = w_dw.shape
     assert w_exp.shape == (c_in, c_mid), (w_exp.shape, c_in, c_mid)
@@ -450,7 +463,14 @@ def _mbconv_impl(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj, stride,
     out = out[:, :out_h, :, :c_out]
     if axis_name is not None:
         # projection partials: each shard contracted only its c_mid slice
-        out = jax.lax.psum(out, axis_name)
+        if collective == "psum_scatter":
+            # reduce-scatter over the channel dim: (mp-1)/mp words per
+            # reduced word instead of the ring's 2*(mp-1)/mp, and this
+            # shard keeps only its c_out slice — the layout-aware exit
+            out = jax.lax.psum_scatter(out, axis_name,
+                                       scatter_dimension=3, tiled=True)
+        else:
+            out = jax.lax.psum(out, axis_name)
     return out
 
 

@@ -9,7 +9,9 @@ re-prove, they do not transfer).  This module wraps both pipelines in
 (``repro.sharding`` / ``launch.mesh``), with the axis mapping:
 
 * **batch -> "data"** for both families — pure data parallelism, every
-  device runs the identical fused schedule on its batch slice;
+  device runs the identical fused schedule on its batch slice.  A "pod"
+  axis (multi-pod meshes) joins it as an outer multiplier: batch shards
+  over ("pod", "data") jointly, no new collective;
 * **separable: c_out -> "model"** — the kernel grid's channel axis.  The
   PW contraction reduces over c_in, which stays replicated, so each
   device's output-channel slice is complete on-chip and the sharded path
@@ -17,9 +19,12 @@ re-prove, they do not transfer).  This module wraps both pipelines in
 * **MBConv: c_mid -> "model"** — the expanded/DW/SE width (the kernel
   grid's channel axis).  Expand columns, DW taps, the retained DW tensor
   and the excite FC are all local to the shard, but the two contractions
-  over the full C_mid become cross-device ``psum``s inside
+  over the full C_mid become cross-device reductions inside
   ``_mbconv_impl``: the pass-1 SE pool leaves the chip once as a tiny
-  (B, C_se) squeeze partial, and pass 2 psums the projection partials.
+  (B, C_se) squeeze ``psum``, and pass 2 reduces the projection partials
+  per the schedule's **collective** axis — ``psum`` (ring all-reduce,
+  replicated output) or ``psum_scatter`` (half the wire words, output
+  sharded on c_out for a layout-aware consumer).
 
 Each shard runs the shared strip-staging engine (``kernels.staging``)
 under the schedule's residency, so the DMA-structured input streams are
@@ -50,13 +55,18 @@ from typing import Dict, Optional, Tuple
 import jax
 from jax.sharding import PartitionSpec as P
 
-from ..compat import residual_barrier, shard_map_compat
-from ..core.perfmodel import DEFAULT_RESIDENCY
+from ..compat import (
+    residual_barrier,
+    residual_barrier_needed,
+    shard_map_compat,
+)
+from ..core.perfmodel import DEFAULT_COLLECTIVE, DEFAULT_RESIDENCY
 from .common import default_interpret
 from .convdk_fused import _fused_impl
 from .convdk_mbconv import _mbconv_impl
 from .ref import mbconv_ref, separable_ref
 
+POD_AXIS = "pod"
 DATA_AXIS = "data"
 MODEL_AXIS = "model"
 
@@ -67,14 +77,29 @@ TRACE_COUNTS: Dict[str, int] = {"separable": 0, "mbconv": 0}
 
 
 def conv_mesh_shape(mesh) -> Tuple[int, int]:
-    """(data, model) axis sizes of a mesh (1 for an absent axis)."""
-    return (mesh.shape.get(DATA_AXIS, 1), mesh.shape.get(MODEL_AXIS, 1))
+    """Effective (data, model) factors of a mesh (1 for an absent axis).
+
+    A "pod" axis (multi-pod deployments, ``launch.mesh`` multi_pod=True)
+    folds into the data factor as a PURE data-parallel outer multiplier:
+    batch shards over ("pod", "data") jointly, no new collective appears
+    (the MBConv reductions stay inside each model group), and the pricing
+    is a per-pod replica of the existing totals — which is exactly what
+    ``perfmodel`` computes from the folded dp."""
+    return (mesh.shape.get(POD_AXIS, 1) * mesh.shape.get(DATA_AXIS, 1),
+            mesh.shape.get(MODEL_AXIS, 1))
+
+
+def _batch_axes(mesh):
+    """The PartitionSpec entry the batch dim shards over: ("pod", "data")
+    jointly when the mesh carries a pod axis, plain "data" otherwise."""
+    return (POD_AXIS, DATA_AXIS) if POD_AXIS in mesh.shape else DATA_AXIS
 
 
 def can_shard_fused(mesh, batch: int, channels: int) -> bool:
-    """True iff both mesh axes exist and divide (batch, channel grid) —
-    the model-layer routing falls back to the single-device kernel
-    otherwise (same drop policy as ``sharding.spec_for``)."""
+    """True iff the data/model axes exist and the EFFECTIVE factors
+    (pod folded into data) divide (batch, channel grid) — the model-layer
+    routing falls back to the single-device kernel otherwise (same drop
+    policy as ``sharding.spec_for``)."""
     if DATA_AXIS not in mesh.shape or MODEL_AXIS not in mesh.shape:
         return False
     dp, mp = conv_mesh_shape(mesh)
@@ -88,7 +113,9 @@ def _require_shardable(mesh, batch: int, channels: int, channel_name: str):
             f"{dict(mesh.shape)}")
     dp, mp = conv_mesh_shape(mesh)
     if batch % dp != 0:
-        raise ValueError(f"batch {batch} not divisible by {DATA_AXIS}={dp}")
+        raise ValueError(
+            f"batch {batch} not divisible by the effective data factor "
+            f"{dp} (pod*data)")
     if channels % mp != 0:
         raise ValueError(
             f"{channel_name} {channels} not divisible by {MODEL_AXIS}={mp}")
@@ -107,12 +134,13 @@ def _sep_sharded_impl(x, w_dw, w_pw, mesh, stride, padding, tile_h, dw_act,
         return _fused_impl(xl, wdl, wpl, stride, padding, tile_h, dw_act,
                            act, interpret, residency)
 
+    batch = _batch_axes(mesh)
     return shard_map_compat(
         local, mesh,
-        in_specs=(P(DATA_AXIS, None, None, None),   # batch slice, full C_in
+        in_specs=(P(batch, None, None, None),       # batch slice, full C_in
                   P(None, None, None),              # DW taps replicated
                   P(None, MODEL_AXIS)),             # PW columns sharded
-        out_specs=P(DATA_AXIS, None, None, MODEL_AXIS),
+        out_specs=P(batch, None, None, MODEL_AXIS),
     )(x, w_dw, w_pw)
 
 
@@ -180,14 +208,15 @@ def convdk_fused_separable_sharded(
 ) -> jax.Array:
     """Mesh-sharded fused depthwise-separable block (differentiable).
 
-    ``shard_map`` over ``mesh``: batch on "data", output channels on
-    "model"; every device runs the single-device fused kernel — including
-    its strip-staging engine, per ``residency`` — on its (batch, c_out)
-    tile.  The c_in reduction is device-local (c_in is replicated), so no
-    collective is needed — per-device HBM traffic is the single-device
-    model evaluated at the shard shape.
+    ``shard_map`` over ``mesh``: batch on "data" (jointly with "pod"
+    when the mesh carries one), output channels on "model"; every device
+    runs the single-device fused kernel — including its strip-staging
+    engine, per ``residency`` — on its (batch, c_out) tile.  The c_in
+    reduction is device-local (c_in is replicated), so no collective is
+    needed — per-device HBM traffic is the single-device model evaluated
+    at the shard shape.
 
-    Requires ``b % data == 0`` and ``c_out % model == 0``
+    Requires ``b % (pod*data) == 0`` and ``c_out % model == 0``
     (``can_shard_fused`` pre-checks; the model layer falls back to the
     unsharded kernel when the grid does not divide).  Dispatches through a
     cached jitted entry point, so repeated serving-rate calls do not
@@ -197,6 +226,10 @@ def convdk_fused_separable_sharded(
         interpret = default_interpret()
     if residency is None:
         residency = DEFAULT_RESIDENCY
+    # resolve the residual-forwarding probe EAGERLY (it cannot run inside
+    # the fwd trace; cheap once cached) so the barrier decision the trace
+    # bakes in is the probed one, not the safe fallback
+    residual_barrier_needed()
     return _sep_sharded_entry(mesh, stride, padding, tile_h, dw_act, act,
                               interpret, residency)(x, w_dw, w_pw)
 
@@ -207,18 +240,31 @@ def convdk_fused_separable_sharded(
 
 def _mbconv_sharded_impl(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj,
                          mesh, stride, padding, tile_h, mode, exp_act,
-                         dw_act, interpret, residency):
+                         dw_act, interpret, residency, collective):
     _require_shardable(mesh, x.shape[0], w_dw.shape[-1], "c_mid")
+    _dp, mp = conv_mesh_shape(mesh)
+    if collective == "psum_scatter" and w_proj.shape[1] % mp != 0:
+        raise ValueError(
+            f"psum_scatter needs c_out % {MODEL_AXIS} == 0, got c_out="
+            f"{w_proj.shape[1]} over {MODEL_AXIS}={mp}")
     TRACE_COUNTS["mbconv"] += 1
 
     def local(xl, wel, wdl, s1l, b1l, s2l, b2l, wpl):
         return _mbconv_impl(xl, wel, wdl, s1l, b1l, s2l, b2l, wpl, stride,
                             padding, tile_h, mode, exp_act, dw_act,
-                            interpret, residency, axis_name=MODEL_AXIS)
+                            interpret, residency, axis_name=MODEL_AXIS,
+                            collective=collective)
 
+    batch = _batch_axes(mesh)
+    # the layout-aware exit: under psum_scatter each shard keeps only its
+    # c_out slice, so the output leaves sharded on "model" — a following
+    # PW/block that consumes c_out-sharded activations needs no regather
+    # (the global VALUES are identical to the ring variant's)
+    out_spec = P(batch, None, None,
+                 MODEL_AXIS if collective == "psum_scatter" else None)
     return shard_map_compat(
         local, mesh,
-        in_specs=(P(DATA_AXIS, None, None, None),   # batch slice, full C_in
+        in_specs=(P(batch, None, None, None),       # batch slice, full C_in
                   P(None, MODEL_AXIS),              # expand columns
                   P(None, None, MODEL_AXIS),        # DW taps per channel
                   P(MODEL_AXIS, None),              # squeeze FC rows
@@ -227,34 +273,37 @@ def _mbconv_sharded_impl(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj,
                   P(None, MODEL_AXIS),              # excite FC columns
                   P(MODEL_AXIS),                    # excite bias
                   P(MODEL_AXIS, None)),             # projection rows
-        out_specs=P(DATA_AXIS, None, None, None),   # replicated post-psum
+        out_specs=out_spec,
     )(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj)
 
 
 @functools.partial(jax.custom_vjp,
-                   nondiff_argnums=(8, 9, 10, 11, 12, 13, 14, 15, 16))
+                   nondiff_argnums=(8, 9, 10, 11, 12, 13, 14, 15, 16, 17))
 def _mbconv_sharded_op(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj,
                        mesh, stride, padding, tile_h, mode, exp_act, dw_act,
-                       interpret, residency):
+                       interpret, residency, collective):
     return _mbconv_sharded_impl(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2,
                                 w_proj, mesh, stride, padding, tile_h, mode,
-                                exp_act, dw_act, interpret, residency)
+                                exp_act, dw_act, interpret, residency,
+                                collective)
 
 
 def _mbconv_sharded_fwd(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj,
                         mesh, stride, padding, tile_h, mode, exp_act, dw_act,
-                        interpret, residency):
+                        interpret, residency, collective):
     out = _mbconv_sharded_op(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2,
                              w_proj, mesh, stride, padding, tile_h, mode,
-                             exp_act, dw_act, interpret, residency)
+                             exp_act, dw_act, interpret, residency,
+                             collective)
     # barrier: under the jitted entry, raw-input residuals get forwarded
-    # and the w_dw cotangent double-counts (see compat.residual_barrier)
+    # and the w_dw cotangent double-counts (see compat.residual_barrier —
+    # probe-gated, so it auto-disables on fixed JAX builds)
     return out, residual_barrier(
         (x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj))
 
 
 def _mbconv_sharded_bwd(mesh, stride, padding, tile_h, mode, exp_act,
-                        dw_act, interpret, residency, res, g):
+                        dw_act, interpret, residency, collective, res, g):
     _, vjp = jax.vjp(
         lambda *p: mbconv_ref(*p, stride=stride, padding=padding,
                               exp_act=exp_act, dw_act=dw_act),
@@ -268,16 +317,17 @@ _mbconv_sharded_op.defvjp(_mbconv_sharded_fwd, _mbconv_sharded_bwd)
 
 @functools.lru_cache(maxsize=256)
 def _mbconv_sharded_entry(mesh, stride, padding, tile_h, mode, exp_act,
-                          dw_act, interpret, residency):
+                          dw_act, interpret, residency, collective):
     """One jitted entry point per (mesh, static schedule) — see
-    ``_sep_sharded_entry``."""
+    ``_sep_sharded_entry``.  The collective layout is part of the static
+    schedule: ring and scatter variants are distinct entries."""
 
     @jax.jit
     def entry(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj):
         return _mbconv_sharded_op(x, w_exp, w_dw, w_se1, b_se1, w_se2,
                                   b_se2, w_proj, mesh, stride, padding,
                                   tile_h, mode, exp_act, dw_act, interpret,
-                                  residency)
+                                  residency, collective)
 
     return entry
 
@@ -301,25 +351,44 @@ def convdk_mbconv_fused_sharded(
     dw_act: Optional[str] = "silu",
     interpret: Optional[bool] = None,
     residency: Optional[str] = None,
+    collective: Optional[str] = None,
 ) -> jax.Array:
     """Mesh-sharded two-pass fused MBConv block (differentiable).
 
-    ``shard_map`` over ``mesh``: batch on "data", the expanded c_mid grid
-    on "model".  Each device runs both fused passes on its channel slice —
-    staged per ``residency`` by the shared engine, including the
-    double-buffered retained-DW re-read; the pass-1 SE pool crosses
-    devices exactly once (a (B, C_se) squeeze ``psum`` before the pass-2
-    gate), and the pass-2 projection partials are psum'd into the
-    replicated block output.  Collective bytes are priced by
-    ``core.perfmodel.sharded_mbconv_traffic``.
+    ``shard_map`` over ``mesh``: batch on "data" (jointly with "pod" when
+    the mesh carries one), the expanded c_mid grid on "model".  Each
+    device runs both fused passes on its channel slice — staged per
+    ``residency`` by the shared engine, including the double-buffered
+    retained-DW re-read; the pass-1 SE pool crosses devices exactly once
+    (a (B, C_se) squeeze ``psum`` before the pass-2 gate), and the pass-2
+    projection partials reduce per ``collective``:
 
-    Requires ``b % data == 0`` and ``c_mid % model == 0``.  Dispatches
-    through a cached jitted entry point (no per-call re-tracing).
+    * ``"ring_allreduce"`` (default): ``psum`` into the replicated block
+      output;
+    * ``"psum_scatter"``: ``psum_scatter`` over the channel dim — half
+      the wire words, and the returned global array is SHARDED on c_out
+      across "model" (identical values; a following PW/block that
+      consumes c_out-sharded activations needs no regather).  Requires
+      ``c_out % model == 0``.
+
+    Collective bytes are priced by
+    ``core.perfmodel.sharded_mbconv_traffic`` under the same axis.
+
+    Requires ``b % (pod*data) == 0`` and ``c_mid % model == 0``.
+    Dispatches through a cached jitted entry point (no per-call
+    re-tracing).
     """
     if interpret is None:
         interpret = default_interpret()
     if residency is None:
         residency = DEFAULT_RESIDENCY
+    if collective is None:
+        collective = DEFAULT_COLLECTIVE
+    # resolve the residual-forwarding probe EAGERLY (see the separable
+    # wrapper): the probe itself dispatches through _mbconv_sharded_op
+    # with the probing flag set, so this never recurses
+    residual_barrier_needed()
     return _mbconv_sharded_entry(mesh, stride, padding, tile_h, mode,
-                                 exp_act, dw_act, interpret, residency)(
+                                 exp_act, dw_act, interpret, residency,
+                                 collective)(
         x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj)

@@ -161,11 +161,19 @@ def mbconv_block(
     shapes allow (s == 1, C_in == C_out).
 
     With a ``mesh`` (and ``kcfg.shard_fused``), the fused pipeline runs
-    mesh-sharded via ``shard_map``: batch on "data", the expanded c_mid
-    grid on "model", the SE pool psum'd across the model axis
+    mesh-sharded via ``shard_map``: batch on "data" (jointly with a "pod"
+    axis when present), the expanded c_mid grid on "model", the SE pool
+    psum'd across the model axis
     (``kernels.convdk_mbconv_fused_sharded``) — falling back to the
     single-device kernel when the mesh axes do not divide the grid.  The
-    (tile_h, mode) schedule is then solved per partitioning.
+    (tile_h, mode, residency, collective) schedule is then solved per
+    partitioning; when the solver picks ``psum_scatter`` the block output
+    comes back sharded on c_out (identical values).  The priced ~2x
+    collective saving is BLOCK-LOCAL: a layout-aware consumer keeps it,
+    while a replicated-input consumer (today's block entries — the
+    ROADMAP edge) repays the deferred all-gather at the next boundary,
+    landing exactly at the ring total — scatter is equal-or-better end
+    to end, never worse.
 
     x: (B, H, W, C_in) NHWC -> (B, H', W', C_out).
     """
@@ -195,6 +203,7 @@ def mbconv_block(
     mesh_shape = conv_mesh_shape(mesh) if sharded else (1, 1)
     tile_h, mode = kcfg.tile_h, kcfg.mbconv_mode or "retain"
     residency = kcfg.residency
+    collective = kcfg.collective
     if kcfg.autotune:
         from ..core.autotune import get_mbconv_schedule
         b, h, w, _ = x.shape
@@ -205,10 +214,11 @@ def mbconv_block(
             b, h, w, c_in, c_mid, c_out, params["dw"].shape[0], stride,
             se_ratio=se_ratio, dtype_bytes=x.dtype.itemsize,
             mesh_shape=mesh_shape, residency=kcfg.residency,
-            mode=kcfg.mbconv_mode)
+            mode=kcfg.mbconv_mode, collective=kcfg.collective)
         tile_h = sch.tile_h
         mode = sch.mode
         residency = sch.residency
+        collective = sch.collective
 
     args = (x, w_exp, params["dw"].astype(x.dtype),
             params["se_w1"], params["se_b1"], params["se_w2"],
@@ -217,7 +227,8 @@ def mbconv_block(
         out = convdk_mbconv_fused_sharded(
             *args, mesh=mesh, stride=stride, padding=padding, tile_h=tile_h,
             mode=mode, exp_act=eff_exp_act, dw_act=dw_act,
-            interpret=kcfg.interpret, residency=residency)
+            interpret=kcfg.interpret, residency=residency,
+            collective=collective)
     elif kcfg.fused_mbconv:
         out = convdk_mbconv_fused(
             *args, stride=stride, padding=padding, tile_h=tile_h, mode=mode,

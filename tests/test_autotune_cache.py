@@ -203,6 +203,41 @@ def test_legacy_pre_mesh_keys_migrate(cache_dir):
     assert get_fused_schedule(1, 28, 28, 192, 64, 3, 2).tile_h == edited
 
 
+def test_legacy_pre_collective_keys_migrate(cache_dir):
+    """MBConv entries persisted before the collective axis (no ``coll=``
+    segment) must be honored as the ``coll=auto`` picks — the measured
+    (tile_h, mode) wins and the collective is re-solved at that point —
+    while separable keys never grow the segment."""
+    tmp_path, cache = cache_dir
+    sch = get_mbconv_schedule(8, 14, 14, 80, 480, 112, 5, 1,
+                              mesh_shape=(2, 4))
+    assert sch.collective in ("ring_allreduce", "psum_scatter")
+    (key,) = list(_entries(tmp_path))
+    assert "|coll=auto|" in key
+    legacy_key = key.replace("|coll=auto|", "|")       # pre-collective era
+    edited_th = 1 if sch.tile_h != 1 else 2
+    (tmp_path / "convdk_schedules.json").write_text(json.dumps(
+        {"version": 1,
+         "entries": {legacy_key: {"tile_h": edited_th, "mode": "recompute",
+                                  "source": "measured"}}}))
+    cache.clear_memory()                               # "new process"
+    again = get_mbconv_schedule(8, 14, 14, 80, 480, 112, 5, 1,
+                                mesh_shape=(2, 4))
+    assert (again.tile_h, again.mode) == (edited_th, "recompute")
+    assert again.collective in ("ring_allreduce", "psum_scatter")
+
+    # a pinned collective solves (and caches) under its own key
+    ring = get_mbconv_schedule(8, 14, 14, 80, 480, 112, 5, 1,
+                               mesh_shape=(2, 4),
+                               collective="ring_allreduce")
+    assert ring.collective == "ring_allreduce"
+    assert any("|coll=ring_allreduce|" in k for k in _entries(tmp_path))
+
+    get_fused_schedule(8, 28, 28, 64, 64, 3, 1, mesh_shape=(2, 4))
+    sep_keys = [k for k in _entries(tmp_path) if k.startswith("sep|")]
+    assert sep_keys and all("coll=" not in k for k in sep_keys)
+
+
 def test_corrupt_cache_file_is_ignored(cache_dir):
     tmp_path, _cache = cache_dir
     (tmp_path / "convdk_schedules.json").write_text("{not json")

@@ -76,8 +76,13 @@ def run_case(body: str) -> None:
         exec(compile(src, "<distributed-fused-case>", "exec"),
              {"__name__": "__distributed_fused__"})
         return
+    # barrier forced on (the pre-probe default, harmless on any build) so
+    # the per-case subprocesses skip the ~6 s residual-forwarding probe;
+    # the probe regression test calls residual_forwarding_probe()
+    # directly, which probes regardless of the mode
     env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"),
                XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    env.setdefault("CONVDK_RESIDUAL_BARRIER", "on")
     res = subprocess.run([sys.executable, "-c", src], env=env,
                          capture_output=True, text=True, timeout=900)
     assert res.returncode == 0, res.stderr[-4000:]
@@ -172,6 +177,112 @@ def test_sharded_mbconv_expand_ratio_one():
     """)
 
 
+@pytest.mark.parametrize("mesh", ["4x2", "2x4"])
+def test_sharded_mbconv_psum_scatter_parity(mesh):
+    """The psum_scatter pass-2 variant over k{3,5} x s{1,2}: the
+    (c_out-sharded, then implicitly gathered) global output equals the
+    ring variant, the single-device kernel and the lax oracle — and the
+    returned array really is sharded on c_out across "model"."""
+    run_case(f"""
+    mesh = parse_mesh("{mesh}")
+    mp = mesh.shape["model"]
+    rng = np.random.default_rng(7)
+    b, h, w_in, ci, e, co = 8, 9, 9, 8, 2, 16
+    x = rand(rng, (b, h, w_in, ci))
+    for k in (3, 5):
+        weights, exp_act = mbconv_params(rng, ci, e, co, k)
+        for s in (1, 2):
+            want = mbconv_ref(x, *weights, stride=s)
+            single = convdk_mbconv_fused(x, *weights, stride=s, tile_h=3,
+                                         interpret=True)
+            for mode in ("retain", "recompute"):
+                ring = convdk_mbconv_fused_sharded(
+                    x, *weights, mesh=mesh, stride=s, tile_h=3, mode=mode,
+                    interpret=True, collective="ring_allreduce")
+                scat = convdk_mbconv_fused_sharded(
+                    x, *weights, mesh=mesh, stride=s, tile_h=3, mode=mode,
+                    interpret=True, collective="psum_scatter")
+                tag = f"k{{k}}s{{s}}{{mode}}"
+                assert scat.shape == want.shape, (scat.shape, want.shape)
+                np.testing.assert_allclose(scat, ring, err_msg=tag, **TOL)
+                np.testing.assert_allclose(scat, single, err_msg=tag, **TOL)
+                np.testing.assert_allclose(scat, want, err_msg=tag, **TOL)
+                # the layout-aware exit: output sharded on c_out
+                spec = scat.sharding.spec
+                assert spec[-1] == "model", spec
+    print("PSUM_SCATTER_PARITY_OK {mesh}")
+    """)
+
+
+def test_sharded_mbconv_psum_scatter_rejects_indivisible():
+    """c_out that does not divide the model axis: the scatter wrapper
+    must refuse loudly (the ring variant still runs)."""
+    run_case("""
+    mesh = parse_mesh("2x4")
+    rng = np.random.default_rng(8)
+    weights, _ = mbconv_params(rng, 8, 2, 18, 3)   # c_out 18 % 4 != 0
+    x = rand(rng, (8, 9, 9, 8))
+    ok = convdk_mbconv_fused_sharded(x, *weights, mesh=mesh, stride=1,
+                                     tile_h=3, interpret=True)
+    assert ok.shape == (8, 9, 9, 18)
+    try:
+        convdk_mbconv_fused_sharded(x, *weights, mesh=mesh, stride=1,
+                                    tile_h=3, interpret=True,
+                                    collective="psum_scatter")
+    except ValueError as e:
+        assert "psum_scatter" in str(e), e
+    else:
+        raise AssertionError("indivisible c_out accepted")
+    print("PSUM_SCATTER_REJECT_OK")
+    """)
+
+
+def test_pod_axis_is_pure_data_parallelism():
+    """A ("pod", "data", "model") mesh routes instead of raising/falling
+    back: batch shards over pod*data jointly, parity holds for both
+    families and both collectives, and the model layer routes through the
+    sharded wrappers on the pod mesh."""
+    run_case("""
+    from repro.configs.base import ConvKernelConfig
+    from repro.kernels import can_shard_fused, conv_mesh_shape
+    from repro.models.mbconv import mbconv_block, mbconv_def
+    from repro.models.param import materialize
+
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+    assert conv_mesh_shape(mesh) == (4, 2)
+    assert can_shard_fused(mesh, batch=8, channels=16)
+    assert not can_shard_fused(mesh, batch=6, channels=16)  # 6 % 4 != 0
+
+    rng = np.random.default_rng(9)
+    b, ci, e, co, k = 8, 8, 2, 16, 3
+    x = rand(rng, (b, 9, 9, ci))
+    w_dw = rand(rng, (k, k, ci), 0.3)
+    w_pw = rand(rng, (ci, co))
+    got = convdk_fused_separable_sharded(x, w_dw, w_pw, mesh=mesh,
+                                         stride=1, tile_h=3, interpret=True)
+    np.testing.assert_allclose(got, separable_ref(x, w_dw, w_pw, stride=1),
+                               **TOL)
+
+    weights, _ = mbconv_params(rng, ci, e, co, k)
+    want = mbconv_ref(x, *weights, stride=1)
+    for coll in ("ring_allreduce", "psum_scatter"):
+        got = convdk_mbconv_fused_sharded(
+            x, *weights, mesh=mesh, stride=1, tile_h=3, interpret=True,
+            collective=coll)
+        np.testing.assert_allclose(got, want, err_msg=coll, **TOL)
+
+    # model-layer routing on the pod mesh matches the mesh-free output
+    kcfg = ConvKernelConfig(interpret=True)
+    params = materialize(mbconv_def(16, 16, k=3, expand_ratio=2),
+                         jax.random.key(0))
+    xb = rand(rng, (8, 9, 9, 16))
+    np.testing.assert_allclose(
+        mbconv_block(params, xb, stride=1, kcfg=kcfg, mesh=mesh),
+        mbconv_block(params, xb, stride=1, kcfg=kcfg), **TOL)
+    print("POD_AXIS_OK")
+    """)
+
+
 # ---------------------------------------------------------------------------
 # collective structure: the SE pool crosses devices via psum — asserted by
 # intercepting the collective, not by numerics
@@ -187,9 +298,14 @@ def test_mbconv_pool_psum_intercepted():
     # the interception counts psums at TRACE time — drop the cached jitted
     # entry points so this case traces fresh instead of reusing a trace an
     # earlier test already built (the no-retrace behavior under test in
-    # test_staging.py::test_sharded_entry_point_traces_once)
+    # test_staging.py::test_sharded_entry_point_traces_once), and settle
+    # the residual-barrier decision FIRST so the probe's own tiny sharded
+    # grad cannot run (and get counted) inside the interception window
+    # (residual_barrier_needed skips the probe when the mode is forced)
+    from repro import compat
     from repro.kernels.convdk_sharded import (
         _mbconv_sharded_entry, _sep_sharded_entry)
+    compat.residual_barrier_needed()
     _mbconv_sharded_entry.cache_clear()
     _sep_sharded_entry.cache_clear()
     mesh = parse_mesh("2x4")
@@ -239,6 +355,139 @@ def test_mbconv_pool_psum_intercepted():
     finally:
         jax.lax.psum = orig_psum
     print("PSUM_INTERCEPT_OK")
+    """)
+
+
+def test_mbconv_psum_scatter_intercepted():
+    """Intercept both collectives during the scatter-variant trace:
+    exactly ONE ``psum_scatter`` (the projection partial, over "model")
+    and exactly one remaining ``psum`` (the SE squeeze — it must stay an
+    all-reduce: the excite FC consumes it replicated), in both pass-2
+    modes."""
+    run_case("""
+    # settle the residual-barrier decision BEFORE counting collectives —
+    # the probe's own tiny sharded grad would otherwise run inside the
+    # window (residual_barrier_needed skips it when the mode is forced)
+    from repro import compat
+    from repro.kernels.convdk_sharded import _mbconv_sharded_entry
+    compat.residual_barrier_needed()
+    _mbconv_sharded_entry.cache_clear()
+    mesh = parse_mesh("2x4")
+    rng = np.random.default_rng(10)
+    b, h, w_in, ci, e, co, k, s = 8, 9, 9, 8, 2, 16, 3, 1
+    cse = max(1, ci // 4)
+    x = rand(rng, (b, h, w_in, ci))
+    weights, _ = mbconv_params(rng, ci, e, co, k)
+    want = mbconv_ref(x, *weights, stride=s)
+
+    psums, scatters = [], []
+    orig_psum, orig_scatter = jax.lax.psum, jax.lax.psum_scatter
+
+    def counting_psum(val, axis_name, **kw):
+        psums.append((jnp.shape(val), axis_name))
+        return orig_psum(val, axis_name, **kw)
+
+    def counting_scatter(val, axis_name, **kw):
+        scatters.append((jnp.shape(val), axis_name))
+        return orig_scatter(val, axis_name, **kw)
+
+    jax.lax.psum, jax.lax.psum_scatter = counting_psum, counting_scatter
+    try:
+        for mode in ("retain", "recompute"):
+            psums.clear(); scatters.clear()
+            got = convdk_mbconv_fused_sharded(
+                x, *weights, mesh=mesh, stride=s, tile_h=3, mode=mode,
+                interpret=True, collective="psum_scatter")
+            np.testing.assert_allclose(got, want, err_msg=mode,
+                                       rtol=1e-4, atol=1e-4)
+            model_scatters = [c for c in scatters if c[1] == "model"]
+            model_psums = [c for c in psums if c[1] == "model"]
+            assert len(model_scatters) == 1, (mode, scatters)
+            assert len(model_psums) == 1, (mode, psums)
+            # the scattered projection partial is the full per-shard
+            # output block; the psum'd squeeze partial stays tiny
+            assert model_scatters[0][0] == (b // 2, h, w_in, co), scatters
+            assert model_psums[0][0] == (b // 2, cse), psums
+    finally:
+        jax.lax.psum, jax.lax.psum_scatter = orig_psum, orig_scatter
+    print("PSUM_SCATTER_INTERCEPT_OK")
+    """)
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp residual forwarding: the probe + the barrier it gates
+# ---------------------------------------------------------------------------
+
+def test_residual_forwarding_probe_and_barrier():
+    """Regression for the upstream custom_vjp residual-forwarding bug:
+    the probe must reach a verdict on this 8-device harness, the MBConv
+    ``w_dw`` cotangent must match central finite differences with the
+    barrier forced ON and in probe-gated auto mode, and whenever the
+    probe reports the bug, forcing the barrier OFF must reproduce the
+    miscount (i.e. the probe detects something real — on fixed builds the
+    same forced-OFF grad must instead be exact, proving auto-disable is
+    safe)."""
+    run_case("""
+    from repro import compat
+    from repro.kernels.convdk_sharded import _mbconv_sharded_entry
+
+    probe = compat.residual_forwarding_probe()
+    assert probe in (True, False), probe     # 8 devices: must be conclusive
+
+    mesh = parse_mesh("2x4")
+    rng = np.random.default_rng(11)
+    ci, e, co, k = 8, 2, 16, 3
+    x = rand(rng, (4, 5, 5, ci))
+    weights, _ = mbconv_params(rng, ci, e, co, k)
+    w_dw = weights[1]
+
+    def loss_at(wd):
+        ws = (weights[0], wd) + tuple(weights[2:])
+        return float((convdk_mbconv_fused_sharded(
+            x, *ws, mesh=mesh, stride=1, tile_h=2, interpret=True) ** 2
+        ).sum())
+
+    def grad_now(wd):
+        _mbconv_sharded_entry.cache_clear()   # decisions bake into traces
+        def loss(w):
+            ws = (weights[0], w) + tuple(weights[2:])
+            return (convdk_mbconv_fused_sharded(
+                x, *ws, mesh=mesh, stride=1, tile_h=2,
+                interpret=True) ** 2).sum()
+        return jax.grad(loss)(wd)
+
+    # central finite differences along a few random directions
+    def fd_check(g, tag, expect_exact=True):
+        eps = 1e-2
+        fails = 0
+        for seed in range(3):
+            v = rand(np.random.default_rng(seed), w_dw.shape)
+            v = v / jnp.linalg.norm(v)
+            fd = (loss_at(w_dw + eps * v) - loss_at(w_dw - eps * v)) \\
+                / (2 * eps)
+            an = float(jnp.vdot(g, v))
+            if abs(an - fd) > 2e-2 * max(1.0, abs(fd)):
+                fails += 1
+        if expect_exact:
+            assert fails == 0, (tag, fails)
+        return fails
+
+    try:
+        compat.set_residual_barrier("on")
+        fd_check(grad_now(w_dw), "barrier-on")
+        compat.set_residual_barrier("auto")
+        fd_check(grad_now(w_dw), "auto")
+        compat.set_residual_barrier("off")
+        fails_off = fd_check(grad_now(w_dw), "barrier-off",
+                             expect_exact=not probe)
+        if probe:
+            # the miscount multiplies the cotangent by the model-axis
+            # size: every direction must disagree with finite differences
+            assert fails_off == 3, fails_off
+    finally:
+        compat.set_residual_barrier("auto")
+        _mbconv_sharded_entry.cache_clear()
+    print("RESIDUAL_PROBE_OK probe=%s" % probe)
     """)
 
 

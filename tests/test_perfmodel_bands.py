@@ -14,20 +14,27 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.perfmodel import (
+    COLLECTIVE_MODES,
     DATAFLOWS,
     MBCONV_MODES,
+    RESIDENCY_MODES,
     MacroConfig,
     MBConvShape,
+    SeparableShape,
+    can_psum_scatter,
     compare_networks,
     cost_ws_convdk,
     mbconv_fused_traffic,
     reduction,
     sharded_mbconv_staged_traffic,
     sharded_mbconv_traffic,
+    sharded_separable_staged_traffic,
+    sharded_separable_traffic,
 )
 from repro.core.tiling import DWLayer, plan_layer
 from repro.core.workloads import (
     EFFICIENTNET_B0_MBCONV,
+    MOBILENET_V2_SEPARABLE,
     NETWORKS,
     PAPER_BANDS,
 )
@@ -263,6 +270,100 @@ def test_sharded_b0_gate_exhaustive():
             assert sch.total_bytes < sch.staged_total_bytes, (layer, mesh)
             # the psum term is live exactly when the model axis shards
             assert (sch.collective_words > 0) == (mesh[1] > 1), (layer, mesh)
+
+
+def test_schedule_totals_are_shardedtraffic_totals():
+    """Anti-divergence property (the single-source-of-truth contract):
+    for EVERY B0 MBConv layer and EVERY MBv2 separable block x mesh
+    {(8,1),(4,2),(2,4)} x residency x collective mode, the solved
+    schedule's byte accounting IS the ``perfmodel.ShardedTraffic`` —
+    identical objects (and therefore identical totals), not re-derived
+    numbers.  This is the property that makes ``autotune`` structurally
+    unable to drift from the traffic model."""
+    from repro.core.autotune import (
+        select_fused_schedule,
+        select_mbconv_schedule,
+    )
+
+    for layer in EFFICIENTNET_B0_MBCONV:
+        shape = _b0_shape(layer)
+        for mesh in SHARD_MESHES:
+            for res in RESIDENCY_MODES:
+                for coll in (None,) + COLLECTIVE_MODES:
+                    if coll == "psum_scatter" \
+                            and not can_psum_scatter(shape, mesh):
+                        continue
+                    sch = select_mbconv_schedule(
+                        shape, mesh_shape=mesh, residency=res,
+                        collective=coll)
+                    want = sharded_mbconv_traffic(
+                        shape, sch.tile_h, sch.mode, mesh,
+                        residency=sch.residency, collective=sch.collective)
+                    assert sch.sharded == want, (layer, mesh, res, coll)
+                    assert sch.total_bytes == want.total_bytes
+                    want_staged = sharded_mbconv_staged_traffic(
+                        shape, sch.tile_h, mesh, collective=sch.collective)
+                    assert sch.staged == want_staged, (layer, mesh, res,
+                                                       coll)
+                    assert sch.staged_total_bytes == want_staged.total_bytes
+
+    for layer, c_out in MOBILENET_V2_SEPARABLE:
+        shape = SeparableShape(b=8, h=layer.h, w=layer.w, c_in=layer.c,
+                               c_out=c_out, k=layer.k, s=layer.s)
+        for mesh in SHARD_MESHES:
+            for res in RESIDENCY_MODES:
+                sch = select_fused_schedule(shape, mesh_shape=mesh,
+                                            residency=res)
+                want = sharded_separable_traffic(
+                    shape, sch.tile_h, mesh, residency=sch.residency)
+                assert sch.sharded == want, (layer, c_out, mesh, res)
+                assert sch.total_bytes == want.total_bytes
+                assert sch.staged == sharded_separable_staged_traffic(
+                    shape, sch.tile_h, mesh), (layer, c_out, mesh, res)
+
+
+def test_psum_scatter_halves_projection_collective():
+    """The collective axis is real money: on (2, 4) the autotuner flips
+    at least one B0 layer to psum_scatter, its total never exceeds the
+    ring pin, and the modeled collective bytes land ~2x below the ring
+    (the squeeze term keeps the ratio just under 2)."""
+    from repro.core.autotune import select_mbconv_schedule
+
+    mesh = (2, 4)
+    scatter_picks = 0
+    for layer in EFFICIENTNET_B0_MBCONV:
+        shape = _b0_shape(layer)
+        auto = select_mbconv_schedule(shape, mesh_shape=mesh)
+        ring = select_mbconv_schedule(shape, mesh_shape=mesh,
+                                      collective="ring_allreduce")
+        assert auto.total_bytes <= ring.total_bytes, layer
+        assert ring.collective == "ring_allreduce"
+        if auto.collective == "psum_scatter":
+            scatter_picks += 1
+            # collective words do not depend on tile_h/mode/residency,
+            # so the ratio compares cleanly across the two solves
+            ratio = ring.collective_bytes / auto.collective_bytes
+            assert 1.8 < ratio <= 2.0, (layer, ratio)
+    assert scatter_picks > 0
+
+
+def test_psum_scatter_requires_divisible_c_out():
+    """A scatter pin on a partitioning that cannot run it must raise —
+    the model never describes a layout the kernels will reject — and the
+    auto solve quietly keeps the ring there."""
+    from repro.core.autotune import select_mbconv_schedule
+
+    shape = MBConvShape(b=8, h=14, w=14, c_in=80, c_mid=480, c_out=114,
+                        k=5, s=1)                      # 114 % 4 != 0
+    assert not can_psum_scatter(shape, (2, 4))
+    with pytest.raises(ValueError):
+        select_mbconv_schedule(shape, mesh_shape=(2, 4),
+                               collective="psum_scatter")
+    auto = select_mbconv_schedule(shape, mesh_shape=(2, 4))
+    assert auto.collective == "ring_allreduce"
+    # off-mesh the axis is degenerate: everything normalizes to the ring
+    off = select_mbconv_schedule(shape, mesh_shape=(1, 1))
+    assert off.collective == "ring_allreduce" and off.collective_words == 0
 
 
 def test_macs_conserved():
