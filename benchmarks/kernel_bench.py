@@ -264,6 +264,66 @@ def mbconv_collective_sweep(mesh_shape, residency=None) -> bool:
     return auto_ok and ring_ok and not worse
 
 
+def network_report(mesh_shape) -> bool:
+    """The network-level layout gate: solve the whole B0 chain (stem + 16
+    MBConv blocks + head boundary) with the layout DP and compare its
+    end-to-end modeled bytes against the greedy per-layer reference (the
+    PR-5 status quo: every block solved in isolation, every sharded exit
+    repaying its all-gather at the next replicated entry).  The
+    layout-transition bytes are their own column — greedy's repays are
+    exactly where the per-layer scatter win evaporates.
+
+    Gate: solved <= greedy always; on a model-sharded mesh additionally
+    solved STRICTLY below greedy with at least one adjacent chain pair
+    staying sharded across the boundary."""
+    from repro.core.autotune import (
+        greedy_network_schedule, network_rows_from_table,
+        solve_network_schedule,
+    )
+    b = 8 if mesh_shape != (1, 1) else 1
+    chain = network_rows_from_table(EFFICIENTNET_B0_MBCONV)
+    solved = solve_network_schedule(chain, b, mesh_shape)
+    greedy = greedy_network_schedule(chain, b, mesh_shape)
+    mb = 1e6
+    print(f"# network-level layout solve: mesh={mesh_shape[0]}x"
+          f"{mesh_shape[1]} batch={b} chain=stem+{len(chain)} blocks")
+    print("element,c_in,c_mid,c_out,hw,in_layout,out_layout,mode,"
+          "residency,collective,block_mb,transition_mb")
+    for plan, tag in ((solved, "solved"), (greedy, "greedy")):
+        print(f"# {tag} plan")
+        h0, w0, c0 = chain[0][0], chain[0][1], chain[0][2]
+        print(f"stem[{tag}],3,,{c0},{h0},,{plan.stem_layout},,,,"
+              f"{plan.stem_bytes / mb:.3f},0.000")
+        for p in plan.blocks:
+            sh = p.shape
+            trans = p.boundary_bytes + p.schedule.transition_bytes
+            print(f"b0_mbconv{p.index}[{tag}],{sh.c_in},{sh.c_mid},"
+                  f"{sh.c_out},{sh.h},{p.in_layout},{p.out_layout},"
+                  f"{p.schedule.mode},{p.schedule.residency},"
+                  f"{p.schedule.collective},"
+                  f"{p.schedule.total_bytes / mb:.3f},{trans / mb:.3f}")
+        print(f"head[{tag}],,,,,,,,,,0.000,"
+              f"{plan.head_boundary_words * plan.dtype_bytes / mb:.3f}")
+        print(f"# {tag} totals: stem={plan.stem_bytes / mb:.3f} MB, "
+              f"blocks={plan.block_bytes / mb:.3f} MB, "
+              f"transitions={plan.transition_bytes / mb:.3f} MB, "
+              f"end-to-end={plan.total_bytes / mb:.3f} MB")
+    pairs = solved.sharded_pairs
+    pair_label = ",".join(
+        f"{'stem' if a < 0 else f'block{a}'}->block{b_}" for a, b_ in pairs)
+    print(f"# sharded boundary pairs (solved): "
+          f"{pair_label or 'none'}")
+    ok = solved.total_bytes <= greedy.total_bytes
+    if mesh_shape[1] > 1:
+        ok &= solved.total_bytes < greedy.total_bytes and len(pairs) >= 1
+        print(f"# solved strictly below greedy with >=1 sharded pair: "
+              f"{ok} ({solved.total_bytes / mb:.3f} vs "
+              f"{greedy.total_bytes / mb:.3f} MB)")
+    else:
+        print(f"# solved <= greedy (degenerate mesh): {ok}")
+    return ok
+
+
 def mbconv_walltime_row():
     """Interpret-mode wall times + numerics check on one small MBConv block
     (fused two-pass vs staged vs the pure-lax reference).  Fused rows are
@@ -360,6 +420,12 @@ def main():
                          "layer AND the gate re-runs ring-pinned, requiring "
                          "the autotuned total <= the ring total), "
                          "ring_allreduce, or psum_scatter")
+    ap.add_argument("--network", action="store_true",
+                    help="with --fused: run the network-level layout DP "
+                         "over the whole B0 chain and gate its end-to-end "
+                         "modeled bytes against greedy per-layer picks "
+                         "(strictly lower, with >=1 boundary staying "
+                         "sharded, on a model-sharded mesh)")
     args = ap.parse_args()
     if args.mesh is not None and not args.fused:
         raise SystemExit("--mesh requires --fused")
@@ -373,6 +439,8 @@ def main():
         # and a pin would be silently normalized to the ring — reject
         # instead of mislabeling the report
         raise SystemExit("--collective requires --mesh DxM with M > 1")
+    if args.network and not args.fused:
+        raise SystemExit("--network requires --fused")
     if args.fused:
         mesh_shape = _parse_mesh(args.mesh) if args.mesh else (1, 1)
         collective = _parse_collective(args.collective)
@@ -386,6 +454,9 @@ def main():
                 r_ok, _totals = mbconv_traffic_report(mesh_shape, res,
                                                       collective)
                 ok &= r_ok
+            print()
+        if args.network:
+            ok &= network_report(mesh_shape)
             print()
         for name, us, derived in mbconv_walltime_row():
             print(f"{name},{us:.1f},{derived}")

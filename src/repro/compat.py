@@ -226,7 +226,7 @@ def _run_forwarding_probe() -> str:
         # forwarding rewrite).
         entry = jax.jit(lambda *arrays: _mbconv_sharded_op(
             *arrays, mesh, 1, "SAME", 1, "retain", None, "silu", True,
-            "strip_dma_db", "ring_allreduce"))
+            "strip_dma_db", "ring_allreduce", "replicated"))
 
         def loss(wd):
             out = entry(x, weights[0], wd, *weights[2:])
@@ -252,7 +252,7 @@ def _run_forwarding_probe() -> str:
         w_pw = arr(7, ci, co)
         sep_entry = jax.jit(lambda *arrays: _sep_sharded_op(
             *arrays, mesh, 1, "SAME", 1, None, None, True,
-            "strip_dma_db"))
+            "strip_dma_db", "ring_allreduce", "replicated"))
 
         def sep_loss(wd):
             return (sep_entry(x, wd, w_pw) ** 2).sum()

@@ -1,4 +1,14 @@
-from .base import SHAPES, ArchSpec, ShapeCell, get_arch, list_archs
+from .base import (
+    SHAPES,
+    ArchSpec,
+    SchedulePin,
+    ShapeCell,
+    get_arch,
+    kernel_config,
+    list_archs,
+    resolve_pin,
+    set_kernel_config,
+)
 from .efficientnet_b0 import (
     efficientnet_b0,
     efficientnet_b0_smoke,
@@ -6,6 +16,8 @@ from .efficientnet_b0 import (
 )
 from .specs import decode_state_specs, input_specs
 
-__all__ = ["SHAPES", "ArchSpec", "ShapeCell", "get_arch", "list_archs",
-           "input_specs", "decode_state_specs", "efficientnet_b0",
-           "efficientnet_b0_smoke", "efficientnet_b0_vlm"]
+__all__ = ["SHAPES", "ArchSpec", "SchedulePin", "ShapeCell", "get_arch",
+           "kernel_config", "list_archs", "resolve_pin",
+           "set_kernel_config", "input_specs", "decode_state_specs",
+           "efficientnet_b0", "efficientnet_b0_smoke",
+           "efficientnet_b0_vlm"]

@@ -16,9 +16,100 @@ Skips (DESIGN.md §Arch-applicability):
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Dict, Optional
 
 from ..models.model import ModelConfig
+
+# one warning per deprecation category per process — tests reset this set
+# to re-arm a category
+_WARNED: set = set()
+
+
+def _warn_once(key: str, msg: str) -> None:
+    if key in _WARNED:
+        return
+    _WARNED.add(key)
+    warnings.warn(msg, DeprecationWarning, stacklevel=3)
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulePin:
+    """One object pinning any subset of the solved schedule axes.
+
+    Collapses the per-axis pins that used to be scattered across
+    ``ConvKernelConfig`` (``fused_mbconv``/``mbconv_mode``/``residency``/
+    ``collective``/``shard_fused``) plus the new **layout** axis into a
+    single value the block entries take as ``pin=``.  Every field is
+    optional — ``None`` leaves that axis to the solver (or to the
+    config's legacy per-axis field, which still works behind a
+    deprecation shim):
+
+    * ``fused``: run the fused ConvDK pipeline (family-specific default:
+      ``fused_separable`` / ``fused_mbconv``);
+    * ``mode``: MBConv pass-2 DW source ("retain" | "recompute");
+    * ``residency``: input-staging mode ("resident" | "strip_dma" |
+      "strip_dma_db");
+    * ``collective``: projection-reduction layout under a model-sharded
+      mesh ("ring_allreduce" | "psum_scatter");
+    * ``layout``: the OUTPUT layout to leave the block in ("replicated" |
+      "model_sharded") — sugar over ``collective`` ("model_sharded"
+      requires the psum_scatter exit, "replicated" the ring); pinning
+      both to conflicting values raises;
+    * ``shard``: route through the ``shard_map`` wrappers when a mesh is
+      handed in (``shard_fused``).
+    """
+
+    fused: Optional[bool] = None
+    mode: Optional[str] = None
+    residency: Optional[str] = None
+    collective: Optional[str] = None
+    layout: Optional[str] = None
+    shard: Optional[bool] = None
+
+    def merged_over(self, other: "SchedulePin") -> "SchedulePin":
+        """This pin's explicit fields, falling back to ``other``'s."""
+        return SchedulePin(*(
+            a if a is not None else b
+            for a, b in zip(dataclasses.astuple(self),
+                            dataclasses.astuple(other))))
+
+    @property
+    def resolved_collective(self) -> Optional[str]:
+        """The collective the (collective, layout) pair pins, if any —
+        the layout axis is sugar: a "model_sharded" exit IS the
+        psum_scatter exit, a pinned "replicated" exit the ring."""
+        from_layout = {None: None, "replicated": "ring_allreduce",
+                       "model_sharded": "psum_scatter"}[self.layout]
+        if (self.collective is not None and from_layout is not None
+                and self.collective != from_layout):
+            raise ValueError(
+                f"pin conflict: collective={self.collective!r} vs "
+                f"layout={self.layout!r} (which implies {from_layout!r})")
+        return self.collective if self.collective is not None else from_layout
+
+
+# ConvKernelConfig fields that SchedulePin supersedes (the deprecation
+# shim in set_kernel_config warns once when they are set directly)
+_LEGACY_PIN_FIELDS = ("fused_separable", "fused_mbconv", "mbconv_mode",
+                      "residency", "collective", "shard_fused")
+
+
+def resolve_pin(cfg: "ConvKernelConfig", pin: Optional[SchedulePin] = None,
+                family: str = "mbconv") -> SchedulePin:
+    """The effective pin for one block call: explicit ``pin`` fields win
+    over ``cfg.pin`` fields, which win over the legacy per-axis config
+    fields (``family`` picks which fused toggle backs ``fused``)."""
+    assert family in ("mbconv", "separable"), family
+    base = cfg.pin if cfg.pin is not None else SchedulePin()
+    if pin is not None:
+        base = pin.merged_over(base)
+    legacy = SchedulePin(
+        fused=(cfg.fused_mbconv if family == "mbconv"
+               else cfg.fused_separable),
+        mode=cfg.mbconv_mode, residency=cfg.residency,
+        collective=cfg.collective, shard=cfg.shard_fused)
+    return base.merged_over(legacy)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,6 +156,7 @@ class ConvKernelConfig:
     shard_fused: bool = True
     tile_h: int = 8
     interpret: Optional[bool] = None
+    pin: Optional[SchedulePin] = None
 
 
 _KERNEL_CONFIG = ConvKernelConfig()
@@ -80,8 +172,20 @@ def set_kernel_config(**overrides) -> ConvKernelConfig:
 
     Example: ``set_kernel_config(fused_separable=False)`` to A/B the staged
     pipeline in benchmarks.
+
+    Setting the per-axis schedule pins directly (``mbconv_mode``,
+    ``residency``, ``collective``, the fused/shard toggles) still works
+    but is deprecated: pass ``pin=SchedulePin(...)`` instead — one object
+    carrying every pinned axis, including the new layout axis.
     """
     global _KERNEL_CONFIG
+    legacy = sorted(set(overrides) & set(_LEGACY_PIN_FIELDS))
+    if legacy:
+        _warn_once(
+            "set_kernel_config_axis_pins",
+            f"set_kernel_config({', '.join(legacy)}=...) pins schedule "
+            "axes through the legacy per-axis fields; pass "
+            "pin=SchedulePin(...) instead (one object, all axes)")
     _KERNEL_CONFIG = dataclasses.replace(_KERNEL_CONFIG, **overrides)
     return _KERNEL_CONFIG
 

@@ -44,13 +44,16 @@ import json
 import os
 import time
 from dataclasses import dataclass
+from functools import lru_cache
 from pathlib import Path
 from typing import Dict, Optional, Sequence, Tuple
 
 from .perfmodel import (
     COLLECTIVE_MODES,
     DEFAULT_COLLECTIVE,
+    DEFAULT_LAYOUT,
     DEFAULT_RESIDENCY,
+    LAYOUT_MODES,
     MBCONV_MODES,
     RESIDENCY_MODES,
     HBMTraffic,
@@ -58,6 +61,8 @@ from .perfmodel import (
     SeparableShape,
     ShardedTraffic,
     can_psum_scatter,
+    can_shard_input,
+    layout_transition_words,
     mbconv_shard,
     mbconv_staging_bytes,
     pick_channel_block,
@@ -69,6 +74,7 @@ from .perfmodel import (
     sharded_separable_staged_traffic,
     sharded_separable_traffic,
     validate_collective,
+    validate_layout,
     validate_residency,
 )
 
@@ -138,6 +144,27 @@ class _ScheduleTraffic:
     @property
     def collective_bytes(self) -> int:
         return self.sharded.collective_bytes
+
+    @property
+    def in_layout(self) -> str:
+        """Input layout the schedule was priced for (layout axis)."""
+        return self.sharded.in_layout
+
+    @property
+    def out_layout(self) -> str:
+        """Layout the block's output leaves in (sharded on c_out after a
+        psum_scatter pass-2, replicated otherwise)."""
+        return self.sharded.out_layout
+
+    @property
+    def transition_words(self) -> int:
+        return self.sharded.transition_words
+
+    @property
+    def transition_bytes(self) -> int:
+        """Entry-side layout repay (the all-gather a real-expand block
+        pays to consume a c_in-sharded arrival)."""
+        return self.sharded.transition_bytes
 
     @property
     def total_bytes(self) -> int:
@@ -237,7 +264,7 @@ class ScheduleCache:
 
     @staticmethod
     def _migrate_key(key: str) -> str:
-        """Upgrade legacy cache keys in place, chaining the three schema
+        """Upgrade legacy cache keys in place, chaining the four schema
         migrations so measured sweeps keep outranking model picks instead
         of being silently orphaned:
 
@@ -252,7 +279,12 @@ class ScheduleCache:
           solved before the projection-reduction layout was an axis —
           they ARE the ``coll=auto`` picks (the collective is re-solved
           at the entry's (tile_h, mode, residency); separable keys never
-          grow the segment — that partitioning is collective-free)."""
+          grow the segment — that partitioning is collective-free);
+        * pre-layout MBConv entries (no ``layout=`` segment) were all
+          solved for a REPLICATED input arrival — the only entry form
+          that existed — so they ARE the ``layout=replicated`` picks
+          (unlike residency/collective this axis is a dataflow fact the
+          caller states, not a solver choice, so there is no ``auto``)."""
         parts = key.split("|")
         if len(parts) == 5 and parts[0] in ("sep", "mbconv") \
                 and not parts[3].startswith("mesh"):
@@ -266,6 +298,11 @@ class ScheduleCache:
                 and parts[4].startswith("res=") \
                 and not parts[5].startswith("coll="):
             parts.insert(5, "coll=auto")
+        if len(parts) >= 8 and parts[0] == "mbconv" \
+                and parts[4].startswith("res=") \
+                and parts[5].startswith("coll=") \
+                and not parts[6].startswith("layout="):
+            parts.insert(6, "layout=replicated")
         return "|".join(parts)
 
     def _load_disk(self) -> Dict[str, dict]:
@@ -363,17 +400,31 @@ def _res_segment(residency: Optional[str]) -> str:
 
 def _sep_key(shape: SeparableShape, tpu: TPUConfig,
              mesh_shape: MeshShape = (1, 1),
-             residency: Optional[str] = None) -> str:
+             residency: Optional[str] = None,
+             in_layout: str = DEFAULT_LAYOUT,
+             collective: str = DEFAULT_COLLECTIVE) -> str:
     """Schedule-cache key.  The EFFECTIVE mesh factors are part of the key:
     a schedule solved for one partitioning (per-device shard shapes, psum
     terms, VMEM headroom) must never be echoed for another — sharded and
     unsharded picks live in distinct entries.  Likewise the requested
-    residency (``res=auto`` when the solver chooses)."""
+    residency (``res=auto`` when the solver chooses).  The sharded-c_in
+    entry form gets its own entries via an APPENDED segment (the default
+    replicated key format — and its migration chain — is untouched; the
+    classic separable partitioning is collective-free, so only the
+    sharded-in form carries a collective)."""
     dp, mp = shard_factors(shape.b, shape.c_out, mesh_shape)
+    suffix = ""
+    if validate_layout(in_layout) != DEFAULT_LAYOUT:
+        # the sharded-in form partitions on c_in, so its EFFECTIVE factors
+        # differ from the base key's c_out-derived mesh segment
+        dpi, mpi = shard_factors(shape.b, shape.c_in, mesh_shape)
+        suffix = (f"|inlay={in_layout}"
+                  f"|coll={validate_collective(collective)}"
+                  f"|inmesh{dpi}x{mpi}")
     return (f"sep|b{shape.b}-h{shape.h}-w{shape.w}-ci{shape.c_in}"
             f"-co{shape.c_out}-k{shape.k}-s{shape.s}|dtb{shape.dtype_bytes}"
             f"|mesh{dp}x{mp}|{_res_segment(residency)}|{_tpu_key(tpu)}"
-            f"|{_backend()}")
+            f"|{_backend()}{suffix}")
 
 
 def _coll_segment(collective: Optional[str]) -> str:
@@ -384,11 +435,20 @@ def _coll_segment(collective: Optional[str]) -> str:
     return f"coll={collective or 'auto'}"
 
 
+def _layout_segment(in_layout: str) -> str:
+    """Key segment for the input-layout the schedule is priced for.  This
+    axis has no ``auto``: the arrival layout is a dataflow fact the caller
+    (or the network-level DP) states — legacy keys migrate into
+    ``layout=replicated``, the only entry form that existed."""
+    return f"layout={validate_layout(in_layout)}"
+
+
 def _mbconv_key(shape: MBConvShape, tpu: TPUConfig,
                 mesh_shape: MeshShape = (1, 1),
                 residency: Optional[str] = None,
                 mode: Optional[str] = None,
-                collective: Optional[str] = None) -> str:
+                collective: Optional[str] = None,
+                in_layout: str = DEFAULT_LAYOUT) -> str:
     dp, mp = shard_factors(shape.b, shape.c_mid, mesh_shape)
     # a pinned pass-2 mode gets its OWN entries (appended segment, so the
     # unpinned key format — and its migration chain — is untouched): a
@@ -399,6 +459,7 @@ def _mbconv_key(shape: MBConvShape, tpu: TPUConfig,
             f"-cm{shape.c_mid}-co{shape.c_out}-k{shape.k}-s{shape.s}"
             f"|dtb{shape.dtype_bytes}|mesh{dp}x{mp}"
             f"|{_res_segment(residency)}|{_coll_segment(collective)}"
+            f"|{_layout_segment(in_layout)}"
             f"|{_tpu_key(tpu)}|{_backend()}{pin}")
 
 
@@ -444,10 +505,10 @@ def _collective_set(shape: MBConvShape, eff: MeshShape,
     crosses devices, so everything normalizes to the ring default — a
     scatter pin is meaningless there and is ignored rather than cached as
     a distinct non-schedule.  On-mesh, ``None`` enumerates the ring plus
-    (where ``c_out`` divides the model groups) the psum_scatter pass-2
-    variant; a pin restricts to that mode, raising when the pinned
-    scatter is not runnable — the solver must never describe a layout the
-    kernels will reject."""
+    the psum_scatter pass-2 variant — non-dividing c_out no longer
+    rejects a scatter: the kernel zero-pads the projection columns to
+    the model factor and the model prices the padded payload
+    (``perfmodel.scatter_c_out``)."""
     _dp, mp = eff
     if mp <= 1:
         return (DEFAULT_COLLECTIVE,)
@@ -456,10 +517,6 @@ def _collective_set(shape: MBConvShape, eff: MeshShape,
             return COLLECTIVE_MODES
         return (DEFAULT_COLLECTIVE,)
     validate_collective(collective)
-    if collective == "psum_scatter" and not can_psum_scatter(shape, eff):
-        raise ValueError(
-            f"psum_scatter pinned but c_out={shape.c_out} does not divide "
-            f"over model={mp}")
     return (collective,)
 
 
@@ -497,15 +554,18 @@ def _residency_set(residency: Optional[str]) -> Tuple[str, ...]:
 def candidate_schedules(
     shape: SeparableShape, tpu: TPUConfig = TPUConfig(),
     mesh_shape: MeshShape = (1, 1), residency: Optional[str] = None,
+    in_layout: str = DEFAULT_LAYOUT, collective: str = DEFAULT_COLLECTIVE,
 ) -> Tuple[FusedSchedule, ...]:
     """All VMEM-feasible (tile_h, residency) schedules, model-priced.
 
     ``residency=None`` enumerates every staging mode (the solver's
     default); a pinned mode restricts the candidate set.  Under a mesh,
     feasibility and channel blocks are solved at the PER-DEVICE shard
-    shape (batch/data, c_out/model) — a shard has more VMEM headroom per
-    channel block than the whole layer."""
-    local, eff = separable_shard(shape, mesh_shape)
+    shape — batch/data with c_out/model for the default replicated entry,
+    or c_in/model (full c_out, PW partial reduced per ``collective``) for
+    the ``model_sharded`` entry form."""
+    validate_layout(in_layout)
+    local, eff = separable_shard(shape, mesh_shape, in_layout)
     ci = pick_channel_block(local.c_in, tpu.c_block)
     co = _blocks(local.c_out, tpu.c_block)
     out: list[FusedSchedule] = []
@@ -521,7 +581,7 @@ def candidate_schedules(
         out.append(FusedSchedule(
             tile_h=th, ci_block=ci, co_block=co,
             sharded=sharded_separable_traffic(shape, th, eff, tpu.c_block,
-                                              res),
+                                              res, in_layout, collective),
             staged=sharded_separable_staged_traffic(shape, th, eff,
                                                     tpu.c_block),
             residency=res,
@@ -532,27 +592,31 @@ def candidate_schedules(
 def select_fused_schedule(
     shape: SeparableShape, tpu: TPUConfig = TPUConfig(),
     mesh_shape: MeshShape = (1, 1), residency: Optional[str] = None,
+    in_layout: str = DEFAULT_LAYOUT, collective: str = DEFAULT_COLLECTIVE,
 ) -> FusedSchedule:
     """Pick the (tile_h, residency) minimizing modeled total traffic —
     per-device HBM bytes across all devices plus collectives (ties ->
     larger tile_h: fewer grid cells, bigger MXU contractions; then the
     residency rank: double-buffered DMA > single-slot DMA > resident,
     since equal bytes moved earlier hide latency)."""
-    cands = candidate_schedules(shape, tpu, mesh_shape, residency)
+    cands = candidate_schedules(shape, tpu, mesh_shape, residency,
+                                in_layout, collective)
     return min(cands, key=lambda c: (c.total_bytes, -c.tile_h,
                                      _RESIDENCY_RANK[c.residency]))
 
 
 def _schedule_at(shape: SeparableShape, tile_h: int, tpu: TPUConfig,
                  mesh_shape: MeshShape = (1, 1),
-                 residency: str = DEFAULT_RESIDENCY) -> FusedSchedule:
-    local, eff = separable_shard(shape, mesh_shape)
+                 residency: str = DEFAULT_RESIDENCY,
+                 in_layout: str = DEFAULT_LAYOUT,
+                 collective: str = DEFAULT_COLLECTIVE) -> FusedSchedule:
+    local, eff = separable_shard(shape, mesh_shape, in_layout)
     return FusedSchedule(
         tile_h=tile_h,
         ci_block=pick_channel_block(local.c_in, tpu.c_block),
         co_block=_blocks(local.c_out, tpu.c_block),
         sharded=sharded_separable_traffic(shape, tile_h, eff, tpu.c_block,
-                                          residency),
+                                          residency, in_layout, collective),
         staged=sharded_separable_staged_traffic(shape, tile_h, eff,
                                                 tpu.c_block),
         residency=residency,
@@ -560,17 +624,18 @@ def _schedule_at(shape: SeparableShape, tile_h: int, tpu: TPUConfig,
 
 
 def _solve_residency_at(shape: SeparableShape, tile_h: int, tpu: TPUConfig,
-                        mesh_shape: MeshShape) -> str:
+                        mesh_shape: MeshShape,
+                        in_layout: str = DEFAULT_LAYOUT) -> str:
     """Best residency at a FIXED tile_h (legacy cache entries pin tile_h
     but predate the residency axis): min bytes among VMEM-feasible modes,
     ties broken by the residency rank."""
-    local, eff = separable_shard(shape, mesh_shape)
+    local, eff = separable_shard(shape, mesh_shape, in_layout)
     modes = [res for res in RESIDENCY_MODES
              if vmem_footprint_bytes(local, tile_h, tpu, res)
              <= tpu.vmem_bytes] or ["strip_dma"]
     return min(modes, key=lambda res: (
-        sharded_separable_traffic(shape, tile_h, eff, tpu.c_block,
-                                  res).device.total_bytes,
+        sharded_separable_traffic(shape, tile_h, eff, tpu.c_block, res,
+                                  in_layout).device.total_bytes,
         _RESIDENCY_RANK[res]))
 
 
@@ -578,6 +643,7 @@ def get_fused_schedule(
     b: int, h: int, w: int, c_in: int, c_out: int, k: int, s: int,
     dtype_bytes: int = 4, tpu: TPUConfig = TPUConfig(),
     mesh_shape: MeshShape = (1, 1), residency: Optional[str] = None,
+    in_layout: str = DEFAULT_LAYOUT, collective: str = DEFAULT_COLLECTIVE,
 ) -> FusedSchedule:
     """Cached per-layer-shape schedule lookup (trace-time safe).
 
@@ -586,19 +652,23 @@ def get_fused_schedule(
     ``mesh_shape`` is the ("data", "model") partitioning the schedule will
     run under and ``residency`` the requested staging pin (None = solver's
     choice) — both are cache-key axes, so different partitionings or pins
-    never collide.  Legacy entries (pre-residency) keep their tile_h
-    priority; the residency is re-solved at that tile_h."""
+    never collide; the sharded-c_in entry form (``in_layout`` +
+    ``collective``) gets its own appended key segments.  Legacy entries
+    (pre-residency) keep their tile_h priority; the residency is
+    re-solved at that tile_h."""
     shape = SeparableShape(b=b, h=h, w=w, c_in=c_in, c_out=c_out, k=k, s=s,
                            dtype_bytes=dtype_bytes)
     cache = get_schedule_cache()
-    key = _sep_key(shape, tpu, mesh_shape, residency)
+    key = _sep_key(shape, tpu, mesh_shape, residency, in_layout, collective)
     hit = cache.get(key)
     tile_h = _entry_tile_h(hit, shape.out_h) if hit is not None else None
     if tile_h is not None:
         res = residency or _entry_residency(hit) \
-            or _solve_residency_at(shape, tile_h, tpu, mesh_shape)
-        return _schedule_at(shape, tile_h, tpu, mesh_shape, res)
-    sched = select_fused_schedule(shape, tpu, mesh_shape, residency)
+            or _solve_residency_at(shape, tile_h, tpu, mesh_shape, in_layout)
+        return _schedule_at(shape, tile_h, tpu, mesh_shape, res,
+                            in_layout, collective)
+    sched = select_fused_schedule(shape, tpu, mesh_shape, residency,
+                                  in_layout, collective)
     cache.put(key, {"tile_h": sched.tile_h, "residency": sched.residency,
                     "source": "model", "recorded_at": time.time()})
     return sched
@@ -640,6 +710,7 @@ def candidate_mbconv_schedules(
     shape: MBConvShape, tpu: TPUConfig = TPUConfig(),
     mesh_shape: MeshShape = (1, 1), residency: Optional[str] = None,
     mode: Optional[str] = None, collective: Optional[str] = None,
+    in_layout: str = DEFAULT_LAYOUT,
 ) -> Tuple[MBConvSchedule, ...]:
     """All VMEM-feasible (tile_h, mode, residency, collective) schedules,
     model-priced.
@@ -652,13 +723,21 @@ def candidate_mbconv_schedules(
     retain/recompute crossover therefore re-solves per partitioning — a
     shard's DW slice is mp-fold cheaper to retain than the whole expanded
     tensor.  The **collective** axis (projection reduction layout) only
-    exists on-mesh: ring all-reduce always, psum_scatter where c_out
-    divides the model groups (``_collective_set``); it does not enter the
-    VMEM check — both layouts run the identical kernels."""
+    exists on-mesh: ring all-reduce always, psum_scatter on any on-mesh
+    layer (non-dividing c_out pads to the model factor); it does not
+    enter the VMEM check — both layouts run the identical kernels.
+
+    ``in_layout`` is the ARRIVAL layout of the block input (a dataflow
+    fact, not a solver axis): an identity-expand block consumes a
+    ``model_sharded`` arrival collective-free with c_in sharded alongside
+    c_mid (feasibility and channel blocks re-solved at the smaller
+    shard), while a real expand prices the entry all-gather it must pay
+    (``ShardedTraffic.transition_words``)."""
     if mode is not None and mode not in MBCONV_MODES:
         raise ValueError(mode)
+    validate_layout(in_layout)
     modes = MBCONV_MODES if mode is None else (mode,)
-    local, eff = mbconv_shard(shape, mesh_shape)
+    local, eff = mbconv_shard(shape, mesh_shape, in_layout)
     colls = _collective_set(shape, eff, collective)
     ci = pick_channel_block(local.c_in, tpu.c_block)
     cm = pick_channel_block(local.c_mid, tpu.c_block)
@@ -681,11 +760,12 @@ def candidate_mbconv_schedules(
             seen.add((th, md, res, coll))
             if (th, coll) not in staged_cache:
                 staged_cache[th, coll] = sharded_mbconv_staged_traffic(
-                    shape, th, eff, tpu.c_block, coll)
+                    shape, th, eff, tpu.c_block, coll, in_layout)
             out.append(MBConvSchedule(
                 tile_h=th, mode=md, ci_block=ci, cm_block=cm, co_block=co,
                 sharded=sharded_mbconv_traffic(shape, th, md, eff,
-                                               tpu.c_block, res, coll),
+                                               tpu.c_block, res, coll,
+                                               in_layout),
                 staged=staged_cache[th, coll],
                 residency=res,
             ))
@@ -696,14 +776,16 @@ def select_mbconv_schedule(
     shape: MBConvShape, tpu: TPUConfig = TPUConfig(),
     mesh_shape: MeshShape = (1, 1), residency: Optional[str] = None,
     mode: Optional[str] = None, collective: Optional[str] = None,
+    in_layout: str = DEFAULT_LAYOUT,
 ) -> MBConvSchedule:
     """Pick (tile_h, mode, residency, collective) minimizing modeled total
     two-pass traffic (ties -> larger tile_h, then retain: one DW
     round-trip beats recompute MACs; then the residency rank, then the
     ring default).  ``mode``/``residency``/``collective`` pins restrict
-    the solve."""
+    the solve; ``in_layout`` states the arrival layout the schedule must
+    be priced for."""
     cands = candidate_mbconv_schedules(shape, tpu, mesh_shape, residency,
-                                       mode, collective)
+                                       mode, collective, in_layout)
     return min(cands, key=lambda c: (c.total_bytes, -c.tile_h,
                                      c.mode != "retain",
                                      _RESIDENCY_RANK[c.residency],
@@ -713,49 +795,55 @@ def select_mbconv_schedule(
 def _mbconv_schedule_at(shape: MBConvShape, tile_h: int, mode: str,
                         tpu: TPUConfig, mesh_shape: MeshShape = (1, 1),
                         residency: str = DEFAULT_RESIDENCY,
-                        collective: str = DEFAULT_COLLECTIVE
+                        collective: str = DEFAULT_COLLECTIVE,
+                        in_layout: str = DEFAULT_LAYOUT
                         ) -> MBConvSchedule:
-    local, eff = mbconv_shard(shape, mesh_shape)
+    local, eff = mbconv_shard(shape, mesh_shape, in_layout)
     if eff[1] <= 1:
         collective = DEFAULT_COLLECTIVE   # degenerate axis: nothing crosses
+        in_layout = DEFAULT_LAYOUT
     return MBConvSchedule(
         tile_h=tile_h, mode=mode,
         ci_block=pick_channel_block(local.c_in, tpu.c_block),
         cm_block=pick_channel_block(local.c_mid, tpu.c_block),
         co_block=_blocks(local.c_out, tpu.c_block),
         sharded=sharded_mbconv_traffic(shape, tile_h, mode, eff,
-                                       tpu.c_block, residency, collective),
+                                       tpu.c_block, residency, collective,
+                                       in_layout),
         staged=sharded_mbconv_staged_traffic(shape, tile_h, eff,
-                                             tpu.c_block, collective),
+                                             tpu.c_block, collective,
+                                             in_layout),
         residency=residency,
     )
 
 
 def _solve_mbconv_residency_at(shape: MBConvShape, tile_h: int, mode: str,
-                               tpu: TPUConfig, mesh_shape: MeshShape) -> str:
+                               tpu: TPUConfig, mesh_shape: MeshShape,
+                               in_layout: str = DEFAULT_LAYOUT) -> str:
     """Best residency at a FIXED (tile_h, mode) — see
     ``_solve_residency_at``.  Collective words are residency-invariant,
     so per-device bytes decide."""
-    local, eff = mbconv_shard(shape, mesh_shape)
+    local, eff = mbconv_shard(shape, mesh_shape, in_layout)
     modes = [res for res in RESIDENCY_MODES
              if mbconv_vmem_footprint_bytes(local, tile_h, tpu, res, mode)
              <= tpu.vmem_bytes] or ["strip_dma"]
     return min(modes, key=lambda res: (
         sharded_mbconv_traffic(shape, tile_h, mode, eff, tpu.c_block,
-                               res).device.total_bytes,
+                               res, in_layout=in_layout).device.total_bytes,
         _RESIDENCY_RANK[res]))
 
 
 def _solve_mbconv_collective_at(shape: MBConvShape, tile_h: int, mode: str,
                                 tpu: TPUConfig, mesh_shape: MeshShape,
-                                residency: str) -> str:
+                                residency: str,
+                                in_layout: str = DEFAULT_LAYOUT) -> str:
     """Best collective at a FIXED (tile_h, mode, residency) — legacy
     cache entries predate the collective axis: min total bytes among the
     runnable layouts, ties to the ring default."""
-    _local, eff = mbconv_shard(shape, mesh_shape)
+    _local, eff = mbconv_shard(shape, mesh_shape, in_layout)
     return min(_collective_set(shape, eff, None), key=lambda coll: (
         sharded_mbconv_traffic(shape, tile_h, mode, eff, tpu.c_block,
-                               residency, coll).total_bytes,
+                               residency, coll, in_layout).total_bytes,
         _COLLECTIVE_RANK[coll]))
 
 
@@ -764,7 +852,7 @@ def get_mbconv_schedule(
     s: int, se_ratio: float = 0.25, dtype_bytes: int = 4,
     tpu: TPUConfig = TPUConfig(), mesh_shape: MeshShape = (1, 1),
     residency: Optional[str] = None, mode: Optional[str] = None,
-    collective: Optional[str] = None,
+    collective: Optional[str] = None, in_layout: str = DEFAULT_LAYOUT,
 ) -> MBConvSchedule:
     """Cached per-layer-shape two-pass schedule lookup (trace-time safe).
 
@@ -773,13 +861,18 @@ def get_mbconv_schedule(
     pass-2 mode solves tile_h and residency under that mode's VMEM
     footprint instead of echoing a schedule solved for the other mode,
     and a pinned collective prices (and caches) under that reduction
-    layout only.  Legacy entries keep their (tile_h, mode) priority with
-    the residency — and, for pre-collective entries, the collective —
-    re-solved at that point."""
+    layout only.  ``in_layout`` (the arrival layout — a dataflow fact the
+    caller states) is a key axis too: a schedule feasibility-checked at
+    the c_in-sharded entry shape must never be echoed for a replicated
+    arrival.  Legacy entries keep their (tile_h, mode) priority with the
+    residency — and, for pre-collective entries, the collective —
+    re-solved at that point; pre-layout entries migrate into
+    ``layout=replicated`` (the only entry form that existed)."""
     shape = MBConvShape(b=b, h=h, w=w, c_in=c_in, c_mid=c_mid, c_out=c_out,
                         k=k, s=s, se_ratio=se_ratio, dtype_bytes=dtype_bytes)
     cache = get_schedule_cache()
-    key = _mbconv_key(shape, tpu, mesh_shape, residency, mode, collective)
+    key = _mbconv_key(shape, tpu, mesh_shape, residency, mode, collective,
+                      in_layout)
     hit = cache.get(key)
     tile_h = _entry_tile_h(hit, shape.out_h) if hit is not None else None
     hit_mode = hit.get("mode") if isinstance(hit, dict) else None
@@ -787,19 +880,313 @@ def get_mbconv_schedule(
             and (mode is None or hit_mode == mode):
         res = residency or _entry_residency(hit) \
             or _solve_mbconv_residency_at(shape, tile_h, hit_mode, tpu,
-                                          mesh_shape)
+                                          mesh_shape, in_layout)
         coll = collective or _entry_collective(hit) \
             or _solve_mbconv_collective_at(shape, tile_h, hit_mode, tpu,
-                                           mesh_shape, res)
+                                           mesh_shape, res, in_layout)
         return _mbconv_schedule_at(shape, tile_h, hit_mode, tpu,
-                                   mesh_shape, res, coll)
+                                   mesh_shape, res, coll, in_layout)
     sched = select_mbconv_schedule(shape, tpu, mesh_shape, residency, mode,
-                                   collective)
+                                   collective, in_layout)
     cache.put(key, {"tile_h": sched.tile_h, "mode": sched.mode,
                     "residency": sched.residency,
-                    "collective": sched.collective, "source": "model",
+                    "collective": sched.collective,
+                    "in_layout": sched.in_layout, "source": "model",
                     "recorded_at": time.time()})
     return sched
+
+
+# ---------------------------------------------------------------------------
+# network-level layout solving (MIREDO-style chain DP)
+#
+# PR 5's per-layer solver flips every on-mesh B0 block to psum_scatter —
+# but a per-layer pick cannot see that no consumer keeps the c_out-sharded
+# output, so chained blocks silently repay the all-gather at the next
+# entry and the scatter win cancels exactly (scatter + repay-gather ==
+# ring, word for word — the collective accounting makes that an identity,
+# not an estimate).  The DP below solves the CHAIN: states are boundary
+# layouts, per-element costs come from ``select_mbconv_schedule`` under
+# pinned (collective, in_layout), and boundary transitions are priced by
+# ``perfmodel.layout_transition_words``.  The strict network-level win
+# comes from the two places the tie theorem does not apply:
+#
+# * the stem boundary — a model-sharded stem output is materialized once
+#   per element instead of once per device of each model group, and
+# * identity-expand consumers (B0's block0 is the only e == 1 block) —
+#   their entry takes a c_in-sharded arrival collective-free with every
+#   pass-1 strip read shrunk by the model factor.
+#
+# Every e > 1 boundary provably ties: the dense expand needs ALL of c_in
+# on every device, so a sharded arrival must be gathered back (priced as
+# ``transition_words``), and scatter+gather == ring.  The DP therefore
+# keeps interior boundaries replicated (ring exits) and shards exactly
+# the boundaries that pay — reversing PR 5's scatter-everywhere greedy.
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class BlockPlan:
+    """One chain element's solved assignment inside a ``NetworkPlan``."""
+
+    index: int
+    shape: MBConvShape
+    in_layout: str               # arrival layout the entry consumes
+    out_layout: str              # layout the output leaves in
+    schedule: MBConvSchedule     # per-layer solve under the pinned axes
+    boundary_words: int          # all-gather repay paid AT this entry
+
+    @property
+    def boundary_bytes(self) -> int:
+        return self.boundary_words * self.shape.dtype_bytes
+
+
+@dataclass(frozen=True)
+class NetworkPlan:
+    """A solved (or greedy-reference) layout chain for a block sequence.
+
+    The chain is the stem output plus every MBConv block: the stem is
+    element 0 of the dataflow (its output materialization is priced per
+    layout — a replicated stem writes the full activation on every device
+    of each model group; a sharded one writes each element once), then
+    each block carries its per-layer schedule plus the boundary repay its
+    entry paid.  ``head_boundary_words`` is the final repay when the last
+    block's output leaves sharded but the head consumes replicated."""
+
+    mesh_shape: MeshShape
+    stem_layout: str
+    stem_words: int              # stem output materialization, mesh-wide
+    blocks: Tuple[BlockPlan, ...]
+    head_boundary_words: int
+    dtype_bytes: int = 4
+    policy: str = "solved"       # "solved" (DP) | "greedy" (per-layer)
+
+    @property
+    def stem_bytes(self) -> int:
+        return self.stem_words * self.dtype_bytes
+
+    @property
+    def block_bytes(self) -> int:
+        return sum(p.schedule.total_bytes for p in self.blocks)
+
+    @property
+    def boundary_words(self) -> int:
+        return (sum(p.boundary_words for p in self.blocks)
+                + self.head_boundary_words)
+
+    @property
+    def transition_bytes(self) -> int:
+        """All layout-transition bytes in the chain: the boundary repays
+        (including the head's) plus any entry-internal gathers the
+        per-layer schedules carry."""
+        return (self.boundary_words * self.dtype_bytes
+                + sum(p.schedule.transition_bytes for p in self.blocks))
+
+    @property
+    def total_bytes(self) -> int:
+        return (self.stem_bytes + self.block_bytes
+                + self.boundary_words * self.dtype_bytes)
+
+    @property
+    def sharded_pairs(self) -> Tuple[Tuple[int, int], ...]:
+        """Adjacent chain pairs whose boundary STAYS sharded (producer
+        leaves model_sharded, consumer enters model_sharded).  Indices
+        are chain positions with the stem as -1."""
+        pairs = []
+        prev_idx, prev_lay = -1, self.stem_layout
+        for p in self.blocks:
+            if prev_lay == "model_sharded" and p.in_layout == "model_sharded":
+                pairs.append((prev_idx, p.index))
+            prev_idx, prev_lay = p.index, p.out_layout
+        return tuple(pairs)
+
+
+def _stem_words(b: int, h: int, w: int, c: int, mesh_shape: MeshShape,
+                layout: str) -> int:
+    """Mesh-wide words the stem output materializes under one boundary
+    layout.  Replicated: every device of each model group writes its data
+    group's full (B_local, H, W, C) activation — mp copies of the tensor.
+    Model-sharded: each element is written exactly once mesh-wide.  Batch
+    is assumed data-divisible (it is for every B0 bench shape); the model
+    factor only applies when the stem channels actually divide."""
+    validate_layout(layout)
+    dp, mp = shard_factors(b, c, mesh_shape)
+    full = b * h * w * c
+    if layout == "model_sharded" and mp > 1:
+        return full
+    return full * max(1, mesh_shape[1])
+
+
+def _chain_shapes(rows: Sequence[Tuple[int, ...]], b: int,
+                  se_ratio: float, dtype_bytes: int
+                  ) -> Tuple[MBConvShape, ...]:
+    """Rows (h, w, c_in, c_mid, c_out, k, s) -> per-block MBConvShapes."""
+    return tuple(
+        MBConvShape(b=b, h=h, w=w, c_in=ci, c_mid=cm, c_out=co, k=k, s=s,
+                    se_ratio=se_ratio, dtype_bytes=dtype_bytes)
+        for h, w, ci, cm, co, k, s in rows)
+
+
+def network_rows_from_table(
+    table: Sequence[Tuple[int, int, int, int, int, int]]
+) -> Tuple[Tuple[int, int, int, int, int, int, int], ...]:
+    """Adapt a ``core.workloads`` MBConv table — rows of (c_in, c_out,
+    expand_ratio, k, s, ifmap hw) — into the (h, w, c_in, c_mid, c_out,
+    k, s) chain rows the network solver consumes."""
+    return tuple((hw, hw, ci, ci * e, co, k, s)
+                 for ci, co, e, k, s, hw in table)
+
+
+def _allowed_in_layouts(shape: MBConvShape,
+                        mesh_shape: MeshShape) -> Tuple[str, ...]:
+    """Arrival layouts worth offering the DP: replicated always; a
+    model-sharded arrival only where the entry consumes it collective-free
+    (identity expand — a real expand's entry gather makes sharded-in
+    byte-identical to a boundary repay, so enumerating it only duplicates
+    the replicated state)."""
+    if can_shard_input(shape, mesh_shape):
+        return (DEFAULT_LAYOUT, "model_sharded")
+    return (DEFAULT_LAYOUT,)
+
+
+def _allowed_out_layouts(shape: MBConvShape,
+                         mesh_shape: MeshShape) -> Tuple[str, ...]:
+    _dp, mp = shard_factors(shape.b, shape.c_mid, mesh_shape)
+    if mp > 1:
+        return (DEFAULT_LAYOUT, "model_sharded")
+    return (DEFAULT_LAYOUT,)
+
+
+def solve_network_schedule(
+    rows: Sequence[Tuple[int, ...]], b: int,
+    mesh_shape: MeshShape = (1, 1), tpu: TPUConfig = TPUConfig(),
+    dtype_bytes: int = 4, se_ratio: float = 0.25,
+) -> NetworkPlan:
+    """DP over the block chain picking per-block (residency, collective,
+    in-layout, out-layout) jointly to minimize total modeled bytes.
+
+    ``rows`` are (h, w, c_in, c_mid, c_out, k, s) per block (see
+    ``network_rows_from_table``); the stem boundary is seeded from the
+    first block's input.  States are boundary layouts; each (state,
+    in-layout, out-layout) candidate prices as the boundary transition
+    plus the per-layer solve under the pinned (collective, in_layout) —
+    tile_h, mode and residency re-solved by ``select_mbconv_schedule``
+    inside the pin.  Byte ties prefer replicated boundaries (candidates
+    are enumerated replicated-first and only a STRICT improvement
+    replaces a state), so the plan shards exactly the boundaries that
+    pay."""
+    shapes = _chain_shapes(rows, b, se_ratio, dtype_bytes)
+    if not shapes:
+        raise ValueError("network solve needs at least one block row")
+    h0, w0, c0 = shapes[0].h, shapes[0].w, shapes[0].c_in
+    _dp0, mp0 = shard_factors(b, c0, mesh_shape)
+    stem_opts = [DEFAULT_LAYOUT] + (["model_sharded"] if mp0 > 1 else [])
+    # state: boundary layout -> (cost bytes, stem layout, block plans)
+    states: Dict[str, tuple] = {}
+    for lay in stem_opts:
+        cost = _stem_words(b, h0, w0, c0, mesh_shape, lay) * dtype_bytes
+        cur = states.get(lay)
+        if cur is None or cost < cur[0]:
+            states[lay] = (cost, lay, ())
+    prev_dims = (h0, w0, c0)
+    for i, shape in enumerate(shapes):
+        new_states: Dict[str, tuple] = {}
+        for prev_lay, (cost, stem_lay, plans) in states.items():
+            for in_lay in _allowed_in_layouts(shape, mesh_shape):
+                bwords = layout_transition_words(
+                    b, prev_dims[0], prev_dims[1], prev_dims[2],
+                    mesh_shape, prev_lay, in_lay)
+                for out_lay in _allowed_out_layouts(shape, mesh_shape):
+                    coll = ("psum_scatter" if out_lay == "model_sharded"
+                            else DEFAULT_COLLECTIVE)
+                    sch = select_mbconv_schedule(
+                        shape, tpu, mesh_shape, collective=coll,
+                        in_layout=in_lay)
+                    total = (cost + bwords * dtype_bytes + sch.total_bytes)
+                    plan = BlockPlan(
+                        index=i, shape=shape, in_layout=sch.in_layout,
+                        out_layout=sch.out_layout, schedule=sch,
+                        boundary_words=bwords)
+                    cur = new_states.get(sch.out_layout)
+                    if cur is None or total < cur[0]:
+                        new_states[sch.out_layout] = (
+                            total, stem_lay, plans + (plan,))
+        states = new_states
+        prev_dims = (shape.out_h, shape.out_w, shape.c_out)
+    best = None
+    for lay, (cost, stem_lay, plans) in states.items():
+        head_words = layout_transition_words(
+            b, prev_dims[0], prev_dims[1], prev_dims[2], mesh_shape,
+            lay, DEFAULT_LAYOUT)
+        total = cost + head_words * dtype_bytes
+        if best is None or total < best[0]:
+            best = (total, stem_lay, plans, head_words)
+    total, stem_lay, plans, head_words = best
+    plan = NetworkPlan(
+        mesh_shape=mesh_shape, stem_layout=stem_lay,
+        stem_words=_stem_words(b, h0, w0, c0, mesh_shape, stem_lay),
+        blocks=plans, head_boundary_words=head_words,
+        dtype_bytes=dtype_bytes, policy="solved")
+    assert plan.total_bytes == total   # the parts must re-sum to the DP cost
+    return plan
+
+
+def greedy_network_schedule(
+    rows: Sequence[Tuple[int, ...]], b: int,
+    mesh_shape: MeshShape = (1, 1), tpu: TPUConfig = TPUConfig(),
+    dtype_bytes: int = 4, se_ratio: float = 0.25,
+) -> NetworkPlan:
+    """The per-layer reference the DP is gated against: every block solved
+    in isolation (the PR-5 status quo — replicated arrivals, collective
+    chosen per layer, so every on-mesh block flips to psum_scatter), the
+    stem replicated, and every sharded exit silently repaying its
+    all-gather at the next (replicated) entry."""
+    shapes = _chain_shapes(rows, b, se_ratio, dtype_bytes)
+    if not shapes:
+        raise ValueError("network solve needs at least one block row")
+    h0, w0, c0 = shapes[0].h, shapes[0].w, shapes[0].c_in
+    plans = []
+    prev_lay, prev_dims = DEFAULT_LAYOUT, (h0, w0, c0)
+    for i, shape in enumerate(shapes):
+        sch = select_mbconv_schedule(shape, tpu, mesh_shape)
+        bwords = layout_transition_words(
+            b, prev_dims[0], prev_dims[1], prev_dims[2], mesh_shape,
+            prev_lay, DEFAULT_LAYOUT)
+        plans.append(BlockPlan(
+            index=i, shape=shape, in_layout=DEFAULT_LAYOUT,
+            out_layout=sch.out_layout, schedule=sch,
+            boundary_words=bwords))
+        prev_lay = sch.out_layout
+        prev_dims = (shape.out_h, shape.out_w, shape.c_out)
+    head_words = layout_transition_words(
+        b, prev_dims[0], prev_dims[1], prev_dims[2], mesh_shape,
+        prev_lay, DEFAULT_LAYOUT)
+    return NetworkPlan(
+        mesh_shape=mesh_shape, stem_layout=DEFAULT_LAYOUT,
+        stem_words=_stem_words(b, h0, w0, c0, mesh_shape, DEFAULT_LAYOUT),
+        blocks=tuple(plans), head_boundary_words=head_words,
+        dtype_bytes=dtype_bytes, policy="greedy")
+
+
+@lru_cache(maxsize=64)
+def _network_plan_cached(rows: tuple, b: int, mesh_shape: MeshShape,
+                         dtype_bytes: int, se_ratio: float,
+                         tpu: TPUConfig) -> NetworkPlan:
+    return solve_network_schedule(rows, b, mesh_shape, tpu, dtype_bytes,
+                                  se_ratio)
+
+
+def get_network_plan(
+    rows: Sequence[Tuple[int, ...]], b: int,
+    mesh_shape: MeshShape = (1, 1), dtype_bytes: int = 4,
+    se_ratio: float = 0.25, tpu: TPUConfig = TPUConfig(),
+) -> NetworkPlan:
+    """Trace-time-safe cached network solve (the in-process layer; the
+    per-block schedules the plan pins are themselves persisted through
+    the regular schedule cache under their ``layout=`` keys when the
+    model layer executes the plan)."""
+    return _network_plan_cached(tuple(tuple(r) for r in rows), b,
+                                tuple(mesh_shape), dtype_bytes, se_ratio,
+                                tpu)
 
 
 # ---------------------------------------------------------------------------

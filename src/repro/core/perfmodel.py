@@ -854,6 +854,15 @@ def mbconv_staged_traffic(
 COLLECTIVE_MODES: Tuple[str, ...] = ("ring_allreduce", "psum_scatter")
 DEFAULT_COLLECTIVE = "ring_allreduce"
 
+# Inter-block layout axis: how a block's activation tensor sits across the
+# "model" groups at a block BOUNDARY.  ``replicated`` is the classic form
+# (every device holds the full (B_local, H, W, C) slice of its data group);
+# ``model_sharded`` splits the channel dim over "model" — the form a
+# psum_scatter pass-2 leaves behind, and the form an identity-expand MBConv
+# (or sharded-c_in separable) entry can consume collective-free.
+LAYOUT_MODES: Tuple[str, ...] = ("replicated", "model_sharded")
+DEFAULT_LAYOUT = "replicated"
+
 
 def validate_collective(collective: str) -> str:
     if collective not in COLLECTIVE_MODES:
@@ -861,6 +870,13 @@ def validate_collective(collective: str) -> str:
             f"collective must be one of {COLLECTIVE_MODES}, "
             f"got {collective!r}")
     return collective
+
+
+def validate_layout(layout: str) -> str:
+    if layout not in LAYOUT_MODES:
+        raise ValueError(
+            f"layout must be one of {LAYOUT_MODES}, got {layout!r}")
+    return layout
 
 
 @dataclass(frozen=True)
@@ -872,6 +888,8 @@ class ShardedTraffic:
     n_devices: int
     mesh_shape: Tuple[int, int] = (1, 1)
     collective: str = DEFAULT_COLLECTIVE   # reduction layout priced above
+    in_layout: str = DEFAULT_LAYOUT        # how the input arrives
+    transition_words: int = 0    # entry-side layout repay (all-gather words)
 
     @property
     def dtype_bytes(self) -> int:
@@ -886,11 +904,25 @@ class ShardedTraffic:
         return self.collective_words * self.dtype_bytes
 
     @property
+    def transition_bytes(self) -> int:
+        return self.transition_words * self.dtype_bytes
+
+    @property
+    def out_layout(self) -> str:
+        """Layout the block's output LEAVES in: sharded on c_out after a
+        psum_scatter pass-2, replicated otherwise."""
+        _dp, mp = self.mesh_shape
+        if mp > 1 and self.collective == "psum_scatter":
+            return "model_sharded"
+        return DEFAULT_LAYOUT
+
+    @property
     def total_bytes(self) -> int:
         """All bytes moved anywhere: every device's HBM traffic plus the
-        interconnect words — the number the staged single-device baseline
-        is compared against."""
-        return self.device.total_bytes * self.n_devices + self.collective_bytes
+        interconnect words (reductions AND any entry-side layout repay) —
+        the number the staged single-device baseline is compared against."""
+        return (self.device.total_bytes * self.n_devices
+                + self.collective_bytes + self.transition_bytes)
 
 
 def shard_factors(batch: int, channels: int,
@@ -908,34 +940,99 @@ def shard_factors(batch: int, channels: int,
 
 
 def separable_shard(
-    shape: SeparableShape, mesh_shape: Tuple[int, int]
+    shape: SeparableShape, mesh_shape: Tuple[int, int],
+    in_layout: str = DEFAULT_LAYOUT,
 ) -> Tuple[SeparableShape, Tuple[int, int]]:
     """(per-device shard shape, effective factors) for the separable
-    partitioning: batch over "data", c_out over "model"."""
+    partitioning.
+
+    ``replicated`` input: batch over "data", c_out over "model" (the PW
+    reduction stays device-local).  ``model_sharded`` input: batch over
+    "data", c_in over "model" — each device sees its channel slice of the
+    input, DW is channel-local, and the PW contraction becomes a partial
+    over the local c_in rows (collective priced separately)."""
+    validate_layout(in_layout)
+    if in_layout == "model_sharded":
+        dp, mp = shard_factors(shape.b, shape.c_in, mesh_shape)
+        if mp > 1:
+            return replace(shape, b=shape.b // dp,
+                           c_in=shape.c_in // mp), (dp, mp)
+        return replace(shape, b=shape.b // dp), (dp, mp)
     dp, mp = shard_factors(shape.b, shape.c_out, mesh_shape)
     return replace(shape, b=shape.b // dp, c_out=shape.c_out // mp), (dp, mp)
 
 
+def can_shard_input(shape: MBConvShape,
+                    mesh_shape: Tuple[int, int]) -> bool:
+    """True iff the MBConv block can CONSUME a c_in-sharded input without
+    any entry collective: only the identity-expand form (c_mid == c_in)
+    qualifies — its "expand" is elementwise, so device d's c_in slice is
+    exactly the c_mid slice its DW taps need.  A real expand (e > 1) is a
+    dense contraction over ALL of c_in, so every device needs the full
+    input and a sharded arrival must be gathered back (priced as
+    ``transition_words``, never a win — see ``sharded_mbconv_traffic``)."""
+    _dp, mp = shard_factors(shape.b, shape.c_mid, mesh_shape)
+    return mp > 1 and not shape.has_expand
+
+
 def mbconv_shard(
-    shape: MBConvShape, mesh_shape: Tuple[int, int]
+    shape: MBConvShape, mesh_shape: Tuple[int, int],
+    in_layout: str = DEFAULT_LAYOUT,
 ) -> Tuple[MBConvShape, Tuple[int, int]]:
     """(per-device shard shape, effective factors) for the MBConv
-    partitioning: batch over "data", c_mid over "model"."""
+    partitioning: batch over "data", c_mid over "model".  With a
+    ``model_sharded`` input layout on an identity-expand block the input
+    channels shard too (c_in == c_mid there), shrinking every pass-1
+    strip read by the model factor."""
+    validate_layout(in_layout)
     dp, mp = shard_factors(shape.b, shape.c_mid, mesh_shape)
-    return replace(shape, b=shape.b // dp, c_mid=shape.c_mid // mp), (dp, mp)
+    local = replace(shape, b=shape.b // dp, c_mid=shape.c_mid // mp)
+    if (in_layout == "model_sharded" and mp > 1 and not shape.has_expand):
+        local = replace(local, c_in=shape.c_in // mp)
+    return local, (dp, mp)
+
+
+def _separable_collective_words(shape: SeparableShape, dp: int, mp: int,
+                                collective: str) -> int:
+    """Interconnect words of the sharded-c_in separable form: the PW
+    contraction is a partial over each device's c_in rows, reduced across
+    the model group — full ring under ``ring_allreduce`` (output lands
+    replicated) or the reduce-scatter half under ``psum_scatter`` (output
+    leaves sharded on c_out, zero-padded to the model factor)."""
+    validate_collective(collective)
+    if mp <= 1:
+        return 0
+    b_local = shape.b // dp
+    out = b_local * shape.out_h * shape.out_w * shape.c_out
+    if collective == "psum_scatter":
+        return dp * (mp - 1) * (b_local * shape.out_h * shape.out_w
+                                * scatter_c_out(shape.c_out, mp))
+    return dp * 2 * (mp - 1) * out
 
 
 def sharded_separable_traffic(
     shape: SeparableShape, tile_h: int, mesh_shape: Tuple[int, int] = (1, 1),
     c_block: int = 128, residency: str = DEFAULT_RESIDENCY,
+    in_layout: str = DEFAULT_LAYOUT, collective: str = DEFAULT_COLLECTIVE,
 ) -> ShardedTraffic:
     """Per-device traffic of the sharded fused separable block.
 
-    Batch splits over "data", c_out over "model"; c_in stays replicated so
-    the PW reduction is device-local and the collective term is zero.
-    ``residency`` prices each device's input staging (the sharded wrapper
-    runs the same strip-staging engine per shard)."""
-    local, (dp, mp) = separable_shard(shape, mesh_shape)
+    ``replicated`` input (default): batch on "data", c_out on "model";
+    c_in stays replicated so the PW reduction is device-local and the
+    collective term is zero.  ``model_sharded`` input: c_in shards on
+    "model" instead — each device reads only its channel slice of the
+    input (mp-fold fewer strip words) but the PW partial must reduce
+    across the group, priced per ``collective``.  ``residency`` prices
+    each device's input staging either way."""
+    validate_layout(in_layout)
+    local, (dp, mp) = separable_shard(shape, mesh_shape, in_layout)
+    if in_layout == "model_sharded" and mp > 1:
+        return ShardedTraffic(
+            device=fused_separable_traffic(local, tile_h, c_block, residency),
+            collective_words=_separable_collective_words(
+                shape, dp, mp, collective),
+            n_devices=dp * mp, mesh_shape=(dp, mp), collective=collective,
+            in_layout=in_layout)
     return ShardedTraffic(
         device=fused_separable_traffic(local, tile_h, c_block, residency),
         collective_words=0, n_devices=dp * mp, mesh_shape=(dp, mp))
@@ -957,10 +1054,58 @@ def sharded_separable_staged_traffic(
 def can_psum_scatter(shape: MBConvShape,
                      mesh_shape: Tuple[int, int]) -> bool:
     """True iff the psum_scatter pass-2 variant is runnable at this
-    partitioning: the layer actually shards on "model" AND c_out divides
-    into the model groups (the scattered output is sharded on c_out)."""
+    partitioning: the layer actually shards on "model".  Non-dividing
+    c_out no longer rejects — the kernel zero-pads the projection columns
+    to the next multiple of the model factor and scatters the padded dim
+    (priced as such: see ``scatter_c_out``)."""
     _dp, mp = shard_factors(shape.b, shape.c_mid, mesh_shape)
-    return mp > 1 and shape.c_out % mp == 0
+    return mp > 1
+
+
+def scatter_c_out(c_out: int, mp: int) -> int:
+    """Channel width a psum_scatter pass-2 actually moves: c_out rounded
+    up to the model factor (the pad-to-mp columns are zeros of the padded
+    projection weight, scattered like any other — wire words are honest
+    about them)."""
+    if mp <= 1:
+        return c_out
+    return _round_up(c_out, mp)
+
+
+def layout_transition_words(
+    b: int, h: int, w: int, c: int, mesh_shape: Tuple[int, int],
+    producer_layout: str, consumer_layout: str,
+) -> int:
+    """Interconnect words to move a (b, h, w, c) activation from the
+    producer's boundary layout to the consumer's: an all-gather of the
+    missing (mp-1)/mp channel slices per model group (summed over the dp
+    groups) when a sharded output feeds a replicated entry; free when the
+    layouts match, and free when a replicated output feeds a sharded
+    entry (each device slices locally)."""
+    validate_layout(producer_layout)
+    validate_layout(consumer_layout)
+    dp, mp = mesh_shape
+    if (mp <= 1 or producer_layout != "model_sharded"
+            or consumer_layout == "model_sharded"):
+        return 0
+    b_local = b // dp if dp > 1 and b % dp == 0 else b
+    # (mp-1) words per gathered word per model group — same convention as
+    # the reduce-scatter half, so scatter + repay-gather == ring exactly
+    return dp * (mp - 1) * b_local * h * w * scatter_c_out(c, mp)
+
+
+def _mbconv_entry_transition_words(shape: MBConvShape, dp: int, mp: int,
+                                   in_layout: str) -> int:
+    """Entry-side repay when a c_in-sharded input feeds a REAL expand
+    (e > 1): the dense expand contraction needs all of c_in on every
+    device, so the entry all-gathers the missing slices — (mp-1) words
+    per held word per model group, summed over the dp groups.  Zero for
+    the identity-expand entry (the shard IS what the block needs) and for
+    replicated arrivals."""
+    if mp <= 1 or in_layout != "model_sharded" or not shape.has_expand:
+        return 0
+    b_local = shape.b // dp
+    return dp * (mp - 1) * b_local * shape.h * shape.w * shape.c_in
 
 
 def _mbconv_collective_words(shape: MBConvShape, dp: int, mp: int,
@@ -973,7 +1118,8 @@ def _mbconv_collective_words(shape: MBConvShape, dp: int, mp: int,
     * the (B_local, H', W', C_out) projection partial ring-all-reduces
       under ``ring_allreduce`` or pays only the reduce-scatter half,
       (mp-1) words per reduced word, under ``psum_scatter`` — the pass-2
-      output then leaves the kernel sharded on c_out."""
+      output then leaves the kernel sharded on c_out.  Non-dividing c_out
+      scatters at the zero-padded width (``scatter_c_out``)."""
     validate_collective(collective)
     if mp <= 1:
         return 0
@@ -981,11 +1127,9 @@ def _mbconv_collective_words(shape: MBConvShape, dp: int, mp: int,
     squeeze = b_local * shape.c_se
     proj = b_local * shape.out_h * shape.out_w * shape.c_out
     if collective == "psum_scatter":
-        if shape.c_out % mp != 0:
-            raise ValueError(
-                f"psum_scatter needs c_out % model == 0, got c_out="
-                f"{shape.c_out} over model={mp}")
-        words = 2 * (mp - 1) * squeeze + (mp - 1) * proj
+        proj_pad = (b_local * shape.out_h * shape.out_w
+                    * scatter_c_out(shape.c_out, mp))
+        words = 2 * (mp - 1) * squeeze + (mp - 1) * proj_pad
     else:
         words = 2 * (mp - 1) * (squeeze + proj)
     return dp * words
@@ -996,6 +1140,7 @@ def sharded_mbconv_traffic(
     mesh_shape: Tuple[int, int] = (1, 1), c_block: int = 128,
     residency: str = DEFAULT_RESIDENCY,
     collective: str = DEFAULT_COLLECTIVE,
+    in_layout: str = DEFAULT_LAYOUT,
 ) -> ShardedTraffic:
     """Per-device traffic + collective bytes of the sharded two-pass
     MBConv.
@@ -1006,17 +1151,29 @@ def sharded_mbconv_traffic(
     (B_local, H', W', C_out) projection partial — the latter priced per
     ``collective`` (``ring_allreduce`` replicates the output,
     ``psum_scatter`` halves the wire words and leaves it sharded on
-    c_out).  ``residency`` prices each device's input staging."""
-    local, (dp, mp) = mbconv_shard(shape, mesh_shape)
+    c_out).  ``residency`` prices each device's input staging.
+
+    ``in_layout`` prices the ENTRY: an identity-expand block consumes a
+    ``model_sharded`` input collective-free at mp-fold smaller strip
+    reads (c_in shards with c_mid); a real expand must gather a sharded
+    arrival back (``transition_words``) — the honest reason e > 1
+    boundaries never win by staying sharded."""
+    validate_layout(in_layout)
+    local, (dp, mp) = mbconv_shard(shape, mesh_shape, in_layout)
+    eff_layout = in_layout if mp > 1 else DEFAULT_LAYOUT
     return ShardedTraffic(
         device=mbconv_fused_traffic(local, tile_h, mode, c_block, residency),
         collective_words=_mbconv_collective_words(shape, dp, mp, collective),
-        n_devices=dp * mp, mesh_shape=(dp, mp), collective=collective)
+        n_devices=dp * mp, mesh_shape=(dp, mp), collective=collective,
+        in_layout=eff_layout,
+        transition_words=_mbconv_entry_transition_words(
+            shape, dp, mp, eff_layout))
 
 
 def sharded_mbconv_staged_traffic(
     shape: MBConvShape, tile_h: int, mesh_shape: Tuple[int, int] = (1, 1),
     c_block: int = 128, collective: str = DEFAULT_COLLECTIVE,
+    in_layout: str = DEFAULT_LAYOUT,
 ) -> ShardedTraffic:
     """The staged MBConv pipeline under the SAME partitioning.
 
@@ -1025,9 +1182,15 @@ def sharded_mbconv_staged_traffic(
     width, and its projection could equally reduce-scatter) — priced
     under the SAME ``collective`` mode as the fused pipeline, so the
     fused-vs-staged margin under sharding is decided by the HBM side,
-    exactly the paper's claim re-proved per partition."""
-    local, (dp, mp) = mbconv_shard(shape, mesh_shape)
+    exactly the paper's claim re-proved per partition.  ``in_layout``
+    prices its entry identically too."""
+    validate_layout(in_layout)
+    local, (dp, mp) = mbconv_shard(shape, mesh_shape, in_layout)
+    eff_layout = in_layout if mp > 1 else DEFAULT_LAYOUT
     return ShardedTraffic(
         device=mbconv_staged_traffic(local, tile_h, c_block),
         collective_words=_mbconv_collective_words(shape, dp, mp, collective),
-        n_devices=dp * mp, mesh_shape=(dp, mp), collective=collective)
+        n_devices=dp * mp, mesh_shape=(dp, mp), collective=collective,
+        in_layout=eff_layout,
+        transition_words=_mbconv_entry_transition_words(
+            shape, dp, mp, eff_layout))

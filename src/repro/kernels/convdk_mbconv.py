@@ -373,7 +373,8 @@ def _mbconv_impl(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj, stride,
                  padding, tile_h, mode, exp_act, dw_act, interpret,
                  residency=DEFAULT_RESIDENCY,
                  axis_name: Optional[str] = None,
-                 collective: str = DEFAULT_COLLECTIVE):
+                 collective: str = DEFAULT_COLLECTIVE,
+                 scatter_width: int = 0):
     """Two-pass fused MBConv on one device — or on one SHARD of the c_mid
     grid when ``axis_name`` names a mesh axis (``shard_map`` body).
 
@@ -460,16 +461,26 @@ def _mbconv_impl(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj, stride,
             tile_h=tile_h, n_th=n_th, ci_block=ci_block, cm_block=cm_block,
             co_block=co_block, exp_act=exp_act, dw_act=dw_act,
             interpret=interpret, residency=residency)
-    out = out[:, :out_h, :, :c_out]
-    if axis_name is not None:
-        # projection partials: each shard contracted only its c_mid slice
-        if collective == "psum_scatter":
-            # reduce-scatter over the channel dim: (mp-1)/mp words per
-            # reduced word instead of the ring's 2*(mp-1)/mp, and this
-            # shard keeps only its c_out slice — the layout-aware exit
-            out = jax.lax.psum_scatter(out, axis_name,
-                                       scatter_dimension=3, tiled=True)
-        else:
+    if axis_name is not None and collective == "psum_scatter":
+        # reduce-scatter over the channel dim: (mp-1)/mp words per
+        # reduced word instead of the ring's 2*(mp-1)/mp, and this
+        # shard keeps only its channel slice — the layout-aware exit.
+        # Non-dividing c_out scatters at ``scatter_width`` (the next
+        # model-factor multiple): the extra columns are zero w_proj
+        # columns, so their partials are exactly zero and the wrapper
+        # slices them back off the gathered-global view.
+        cw = scatter_width if scatter_width else c_out
+        out = out[:, :out_h, :, :min(cw, out.shape[-1])]
+        if out.shape[-1] < cw:
+            out = jnp.pad(
+                out, ((0, 0), (0, 0), (0, 0), (0, cw - out.shape[-1])))
+        out = jax.lax.psum_scatter(out, axis_name,
+                                   scatter_dimension=3, tiled=True)
+    else:
+        out = out[:, :out_h, :, :c_out]
+        if axis_name is not None:
+            # projection partials: each shard contracted only its c_mid
+            # slice
             out = jax.lax.psum(out, axis_name)
     return out
 

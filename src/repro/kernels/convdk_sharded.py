@@ -53,6 +53,7 @@ import functools
 from typing import Dict, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from ..compat import (
@@ -60,11 +61,17 @@ from ..compat import (
     residual_barrier_needed,
     shard_map_compat,
 )
-from ..core.perfmodel import DEFAULT_COLLECTIVE, DEFAULT_RESIDENCY
+from ..core.perfmodel import (
+    DEFAULT_COLLECTIVE,
+    DEFAULT_LAYOUT,
+    DEFAULT_RESIDENCY,
+    scatter_c_out,
+    validate_layout,
+)
 from .common import default_interpret
 from .convdk_fused import _fused_impl
 from .convdk_mbconv import _mbconv_impl
-from .ref import mbconv_ref, separable_ref
+from .ref import _act_ref, mbconv_ref, separable_ref
 
 POD_AXIS = "pod"
 DATA_AXIS = "data"
@@ -126,42 +133,89 @@ def _require_shardable(mesh, batch: int, channels: int, channel_name: str):
 # ---------------------------------------------------------------------------
 
 def _sep_sharded_impl(x, w_dw, w_pw, mesh, stride, padding, tile_h, dw_act,
-                      act, interpret, residency):
-    _require_shardable(mesh, x.shape[0], w_pw.shape[1], "c_out")
+                      act, interpret, residency, collective, in_layout):
+    validate_layout(in_layout)
+    sharded_in = in_layout == "model_sharded"
+    _dp, mp = conv_mesh_shape(mesh)
+    c_in, c_out = x.shape[-1], w_pw.shape[1]
+    batch = _batch_axes(mesh)
     TRACE_COUNTS["separable"] += 1
 
-    def local(xl, wdl, wpl):
-        return _fused_impl(xl, wdl, wpl, stride, padding, tile_h, dw_act,
-                           act, interpret, residency)
+    if not sharded_in:
+        # classic partitioning: c_out on "model", c_in replicated — the PW
+        # reduction is device-local, no collective
+        _require_shardable(mesh, x.shape[0], c_out, "c_out")
 
-    batch = _batch_axes(mesh)
-    return shard_map_compat(
-        local, mesh,
-        in_specs=(P(batch, None, None, None),       # batch slice, full C_in
-                  P(None, None, None),              # DW taps replicated
-                  P(None, MODEL_AXIS)),             # PW columns sharded
-        out_specs=P(batch, None, None, MODEL_AXIS),
+        def local(xl, wdl, wpl):
+            return _fused_impl(xl, wdl, wpl, stride, padding, tile_h,
+                               dw_act, act, interpret, residency)
+
+        return shard_map_compat(
+            local, mesh,
+            in_specs=(P(batch, None, None, None),   # batch slice, full C_in
+                      P(None, None, None),          # DW taps replicated
+                      P(None, MODEL_AXIS)),         # PW columns sharded
+            out_specs=P(batch, None, None, MODEL_AXIS),
+        )(x, w_dw, w_pw)
+
+    # sharded-in partitioning: c_in on "model" — the DW is channel-local
+    # on the arriving slice (no gather, the layout win), but the PW now
+    # reduces over c_in ACROSS devices: each shard contracts its c_in
+    # rows against the FULL c_out width, and the partials reduce per
+    # ``collective``.  The output activation is nonlinear, so it must be
+    # applied AFTER the reduction — the kernel runs with act=None and the
+    # local body applies it to the reduced result.
+    _require_shardable(mesh, x.shape[0], c_in, "c_in")
+    cw = scatter_c_out(c_out, mp) if collective == "psum_scatter" else c_out
+
+    def local_sharded(xl, wdl, wpl):
+        out = _fused_impl(xl, wdl, wpl, stride, padding, tile_h, dw_act,
+                          None, interpret, residency)
+        if collective == "psum_scatter":
+            if out.shape[-1] < cw:
+                out = jnp.pad(out, ((0, 0), (0, 0), (0, 0),
+                                    (0, cw - out.shape[-1])))
+            out = jax.lax.psum_scatter(out, MODEL_AXIS,
+                                       scatter_dimension=3, tiled=True)
+        else:
+            out = jax.lax.psum(out, MODEL_AXIS)
+        return _act_ref(out, act).astype(out.dtype)
+
+    out_spec = P(batch, None, None,
+                 MODEL_AXIS if collective == "psum_scatter" else None)
+    out = shard_map_compat(
+        local_sharded, mesh,
+        in_specs=(P(batch, None, None, MODEL_AXIS),  # batch + C_in slice
+                  P(None, None, MODEL_AXIS),         # DW taps per channel
+                  P(MODEL_AXIS, None)),              # PW rows sharded
+        out_specs=out_spec,
     )(x, w_dw, w_pw)
+    if cw != c_out:
+        out = out[..., :c_out]
+    return out
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9, 10))
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(3, 4, 5, 6, 7, 8, 9, 10, 11, 12))
 def _sep_sharded_op(x, w_dw, w_pw, mesh, stride, padding, tile_h, dw_act,
-                    act, interpret, residency):
+                    act, interpret, residency, collective, in_layout):
     return _sep_sharded_impl(x, w_dw, w_pw, mesh, stride, padding, tile_h,
-                             dw_act, act, interpret, residency)
+                             dw_act, act, interpret, residency, collective,
+                             in_layout)
 
 
 def _sep_sharded_fwd(x, w_dw, w_pw, mesh, stride, padding, tile_h, dw_act,
-                     act, interpret, residency):
+                     act, interpret, residency, collective, in_layout):
     out = _sep_sharded_op(x, w_dw, w_pw, mesh, stride, padding, tile_h,
-                          dw_act, act, interpret, residency)
+                          dw_act, act, interpret, residency, collective,
+                          in_layout)
     # barrier: under the jitted entry, raw-input residuals get forwarded
     # and a cotangent double-counts (see compat.residual_barrier)
     return out, residual_barrier((x, w_dw, w_pw))
 
 
 def _sep_sharded_bwd(mesh, stride, padding, tile_h, dw_act, act, interpret,
-                     residency, res, g):
+                     residency, collective, in_layout, res, g):
     x, w_dw, w_pw = res
     _, vjp = jax.vjp(
         lambda x_, wd_, wp_: separable_ref(
@@ -177,7 +231,7 @@ _sep_sharded_op.defvjp(_sep_sharded_fwd, _sep_sharded_bwd)
 
 @functools.lru_cache(maxsize=256)
 def _sep_sharded_entry(mesh, stride, padding, tile_h, dw_act, act, interpret,
-                       residency):
+                       residency, collective, in_layout):
     """One jitted entry point per (mesh, static schedule).
 
     The lru_cache makes repeated calls at serving rate reuse ONE
@@ -187,7 +241,8 @@ def _sep_sharded_entry(mesh, stride, padding, tile_h, dw_act, act, interpret,
     @jax.jit
     def entry(x, w_dw, w_pw):
         return _sep_sharded_op(x, w_dw, w_pw, mesh, stride, padding, tile_h,
-                               dw_act, act, interpret, residency)
+                               dw_act, act, interpret, residency, collective,
+                               in_layout)
 
     return entry
 
@@ -205,33 +260,49 @@ def convdk_fused_separable_sharded(
     act: Optional[str] = None,
     interpret: Optional[bool] = None,
     residency: Optional[str] = None,
+    collective: Optional[str] = None,
+    in_layout: Optional[str] = None,
 ) -> jax.Array:
     """Mesh-sharded fused depthwise-separable block (differentiable).
 
     ``shard_map`` over ``mesh``: batch on "data" (jointly with "pod"
-    when the mesh carries one), output channels on "model"; every device
-    runs the single-device fused kernel — including its strip-staging
-    engine, per ``residency`` — on its (batch, c_out) tile.  The c_in
-    reduction is device-local (c_in is replicated), so no collective is
-    needed — per-device HBM traffic is the single-device model evaluated
-    at the shard shape.
+    when the mesh carries one) for both layouts, then per ``in_layout``:
 
-    Requires ``b % (pod*data) == 0`` and ``c_out % model == 0``
-    (``can_shard_fused`` pre-checks; the model layer falls back to the
-    unsharded kernel when the grid does not divide).  Dispatches through a
-    cached jitted entry point, so repeated serving-rate calls do not
-    re-trace the ``shard_map`` closure.
+    * ``"replicated"`` (default): output channels on "model"; every
+      device runs the single-device fused kernel — including its
+      strip-staging engine, per ``residency`` — on its (batch, c_out)
+      tile.  The c_in reduction is device-local (c_in is replicated), so
+      no collective is needed — per-device HBM traffic is the
+      single-device model evaluated at the shard shape.  Requires
+      ``c_out % model == 0``.
+    * ``"model_sharded"``: INPUT channels on "model" — the block consumes
+      a c_in-sharded arrival without a gather (the DW is channel-local on
+      the slice), and the PW partials reduce per ``collective``
+      ("ring_allreduce" psum, replicated output; "psum_scatter" leaves
+      the output c_out-sharded, zero-padding non-dividing widths).  The
+      output activation is applied after the reduction (it is nonlinear).
+      Requires ``c_in % model == 0``.
+
+    ``can_shard_fused`` pre-checks divisibility; the model layer falls
+    back to the unsharded kernel when the grid does not divide.
+    Dispatches through a cached jitted entry point, so repeated
+    serving-rate calls do not re-trace the ``shard_map`` closure.
     """
     if interpret is None:
         interpret = default_interpret()
     if residency is None:
         residency = DEFAULT_RESIDENCY
+    if collective is None:
+        collective = DEFAULT_COLLECTIVE
+    if in_layout is None:
+        in_layout = DEFAULT_LAYOUT
     # resolve the residual-forwarding probe EAGERLY (it cannot run inside
     # the fwd trace; cheap once cached) so the barrier decision the trace
     # bakes in is the probed one, not the safe fallback
     residual_barrier_needed()
     return _sep_sharded_entry(mesh, stride, padding, tile_h, dw_act, act,
-                              interpret, residency)(x, w_dw, w_pw)
+                              interpret, residency, collective, in_layout)(
+        x, w_dw, w_pw)
 
 
 # ---------------------------------------------------------------------------
@@ -240,32 +311,64 @@ def convdk_fused_separable_sharded(
 
 def _mbconv_sharded_impl(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj,
                          mesh, stride, padding, tile_h, mode, exp_act,
-                         dw_act, interpret, residency, collective):
+                         dw_act, interpret, residency, collective,
+                         in_layout):
     _require_shardable(mesh, x.shape[0], w_dw.shape[-1], "c_mid")
+    validate_layout(in_layout)
     _dp, mp = conv_mesh_shape(mesh)
-    if collective == "psum_scatter" and w_proj.shape[1] % mp != 0:
+    c_in, c_out = x.shape[-1], w_proj.shape[1]
+    # non-dividing c_out no longer rejects scatter: the projection pads to
+    # the next model-factor multiple inside _mbconv_impl (zero columns
+    # contribute zero partials — exact), and the gathered-global view is
+    # sliced back to c_out below
+    cw = scatter_c_out(c_out, mp) if collective == "psum_scatter" else c_out
+    sharded_in = in_layout == "model_sharded"
+    if sharded_in and c_in % mp != 0:
         raise ValueError(
-            f"psum_scatter needs c_out % {MODEL_AXIS} == 0, got c_out="
-            f"{w_proj.shape[1]} over {MODEL_AXIS}={mp}")
+            f"model_sharded in_layout needs c_in % {MODEL_AXIS} == 0, got "
+            f"c_in={c_in} over {MODEL_AXIS}={mp}")
+    # identity-expand blocks (the model layer's expand_ratio == 1 form:
+    # w_exp == I, exp_act None) consume a c_in-sharded arrival FREE — the
+    # arriving slice IS the c_mid slice.  A real expand is dense over ALL
+    # of c_in, so a sharded arrival must be gathered back at the entry
+    # (priced as perfmodel's transition_words; the ISSUE's row-sharded
+    # expand alternative would need a psum BEFORE the nonlinear exp_act
+    # inside pass 1 — not expressible at this level — and prices e>=1x
+    # worse than the gather anyway).
+    identity_expand = c_in == w_dw.shape[-1] and exp_act is None
     TRACE_COUNTS["mbconv"] += 1
 
     def local(xl, wel, wdl, s1l, b1l, s2l, b2l, wpl):
+        if sharded_in:
+            if identity_expand:
+                # free entry: the c_in slice is the c_mid slice; the
+                # identity expand restates itself at the local width
+                wel = jnp.eye(xl.shape[-1], dtype=wel.dtype)
+            else:
+                # gather entry: the dense expand needs all of c_in
+                xl = jax.lax.all_gather(xl, MODEL_AXIS, axis=3, tiled=True)
         return _mbconv_impl(xl, wel, wdl, s1l, b1l, s2l, b2l, wpl, stride,
                             padding, tile_h, mode, exp_act, dw_act,
                             interpret, residency, axis_name=MODEL_AXIS,
-                            collective=collective)
+                            collective=collective, scatter_width=cw)
 
     batch = _batch_axes(mesh)
+    x_spec = P(batch, None, None, MODEL_AXIS if sharded_in else None)
+    # free entry: the local identity expand replaces the (sharded-column)
+    # w_exp slice, so its spec only has to partition consistently
+    exp_spec = (P(MODEL_AXIS, None) if (sharded_in and identity_expand)
+                else P(None, MODEL_AXIS))
     # the layout-aware exit: under psum_scatter each shard keeps only its
     # c_out slice, so the output leaves sharded on "model" — a following
     # PW/block that consumes c_out-sharded activations needs no regather
     # (the global VALUES are identical to the ring variant's)
     out_spec = P(batch, None, None,
                  MODEL_AXIS if collective == "psum_scatter" else None)
-    return shard_map_compat(
+    out = shard_map_compat(
         local, mesh,
-        in_specs=(P(batch, None, None, None),       # batch slice, full C_in
-                  P(None, MODEL_AXIS),              # expand columns
+        in_specs=(x_spec,                           # batch slice (+ C_in
+                                                    #   slice when sharded-in)
+                  exp_spec,                         # expand columns
                   P(None, None, MODEL_AXIS),        # DW taps per channel
                   P(MODEL_AXIS, None),              # squeeze FC rows
                   P(None),                          # squeeze bias (replicated:
@@ -275,26 +378,29 @@ def _mbconv_sharded_impl(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj,
                   P(MODEL_AXIS, None)),             # projection rows
         out_specs=out_spec,
     )(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj)
+    if cw != c_out:
+        out = out[..., :c_out]
+    return out
 
 
 @functools.partial(jax.custom_vjp,
-                   nondiff_argnums=(8, 9, 10, 11, 12, 13, 14, 15, 16, 17))
+                   nondiff_argnums=(8, 9, 10, 11, 12, 13, 14, 15, 16, 17, 18))
 def _mbconv_sharded_op(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj,
                        mesh, stride, padding, tile_h, mode, exp_act, dw_act,
-                       interpret, residency, collective):
+                       interpret, residency, collective, in_layout):
     return _mbconv_sharded_impl(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2,
                                 w_proj, mesh, stride, padding, tile_h, mode,
                                 exp_act, dw_act, interpret, residency,
-                                collective)
+                                collective, in_layout)
 
 
 def _mbconv_sharded_fwd(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj,
                         mesh, stride, padding, tile_h, mode, exp_act, dw_act,
-                        interpret, residency, collective):
+                        interpret, residency, collective, in_layout):
     out = _mbconv_sharded_op(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2,
                              w_proj, mesh, stride, padding, tile_h, mode,
                              exp_act, dw_act, interpret, residency,
-                             collective)
+                             collective, in_layout)
     # barrier: under the jitted entry, raw-input residuals get forwarded
     # and the w_dw cotangent double-counts (see compat.residual_barrier —
     # probe-gated, so it auto-disables on fixed JAX builds)
@@ -303,7 +409,8 @@ def _mbconv_sharded_fwd(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj,
 
 
 def _mbconv_sharded_bwd(mesh, stride, padding, tile_h, mode, exp_act,
-                        dw_act, interpret, residency, collective, res, g):
+                        dw_act, interpret, residency, collective, in_layout,
+                        res, g):
     _, vjp = jax.vjp(
         lambda *p: mbconv_ref(*p, stride=stride, padding=padding,
                               exp_act=exp_act, dw_act=dw_act),
@@ -317,17 +424,19 @@ _mbconv_sharded_op.defvjp(_mbconv_sharded_fwd, _mbconv_sharded_bwd)
 
 @functools.lru_cache(maxsize=256)
 def _mbconv_sharded_entry(mesh, stride, padding, tile_h, mode, exp_act,
-                          dw_act, interpret, residency, collective):
+                          dw_act, interpret, residency, collective,
+                          in_layout):
     """One jitted entry point per (mesh, static schedule) — see
-    ``_sep_sharded_entry``.  The collective layout is part of the static
-    schedule: ring and scatter variants are distinct entries."""
+    ``_sep_sharded_entry``.  The collective AND entry layouts are part of
+    the static schedule: ring/scatter and replicated/sharded-in variants
+    are distinct entries."""
 
     @jax.jit
     def entry(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj):
         return _mbconv_sharded_op(x, w_exp, w_dw, w_se1, b_se1, w_se2,
                                   b_se2, w_proj, mesh, stride, padding,
                                   tile_h, mode, exp_act, dw_act, interpret,
-                                  residency, collective)
+                                  residency, collective, in_layout)
 
     return entry
 
@@ -352,6 +461,7 @@ def convdk_mbconv_fused_sharded(
     interpret: Optional[bool] = None,
     residency: Optional[str] = None,
     collective: Optional[str] = None,
+    in_layout: Optional[str] = None,
 ) -> jax.Array:
     """Mesh-sharded two-pass fused MBConv block (differentiable).
 
@@ -368,11 +478,21 @@ def convdk_mbconv_fused_sharded(
     * ``"psum_scatter"``: ``psum_scatter`` over the channel dim — half
       the wire words, and the returned global array is SHARDED on c_out
       across "model" (identical values; a following PW/block that
-      consumes c_out-sharded activations needs no regather).  Requires
-      ``c_out % model == 0``.
+      consumes c_out-sharded activations needs no regather).  A
+      non-dividing c_out zero-pads the projection to the next
+      model-factor multiple and slices it back (exact).
 
-    Collective bytes are priced by
-    ``core.perfmodel.sharded_mbconv_traffic`` under the same axis.
+    ``in_layout`` declares the ARRIVAL layout the entry consumes:
+    ``"replicated"`` (default) streams the full c_in per device;
+    ``"model_sharded"`` (requires ``c_in % model == 0``) takes a
+    c_in-sharded ``x`` — collective-free for identity-expand blocks
+    (``exp_act is None`` and ``c_in == c_mid``; the model layer's
+    expand_ratio == 1 form, whose ``w_exp`` is the identity), via an
+    entry ``all_gather`` otherwise (a real expand is dense over all of
+    c_in).
+
+    Collective + transition bytes are priced by
+    ``core.perfmodel.sharded_mbconv_traffic`` under the same axes.
 
     Requires ``b % (pod*data) == 0`` and ``c_mid % model == 0``.
     Dispatches through a cached jitted entry point (no per-call
@@ -384,11 +504,13 @@ def convdk_mbconv_fused_sharded(
         residency = DEFAULT_RESIDENCY
     if collective is None:
         collective = DEFAULT_COLLECTIVE
+    if in_layout is None:
+        in_layout = DEFAULT_LAYOUT
     # resolve the residual-forwarding probe EAGERLY (see the separable
     # wrapper): the probe itself dispatches through _mbconv_sharded_op
     # with the probing flag set, so this never recurses
     residual_barrier_needed()
     return _mbconv_sharded_entry(mesh, stride, padding, tile_h, mode,
                                  exp_act, dw_act, interpret, residency,
-                                 collective)(
+                                 collective, in_layout)(
         x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj)

@@ -72,70 +72,123 @@ def separable_def(c_in: int, c_out: int, k: int = 3) -> dict:
 
 
 def separable_block(
-    params: dict,
-    x: jax.Array,
+    x,
+    params=None,
     *,
     stride: int = 1,
     padding: str = "SAME",
     dw_act: Optional[str] = "relu",
     act: Optional[str] = "relu",
-    kcfg=None,
+    cfg=None,
     mesh=None,
-) -> jax.Array:
+    pin=None,
+    in_layout: str = "replicated",
+    kcfg=None,
+):
     """Apply one separable block, routed by the conv-kernel config.
 
-    With ``kcfg.fused_separable`` (the default) the whole block runs as ONE
-    Pallas kernel — in-kernel strip staging, DW taps, mid-block activation
-    and the 1x1 projection in a single VMEM residency (one HBM read of
-    ``x``, one HBM write of the output).  Otherwise the staged two-kernel
-    pipeline runs (DW kernel -> HBM -> PW matmul).  ``kcfg`` defaults to
-    ``repro.configs.base.kernel_config()``.
+    Canonical signature: ``separable_block(x, params, *, cfg, mesh, pin,
+    in_layout)`` returning ``(y, out_layout)`` — symmetric with
+    ``mbconv_block``, so the network-level layout solver can thread a
+    block chain through either family.  The legacy positional order
+    (``params`` first, bare-array return) and the ``kcfg=`` kwarg keep
+    working behind a warn-once deprecation shim.
 
-    With a ``mesh`` (and ``kcfg.shard_fused``), the fused kernel runs
-    mesh-sharded via ``shard_map``: batch on "data", c_out on "model"
+    With ``fused`` (the default) the whole block runs as ONE Pallas
+    kernel — in-kernel strip staging, DW taps, mid-block activation and
+    the 1x1 projection in a single VMEM residency (one HBM read of
+    ``x``, one HBM write of the output).  Otherwise the staged two-kernel
+    pipeline runs (DW kernel -> HBM -> PW matmul).  ``cfg`` defaults to
+    ``repro.configs.base.kernel_config()``; ``pin`` (a ``SchedulePin``)
+    overrides any subset of the solved axes.
+
+    With a ``mesh`` (and the shard toggle), the fused kernel runs
+    mesh-sharded via ``shard_map``; ``in_layout`` declares the arrival
+    layout: ``"replicated"`` shards c_out on "model" (collective-free),
+    ``"model_sharded"`` consumes a c_in-sharded arrival without a gather
+    and reduces the PW partials per the pinned collective
     (``kernels.convdk_fused_separable_sharded``) — falling back to the
     single-device kernel when the mesh axes do not divide the grid.  The
-    schedule is then solved per partitioning (``mesh_shape`` is a cache
-    key axis).
+    schedule is solved per (partitioning, layout).  ``out_layout`` is
+    ``"model_sharded"`` iff the output physically leaves sharded on
+    c_out for a layout-aware consumer (sharded-in + psum_scatter exit on
+    a dividing c_out), else ``"replicated"``.
 
     x: (B, H, W, C_in) NHWC -> (B, H', W', C_out).
     """
-    if kcfg is None:
-        # lazy import: configs.base imports models.model -> models.common
-        from ..configs.base import kernel_config
-        kcfg = kernel_config()
+    from ..configs.base import _warn_once, kernel_config, resolve_pin
+    legacy_call = isinstance(x, dict)
+    if legacy_call:
+        _warn_once(
+            "separable_block_positional",
+            "separable_block(params, x) is deprecated; call "
+            "separable_block(x, params, ...) — the new order returns "
+            "(y, out_layout)")
+        x, params = params, x
+    if kcfg is not None:
+        _warn_once(
+            "block_kcfg_kwarg",
+            "the kcfg= kwarg on block entries is deprecated; pass cfg=")
+        if cfg is None:
+            cfg = kcfg
+    if cfg is None:
+        cfg = kernel_config()
+    from ..core.perfmodel import DEFAULT_COLLECTIVE, validate_layout
     from ..kernels import (
         can_shard_fused, conv_mesh_shape, convdk_fused_separable,
         convdk_fused_separable_sharded, convdk_separable_staged,
     )
 
+    validate_layout(in_layout)
+    eff = resolve_pin(cfg, pin, family="separable")
     w_dw = params["dw"].astype(x.dtype)
     w_pw = params["pw"].astype(x.dtype)
-    sharded = (mesh is not None and kcfg.shard_fused and kcfg.fused_separable
-               and can_shard_fused(mesh, x.shape[0], w_pw.shape[1]))
+    c_out = w_pw.shape[1]
+    want_sharded_in = in_layout == "model_sharded"
+    # the arrival layout picks the partitioned axis the mesh must divide:
+    # classic replicated-in shards c_out, sharded-in shards c_in
+    shard_c = x.shape[-1] if want_sharded_in else c_out
+    sharded = (mesh is not None and eff.shard and eff.fused
+               and can_shard_fused(mesh, x.shape[0], shard_c))
     mesh_shape = conv_mesh_shape(mesh) if sharded else (1, 1)
-    tile_h, residency = kcfg.tile_h, kcfg.residency
-    if kcfg.autotune:
+    eff_in_layout = "model_sharded" if (sharded and want_sharded_in) \
+        else "replicated"
+    collective = eff.resolved_collective or DEFAULT_COLLECTIVE
+    tile_h, residency = cfg.tile_h, eff.residency
+    if cfg.autotune:
         from ..core.autotune import get_fused_schedule
         b, h, w, c_in = x.shape
         sch = get_fused_schedule(
-            b, h, w, c_in, w_pw.shape[1], w_dw.shape[0], stride,
+            b, h, w, c_in, c_out, w_dw.shape[0], stride,
             dtype_bytes=x.dtype.itemsize, mesh_shape=mesh_shape,
-            residency=kcfg.residency)
+            residency=eff.residency, in_layout=eff_in_layout,
+            collective=collective)
         tile_h, residency = sch.tile_h, sch.residency
     if sharded:
-        return convdk_fused_separable_sharded(
+        out = convdk_fused_separable_sharded(
             x, w_dw, w_pw, mesh=mesh, stride=stride, padding=padding,
-            tile_h=tile_h, dw_act=dw_act, act=act, interpret=kcfg.interpret,
-            residency=residency)
-    if kcfg.fused_separable:
-        return convdk_fused_separable(
+            tile_h=tile_h, dw_act=dw_act, act=act, interpret=cfg.interpret,
+            residency=residency, collective=collective,
+            in_layout=eff_in_layout)
+        out_layout = ("model_sharded"
+                      if (eff_in_layout == "model_sharded"
+                          and collective == "psum_scatter"
+                          and c_out % mesh_shape[1] == 0)
+                      else "replicated")
+    elif eff.fused:
+        out = convdk_fused_separable(
             x, w_dw, w_pw, stride=stride, padding=padding, tile_h=tile_h,
-            dw_act=dw_act, act=act, interpret=kcfg.interpret,
+            dw_act=dw_act, act=act, interpret=cfg.interpret,
             residency=residency)
-    return convdk_separable_staged(
-        x, w_dw, w_pw, stride=stride, padding=padding, tile_h=tile_h,
-        dw_act=dw_act, act=act, interpret=kcfg.interpret)
+        out_layout = "replicated"
+    else:
+        out = convdk_separable_staged(
+            x, w_dw, w_pw, stride=stride, padding=padding, tile_h=tile_h,
+            dw_act=dw_act, act=act, interpret=cfg.interpret)
+        out_layout = "replicated"
+    if legacy_call:
+        return out
+    return out, out_layout
 
 
 # ---------------------------------------------------------------------------

@@ -139,53 +139,82 @@ def mbconv_def(c_in: int, c_out: int, k: int = 3, expand_ratio: int = 6,
 
 
 def mbconv_block(
-    params: dict,
-    x: jax.Array,
+    x,
+    params=None,
     *,
     stride: int = 1,
     padding: str = "SAME",
     exp_act: Optional[str] = "silu",
     dw_act: Optional[str] = "silu",
-    kcfg=None,
+    cfg=None,
     mesh=None,
-) -> jax.Array:
+    pin=None,
+    in_layout: str = "replicated",
+    kcfg=None,
+):
     """Apply one MBConv block, routed by the conv-kernel config.
 
-    With ``kcfg.fused_mbconv`` (the default) the block runs the two-pass
-    fused ConvDK pipeline: pass 1 fuses expand-PW + DW per strip and
-    accumulates the SE pool on-chip; pass 2 folds the SE gate into the
-    projection in the same VMEM residency.  The per-layer (tile_h, mode,
-    residency) schedule — residency being the strip-staging mode of
-    ``kernels.staging`` — comes from ``core.autotune.get_mbconv_schedule``
-    unless ``kcfg`` pins one.  The identity residual is added when the
-    shapes allow (s == 1, C_in == C_out).
+    Canonical signature: ``mbconv_block(x, params, *, cfg, mesh, pin,
+    in_layout)`` returning ``(y, out_layout)`` — symmetric with
+    ``separable_block``, so the network-level layout solver can thread a
+    block chain through either family.  The legacy positional order
+    (``params`` first, bare-array return) and the ``kcfg=`` kwarg keep
+    working behind a warn-once deprecation shim.
 
-    With a ``mesh`` (and ``kcfg.shard_fused``), the fused pipeline runs
+    With ``fused`` (the default) the block runs the two-pass fused ConvDK
+    pipeline: pass 1 fuses expand-PW + DW per strip and accumulates the
+    SE pool on-chip; pass 2 folds the SE gate into the projection in the
+    same VMEM residency.  The per-layer (tile_h, mode, residency)
+    schedule — residency being the strip-staging mode of
+    ``kernels.staging`` — comes from ``core.autotune.get_mbconv_schedule``
+    unless ``pin`` (or the legacy config fields) pins one.  The identity
+    residual is added when the shapes allow (s == 1, C_in == C_out).
+
+    With a ``mesh`` (and the shard toggle), the fused pipeline runs
     mesh-sharded via ``shard_map``: batch on "data" (jointly with a "pod"
     axis when present), the expanded c_mid grid on "model", the SE pool
     psum'd across the model axis
     (``kernels.convdk_mbconv_fused_sharded``) — falling back to the
     single-device kernel when the mesh axes do not divide the grid.  The
     (tile_h, mode, residency, collective) schedule is then solved per
-    partitioning; when the solver picks ``psum_scatter`` the block output
-    comes back sharded on c_out (identical values).  The priced ~2x
-    collective saving is BLOCK-LOCAL: a layout-aware consumer keeps it,
-    while a replicated-input consumer (today's block entries — the
-    ROADMAP edge) repays the deferred all-gather at the next boundary,
-    landing exactly at the ring total — scatter is equal-or-better end
-    to end, never worse.
+    (partitioning, layout); when the solver picks ``psum_scatter`` the
+    block output comes back sharded on c_out (identical values) and
+    ``out_layout`` reports ``"model_sharded"``.
+
+    ``in_layout`` declares the ARRIVAL layout: ``"model_sharded"``
+    (c_in sharded on "model", dividing) is consumed collective-free by
+    identity-expand blocks (the only place it strictly wins — the
+    network DP exploits exactly this) and via an entry all-gather by
+    real-expand blocks (byte-identical to a boundary regather: the dense
+    expand needs all of c_in, which is why e > 1 boundaries tie).
 
     x: (B, H, W, C_in) NHWC -> (B, H', W', C_out).
     """
-    if kcfg is None:
-        # lazy import: configs.base imports models.model -> models.mbconv
-        from ..configs.base import kernel_config
-        kcfg = kernel_config()
+    from ..configs.base import _warn_once, kernel_config, resolve_pin
+    legacy_call = isinstance(x, dict)
+    if legacy_call:
+        _warn_once(
+            "mbconv_block_positional",
+            "mbconv_block(params, x) is deprecated; call "
+            "mbconv_block(x, params, ...) — the new order returns "
+            "(y, out_layout)")
+        x, params = params, x
+    if kcfg is not None:
+        _warn_once(
+            "block_kcfg_kwarg",
+            "the kcfg= kwarg on block entries is deprecated; pass cfg=")
+        if cfg is None:
+            cfg = kcfg
+    if cfg is None:
+        cfg = kernel_config()
+    from ..core.perfmodel import validate_layout
     from ..kernels import (
         can_shard_fused, conv_mesh_shape, convdk_mbconv_fused,
         convdk_mbconv_fused_sharded, convdk_mbconv_staged,
     )
 
+    validate_layout(in_layout)
+    eff = resolve_pin(cfg, pin, family="mbconv")
     c_in = x.shape[-1]
     c_mid = params["dw"].shape[-1]
     c_out = params["proj"].shape[-1]
@@ -198,13 +227,19 @@ def mbconv_block(
         w_exp = jnp.eye(c_mid, dtype=x.dtype)
         eff_exp_act = None
 
-    sharded = (mesh is not None and kcfg.shard_fused and kcfg.fused_mbconv
+    sharded = (mesh is not None and eff.shard and eff.fused
                and can_shard_fused(mesh, x.shape[0], c_mid))
     mesh_shape = conv_mesh_shape(mesh) if sharded else (1, 1)
-    tile_h, mode = kcfg.tile_h, kcfg.mbconv_mode or "retain"
-    residency = kcfg.residency
-    collective = kcfg.collective
-    if kcfg.autotune:
+    # a sharded arrival additionally needs c_in to divide the model factor
+    eff_in_layout = ("model_sharded"
+                     if (sharded and in_layout == "model_sharded"
+                         and c_in % mesh_shape[1] == 0)
+                     else "replicated")
+    pinned_collective = eff.resolved_collective
+    tile_h, mode = cfg.tile_h, eff.mode or "retain"
+    residency = eff.residency
+    collective = pinned_collective
+    if cfg.autotune:
         from ..core.autotune import get_mbconv_schedule
         b, h, w, _ = x.shape
         se_ratio = params["se_w1"].shape[1] / max(1, c_in)
@@ -213,8 +248,9 @@ def mbconv_block(
         sch = get_mbconv_schedule(
             b, h, w, c_in, c_mid, c_out, params["dw"].shape[0], stride,
             se_ratio=se_ratio, dtype_bytes=x.dtype.itemsize,
-            mesh_shape=mesh_shape, residency=kcfg.residency,
-            mode=kcfg.mbconv_mode, collective=kcfg.collective)
+            mesh_shape=mesh_shape, residency=eff.residency,
+            mode=eff.mode, collective=pinned_collective,
+            in_layout=eff_in_layout)
         tile_h = sch.tile_h
         mode = sch.mode
         residency = sch.residency
@@ -227,20 +263,30 @@ def mbconv_block(
         out = convdk_mbconv_fused_sharded(
             *args, mesh=mesh, stride=stride, padding=padding, tile_h=tile_h,
             mode=mode, exp_act=eff_exp_act, dw_act=dw_act,
-            interpret=kcfg.interpret, residency=residency,
-            collective=collective)
-    elif kcfg.fused_mbconv:
+            interpret=cfg.interpret, residency=residency,
+            collective=collective, in_layout=eff_in_layout)
+        # a padded scatter (non-dividing c_out) comes back sliced — not
+        # cleanly shard-consumable, so it reports replicated
+        out_layout = ("model_sharded"
+                      if (collective == "psum_scatter"
+                          and c_out % mesh_shape[1] == 0)
+                      else "replicated")
+    elif eff.fused:
         out = convdk_mbconv_fused(
             *args, stride=stride, padding=padding, tile_h=tile_h, mode=mode,
-            exp_act=eff_exp_act, dw_act=dw_act, interpret=kcfg.interpret,
+            exp_act=eff_exp_act, dw_act=dw_act, interpret=cfg.interpret,
             residency=residency)
+        out_layout = "replicated"
     else:
         out = convdk_mbconv_staged(
             *args, stride=stride, padding=padding, tile_h=tile_h,
-            exp_act=eff_exp_act, dw_act=dw_act, interpret=kcfg.interpret)
+            exp_act=eff_exp_act, dw_act=dw_act, interpret=cfg.interpret)
+        out_layout = "replicated"
     if stride == 1 and c_in == c_out and out.shape == x.shape:
         out = out + x
-    return out
+    if legacy_call:
+        return out
+    return out, out_layout
 
 
 # ---------------------------------------------------------------------------
@@ -273,16 +319,61 @@ def efficientnet_b0_apply(params: dict, images: jax.Array,
     Every MBConv block runs the two-pass fused ConvDK pipeline (or the
     staged baseline, per ``kcfg``) — EfficientNet-B0 end to end through the
     paper's dataflow.  With ``mesh``, every shardable block runs the
-    mesh-sharded fused pipeline (see ``mbconv_block``)."""
+    mesh-sharded fused pipeline (see ``mbconv_block``), and the per-block
+    schedules come from the NETWORK-level layout solve
+    (``core.autotune.get_network_plan``): the DP picks each block's
+    (residency, mode, collective, in/out layout) jointly over the whole
+    chain — the stem output materializes model-sharded when the plan says
+    so (a ``with_sharding_constraint``; block0's identity expand then
+    consumes it collective-free), and every block call threads the solved
+    layout chain via ``pin=`` / ``in_layout=``."""
     specs = effnet_block_specs(cfg)
     dt = jnp.dtype(cfg.dtype)
     x = jax.lax.conv_general_dilated(
         images.astype(dt), params["stem"].astype(dt), (2, 2), "SAME",
         dimension_numbers=("NHWC", "HWIO", "NHWC"))
     x = jax.nn.silu(x)
+
+    if kcfg is None:
+        from ..configs.base import kernel_config
+        kcfg = kernel_config()
+    plan = None
+    if (mesh is not None and kcfg.shard_fused and kcfg.fused_mbconv
+            and kcfg.autotune):
+        from ..configs.base import SchedulePin
+        from ..core.autotune import get_network_plan
+        from ..kernels import conv_mesh_shape
+        from ..kernels.convdk_sharded import MODEL_AXIS, _batch_axes
+        b, h, w, c0 = x.shape
+        rows, hh, ww = [], h, w
+        for sp in specs:
+            rows.append((hh, ww, sp.c_in, sp.c_mid, sp.c_out, sp.k, sp.s))
+            hh, ww = -(-hh // sp.s), -(-ww // sp.s)
+        plan = get_network_plan(rows, b, conv_mesh_shape(mesh),
+                                dtype_bytes=dt.itemsize,
+                                se_ratio=cfg.se_ratio)
+        if plan.stem_layout == "model_sharded":
+            # materialize the stem output once per element mesh-wide: each
+            # device of a model group holds only its c0/mp channel slice,
+            # which block0's sharded-in entry consumes without a gather
+            from jax.sharding import NamedSharding
+            from jax.sharding import PartitionSpec as _P
+            x = jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, _P(_batch_axes(mesh), None, None,
+                                          MODEL_AXIS)))
+
     for i, sp in enumerate(specs):
-        x = mbconv_block(params[f"block{i}"], x, stride=sp.s, kcfg=kcfg,
-                         mesh=mesh)
+        if plan is not None:
+            bp = plan.blocks[i]
+            pin = SchedulePin(mode=bp.schedule.mode,
+                              residency=bp.schedule.residency,
+                              collective=bp.schedule.collective)
+            x, _lay = mbconv_block(x, params[f"block{i}"], stride=sp.s,
+                                   cfg=kcfg, mesh=mesh, pin=pin,
+                                   in_layout=bp.in_layout)
+        else:
+            x, _lay = mbconv_block(x, params[f"block{i}"], stride=sp.s,
+                                   cfg=kcfg, mesh=mesh)
     x = jax.nn.silu(jnp.einsum("bhwc,cd->bhwd", x,
                                params["head"].astype(x.dtype)))
     x = x.mean(axis=(1, 2))

@@ -315,9 +315,9 @@ def apply_vision_stem(params: dict, images: jax.Array,
     x = jax.nn.relu(x)
     for i in range(cfg.vision_stem_blocks):
         if _stem_is_mbconv(cfg):
-            x = mbconv_mod.mbconv_block(params[f"sep{i}"], x, stride=2)
+            x, _lay = mbconv_mod.mbconv_block(x, params[f"sep{i}"], stride=2)
         else:
-            x = separable_block(params[f"sep{i}"], x, stride=2)
+            x, _lay = separable_block(x, params[f"sep{i}"], stride=2)
     b, h, w, c = x.shape
     tokens = dense(params["lift"], x.reshape(b, h * w, c))
     return tokens.astype(cfg.adtype)

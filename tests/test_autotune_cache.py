@@ -238,6 +238,43 @@ def test_legacy_pre_collective_keys_migrate(cache_dir):
     assert sep_keys and all("coll=" not in k for k in sep_keys)
 
 
+def test_legacy_pre_layout_keys_migrate(cache_dir):
+    """MBConv entries persisted before the input-layout axis (no
+    ``layout=`` segment) were all solved for a replicated arrival — the
+    only entry form that existed — so they must be honored as the
+    ``layout=replicated`` picks after a disk round-trip, while a
+    c_in-sharded arrival solves (and caches) under its own
+    ``layout=model_sharded`` key instead of echoing the replicated
+    schedule."""
+    tmp_path, cache = cache_dir
+    sch = get_mbconv_schedule(8, 14, 14, 80, 480, 112, 5, 1,
+                              mesh_shape=(2, 4))
+    (key,) = list(_entries(tmp_path))
+    assert "|layout=replicated|" in key
+    legacy_key = key.replace("|layout=replicated|", "|")   # pre-layout era
+    assert "layout=" not in legacy_key
+    edited_th = 1 if sch.tile_h != 1 else 2
+    (tmp_path / "convdk_schedules.json").write_text(json.dumps(
+        {"version": 1,
+         "entries": {legacy_key: {"tile_h": edited_th, "mode": "recompute",
+                                  "source": "measured"}}}))
+    cache.clear_memory()                                   # "new process"
+    again = get_mbconv_schedule(8, 14, 14, 80, 480, 112, 5, 1,
+                                mesh_shape=(2, 4))
+    assert (again.tile_h, again.mode) == (edited_th, "recompute")
+    assert again.in_layout == "replicated"
+
+    # a sharded arrival must NOT hit the migrated replicated entry: it
+    # solves fresh and persists under layout=model_sharded
+    sharded = get_mbconv_schedule(8, 14, 14, 80, 480, 112, 5, 1,
+                                  mesh_shape=(2, 4),
+                                  in_layout="model_sharded")
+    assert sharded.in_layout == "model_sharded"
+    keys = list(_entries(tmp_path))
+    assert any("|layout=model_sharded|" in k for k in keys)
+    assert any("|layout=replicated|" in k for k in keys)
+
+
 def test_corrupt_cache_file_is_ignored(cache_dir):
     tmp_path, _cache = cache_dir
     (tmp_path / "convdk_schedules.json").write_text("{not json")

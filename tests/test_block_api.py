@@ -1,0 +1,143 @@
+"""The block-entry API redesign: symmetric ``block(x, params, *, cfg,
+mesh, pin, in_layout) -> (y, out_layout)`` signatures, the ``SchedulePin``
+axis object, and the warn-once deprecation shims covering every legacy
+spelling (positional params-first order, the ``kcfg=`` kwarg, the
+per-axis ``ConvKernelConfig`` fields)."""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SchedulePin, resolve_pin, set_kernel_config
+from repro.configs.base import ConvKernelConfig, _WARNED
+from repro.models.common import separable_block, separable_def
+from repro.models.mbconv import mbconv_block, mbconv_def
+from repro.models.param import materialize
+
+KCFG = ConvKernelConfig(interpret=True)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_warn_state():
+    """Each case sees the warn-once shims unfired."""
+    saved = set(_WARNED)
+    _WARNED.clear()
+    yield
+    _WARNED.clear()
+    _WARNED.update(saved)
+
+
+def _mbconv_fixture(rng_key=0, ci=8, co=8):
+    params = materialize(mbconv_def(ci, co, k=3, expand_ratio=2),
+                         jax.random.key(rng_key))
+    x = jnp.asarray(np.random.default_rng(rng_key).normal(
+        size=(2, 9, 9, ci)), jnp.float32)
+    return x, params
+
+
+def test_new_signature_returns_layout_tuple():
+    x, params = _mbconv_fixture()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")         # new spelling: silent
+        out = mbconv_block(x, params, stride=1, cfg=KCFG)
+    y, lay = out
+    assert y.shape == x.shape
+    assert lay == "replicated"                 # no mesh: nothing sharded
+
+    sparams = materialize(separable_def(8, 16), jax.random.key(1))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        ys, lays = separable_block(x, sparams, stride=1, cfg=KCFG)
+    assert ys.shape == (2, 9, 9, 16)
+    assert lays == "replicated"
+
+
+def test_legacy_positional_order_warns_once_and_returns_bare_array():
+    x, params = _mbconv_fixture()
+    want, _ = mbconv_block(x, params, stride=1, cfg=KCFG)
+    with pytest.warns(DeprecationWarning, match="mbconv_block"):
+        got = mbconv_block(params, x, stride=1, cfg=KCFG)
+    assert isinstance(got, jax.Array)          # bare array, no tuple
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")         # second call: warned already
+        again = mbconv_block(params, x, stride=1, cfg=KCFG)
+    np.testing.assert_allclose(again, want, rtol=1e-5, atol=1e-5)
+
+
+def test_legacy_positional_separable_warns_once():
+    x, _ = _mbconv_fixture()
+    sparams = materialize(separable_def(8, 16), jax.random.key(1))
+    want, _ = separable_block(x, sparams, stride=1, cfg=KCFG)
+    with pytest.warns(DeprecationWarning, match="separable_block"):
+        got = separable_block(sparams, x, stride=1, cfg=KCFG)
+    assert isinstance(got, jax.Array)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_kcfg_kwarg_aliases_cfg_with_warning():
+    x, params = _mbconv_fixture()
+    want, _ = mbconv_block(x, params, stride=1, cfg=KCFG)
+    with pytest.warns(DeprecationWarning, match="kcfg"):
+        got, lay = mbconv_block(x, params, stride=1, kcfg=KCFG)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    assert lay == "replicated"
+
+
+def test_schedule_pin_merge_and_layout_sugar():
+    explicit = SchedulePin(mode="retain", layout="model_sharded")
+    base = SchedulePin(mode="recompute", residency="strip_dma")
+    merged = explicit.merged_over(base)
+    assert merged.mode == "retain"             # explicit wins
+    assert merged.residency == "strip_dma"     # base fills the gap
+    # the layout axis is sugar over the collective
+    assert merged.resolved_collective == "psum_scatter"
+    assert SchedulePin(layout="replicated").resolved_collective \
+        == "ring_allreduce"
+    assert SchedulePin(collective="psum_scatter").resolved_collective \
+        == "psum_scatter"
+    assert SchedulePin().resolved_collective is None
+    with pytest.raises(ValueError, match="pin conflict"):
+        _ = SchedulePin(collective="ring_allreduce",
+                        layout="model_sharded").resolved_collective
+
+
+def test_resolve_pin_precedence():
+    """Explicit pin > cfg.pin > legacy per-axis config fields."""
+    cfg = ConvKernelConfig(mbconv_mode="retain", residency="resident",
+                           pin=SchedulePin(mode="recompute"))
+    eff = resolve_pin(cfg, family="mbconv")
+    assert eff.mode == "recompute"             # cfg.pin beats legacy field
+    assert eff.residency == "resident"         # legacy fills unpinned axis
+    eff2 = resolve_pin(cfg, pin=SchedulePin(mode="retain"))
+    assert eff2.mode == "retain"               # call-site pin beats both
+    # the fused toggle resolves per family
+    cfg2 = ConvKernelConfig(fused_separable=False, fused_mbconv=True)
+    assert resolve_pin(cfg2, family="separable").fused is False
+    assert resolve_pin(cfg2, family="mbconv").fused is True
+
+
+def test_set_kernel_config_legacy_fields_warn_once():
+    try:
+        with pytest.warns(DeprecationWarning, match="SchedulePin"):
+            set_kernel_config(residency="resident")
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")     # warned once, stays quiet
+            set_kernel_config(collective="ring_allreduce")
+            set_kernel_config(pin=SchedulePin(residency="strip_dma"))
+    finally:
+        set_kernel_config()                    # restore defaults
+
+
+def test_pin_kwarg_steers_the_block():
+    """A pin that forces the staged (non-fused) path must change the
+    routing but not the math."""
+    x, params = _mbconv_fixture()
+    fused, _ = mbconv_block(x, params, stride=1, cfg=KCFG)
+    staged, lay = mbconv_block(x, params, stride=1, cfg=KCFG,
+                               pin=SchedulePin(fused=False))
+    assert lay == "replicated"
+    np.testing.assert_allclose(staged, fused, rtol=1e-4, atol=1e-4)

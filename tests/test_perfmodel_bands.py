@@ -347,20 +347,31 @@ def test_psum_scatter_halves_projection_collective():
     assert scatter_picks > 0
 
 
-def test_psum_scatter_requires_divisible_c_out():
-    """A scatter pin on a partitioning that cannot run it must raise —
-    the model never describes a layout the kernels will reject — and the
-    auto solve quietly keeps the ring there."""
+def test_psum_scatter_pads_indivisible_c_out():
+    """Non-dividing c_out no longer rejects scatter: the projection is
+    padded to the next model-factor multiple (zero columns contribute zero
+    partials, so the reduction is exact) and the scatter words are priced
+    at the padded width.  The pad overhead is real — the auto solve only
+    flips when the padded scatter still beats the ring."""
     from repro.core.autotune import select_mbconv_schedule
+    from repro.core.perfmodel import scatter_c_out
 
     shape = MBConvShape(b=8, h=14, w=14, c_in=80, c_mid=480, c_out=114,
                         k=5, s=1)                      # 114 % 4 != 0
-    assert not can_psum_scatter(shape, (2, 4))
-    with pytest.raises(ValueError):
-        select_mbconv_schedule(shape, mesh_shape=(2, 4),
-                               collective="psum_scatter")
-    auto = select_mbconv_schedule(shape, mesh_shape=(2, 4))
-    assert auto.collective == "ring_allreduce"
+    assert can_psum_scatter(shape, (2, 4))
+    assert scatter_c_out(114, 4) == 116
+    pinned = select_mbconv_schedule(shape, mesh_shape=(2, 4),
+                                    collective="psum_scatter")
+    assert pinned.collective == "psum_scatter"
+    # scatter words = 2(mp-1)*squeeze + (mp-1)*padded projection, per dp group
+    dp, mp = 2, 4
+    squeeze = (shape.b // dp) * shape.c_se
+    proj_pad = (shape.b // dp) * shape.out_h * shape.out_w * 116
+    assert pinned.collective_words == dp * (2 * (mp - 1) * squeeze
+                                            + (mp - 1) * proj_pad)
+    ring = select_mbconv_schedule(shape, mesh_shape=(2, 4),
+                                  collective="ring_allreduce")
+    assert pinned.collective_words < ring.collective_words
     # off-mesh the axis is degenerate: everything normalizes to the ring
     off = select_mbconv_schedule(shape, mesh_shape=(1, 1))
     assert off.collective == "ring_allreduce" and off.collective_words == 0
