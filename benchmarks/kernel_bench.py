@@ -25,19 +25,25 @@ from __future__ import annotations
 
 import argparse
 import sys
-import time
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.autotune import get_fused_schedule, get_mbconv_schedule
+from repro.compat import pallas_dma_priority_supported
+from repro.core import telemetry
+from repro.core.autotune import (
+    benchmark_mbconv_sweep,
+    get_fused_schedule,
+    get_mbconv_schedule,
+)
 from repro.core.perfmodel import (
     COLLECTIVE_MODES,
     RESIDENCY_MODES,
     MBConvShape,
     can_psum_scatter,
 )
+from repro.core.telemetry import measure
+from repro.core.trajectory import write_bench
 from repro.core.workloads import (
     EFFICIENTNET_B0_MBCONV,
     EFFICIENTNET_V2_K7_SEPARABLE,
@@ -52,12 +58,10 @@ from repro.kernels import (
 
 
 def _time(fn, *args, iters=5):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        jax.block_until_ready(fn(*args))
-    return (time.perf_counter() - t0) / iters * 1e6
+    """Mean microseconds per call via the shared ``telemetry.measure``
+    harness (one warmup call, ``iters`` timed calls — the old local loop
+    evaluated ``fn`` twice during warmup to probe its return type)."""
+    return measure(fn, *args, iters=iters).mean_us
 
 
 def rows():
@@ -355,6 +359,115 @@ def mbconv_walltime_row():
     ]
 
 
+def _measured_b0_shapes(scale):
+    """B0 rows at the measured (CPU-interpret-affordable) resolution:
+    spatial dims divided by ``scale`` (floored at the kernel size), batch
+    1.  Byte records pair modeled bytes with walltime AT THIS SHAPE — an
+    honest pairing; the full-resolution model tables are gated separately
+    by ``--fused``."""
+    for i, (ci, co, e, k, s, hw) in enumerate(EFFICIENTNET_B0_MBCONV):
+        yield f"b0_mbconv{i}", ci, ci * e, co, k, s, max(k, hw // scale), hw
+
+
+def _mbconv_args(rng, ci, cm, co, k, hw):
+    r = lambda *s: jnp.asarray(rng.normal(size=s), jnp.float32)  # noqa: E731
+    cse = max(1, ci // 4)
+    return (r(1, hw, hw, ci), r(ci, cm), r(k, k, cm) * 0.3,
+            r(cm, cse), r(cse) * 0.1, r(cse, cm), r(cm) * 0.1, r(cm, co))
+
+
+def measure_b0(scale=4, iters=3, persist=True, bench_out=None):
+    """The measured ground-truth loop: time the real fused MBConv kernel
+    per (B0 layer x schedule-axes) point and emit the ``BENCH_<host>.json``
+    trajectory artifact.
+
+    Per layer: the candidate set is ``benchmark_mbconv_sweep``'s default —
+    the solver's own pick under each pinned pass-2 mode, i.e. exactly the
+    points the retain/recompute crossover model claims to order.  The
+    record's gated fields (modeled bytes, solver axes) are deterministic;
+    ``walltime_us`` (the solver's point) gates only against a same-host
+    baseline, and the stopwatch's winner is recorded separately as
+    ``measured_best`` (informational — timing noise must not flip gated
+    fields).  With ``persist`` the winner also lands in the schedule
+    cache's measured tier, keyed at the measured shape.
+    """
+    from repro.core.perfmodel import MBConvShape as _MBShape
+    from repro.core.perfmodel import mbconv_fused_traffic
+
+    rng = np.random.default_rng(7)
+    records = []
+    for name, ci, cm, co, k, s, hw, full_hw in _measured_b0_shapes(scale):
+        sch = get_mbconv_schedule(1, hw, hw, ci, cm, co, k, s)
+        args = _mbconv_args(rng, ci, cm, co, k, hw)
+        best, results = benchmark_mbconv_sweep(
+            *args, stride=s, iters=iters, interpret=True, persist=persist)
+        shape = _MBShape(b=1, h=hw, w=hw, c_in=ci, c_mid=cm, c_out=co,
+                         k=k, s=s)
+        cands = []
+        for res in results:
+            t = mbconv_fused_traffic(shape, res["tile_h"], res["mode"],
+                                     residency=res["residency"])
+            cands.append({
+                "axes": {"tile_h": res["tile_h"], "mode": res["mode"],
+                         "residency": res["residency"]},
+                "walltime_us": res["seconds"] * 1e6,
+                "modeled_bytes": t.total_bytes,
+                "modeled_dma_issues": t.dma_issues,
+            })
+        solver_point = {"tile_h": sch.tile_h, "mode": sch.mode,
+                        "residency": sch.residency}
+        at_solver = next(
+            (c for c in cands if c["axes"] == solver_point), None)
+        if at_solver is None:
+            m = measure(
+                lambda: convdk_mbconv_fused(
+                    *args, stride=s, tile_h=sch.tile_h, mode=sch.mode,
+                    residency=sch.residency, interpret=True), iters=iters)
+            at_solver = {"axes": solver_point, "walltime_us": m.best_us,
+                         "modeled_bytes": sch.traffic.total_bytes,
+                         "modeled_dma_issues": sch.traffic.dma_issues}
+            cands.append(at_solver)
+        records.append({
+            "name": name,
+            "shape": {"b": 1, "hw": hw, "full_hw": full_hw, "c_in": ci,
+                      "c_mid": cm, "c_out": co, "k": k, "s": s},
+            "axes": solver_point,
+            "modeled_bytes": at_solver["modeled_bytes"],
+            "modeled_dma_issues": at_solver["modeled_dma_issues"],
+            "collective_bytes": 0,
+            "walltime_us": at_solver["walltime_us"],
+            "candidates": cands,
+            "measured_best": {"tile_h": best["tile_h"],
+                              "mode": best["mode"],
+                              "residency": best["residency"],
+                              "walltime_us": best["seconds"] * 1e6},
+        })
+        agree = ("agree" if best["mode"] == sch.mode else "DISAGREE")
+        print(f"{name},{hw},{sch.tile_h},{sch.mode},{sch.residency},"
+              f"{at_solver['walltime_us']:.1f}us,"
+              f"measured_best={best['mode']}@{best['seconds'] * 1e6:.1f}us,"
+              f"{agree}")
+    config = {"scale": scale, "iters": iters, "mesh": "1x1", "batch": 1,
+              "dtype_bytes": 4, "interpret": True}
+    knobs = {
+        "prefetch_priority_supported": pallas_dma_priority_supported(),
+        "prefetch_priority": ("unsupported by installed pallas — not "
+                              "exercised" if not
+                              pallas_dma_priority_supported() else 1),
+        "k_w_strip_split": "not implemented; verdict from roofline fit",
+    }
+    if bench_out is not None:
+        path = write_bench(bench_out, records, config=config,
+                           counters=telemetry.snapshot(), knobs=knobs)
+        print(f"# BENCH artifact: {path}")
+    disagreements = sum(
+        1 for r in records
+        if r["measured_best"]["mode"] != r["axes"]["mode"])
+    print(f"# measured {len(records)} layers; stopwatch disagrees with the "
+          f"solver's mode on {disagreements}")
+    return records
+
+
 def _parse_mesh(text):
     try:
         dp, mp = (int(t) for t in text.lower().split("x"))
@@ -426,6 +539,26 @@ def main():
                          "modeled bytes against greedy per-layer picks "
                          "(strictly lower, with >=1 boundary staying "
                          "sharded, on a model-sharded mesh)")
+    ap.add_argument("--measure", action="store_true",
+                    help="time REAL fused-MBConv executions per (B0 layer "
+                         "x schedule-axes) point at a scaled-down "
+                         "resolution, persist stopwatch winners into the "
+                         "schedule cache's measured tier, and emit the "
+                         "BENCH_<host>.json trajectory artifact")
+    ap.add_argument("--bench-out", default=None, metavar="DIR",
+                    help="with --measure: directory (or explicit .json "
+                         "path) for the BENCH_<host>.json artifact "
+                         "(default: no artifact, print-only)")
+    ap.add_argument("--measure-scale", type=int, default=4, metavar="N",
+                    help="with --measure: divide B0 spatial dims by N "
+                         "(floored at the kernel size) so interpret-mode "
+                         "timing stays affordable (default 4)")
+    ap.add_argument("--measure-iters", type=int, default=3, metavar="N",
+                    help="with --measure: timed iterations per point after "
+                         "one warmup (default 3)")
+    ap.add_argument("--no-persist", action="store_true",
+                    help="with --measure: do NOT record stopwatch winners "
+                         "in the schedule cache's measured tier")
     args = ap.parse_args()
     if args.mesh is not None and not args.fused:
         raise SystemExit("--mesh requires --fused")
@@ -441,6 +574,16 @@ def main():
         raise SystemExit("--collective requires --mesh DxM with M > 1")
     if args.network and not args.fused:
         raise SystemExit("--network requires --fused")
+    if args.bench_out is not None and not args.measure:
+        raise SystemExit("--bench-out requires --measure")
+    if args.measure:
+        if args.measure_scale < 1 or args.measure_iters < 1:
+            raise SystemExit("--measure-scale/--measure-iters must be >= 1")
+        measure_b0(scale=args.measure_scale, iters=args.measure_iters,
+                   persist=not args.no_persist, bench_out=args.bench_out)
+        if not args.fused:
+            return
+        print()
     if args.fused:
         mesh_shape = _parse_mesh(args.mesh) if args.mesh else (1, 1)
         collective = _parse_collective(args.collective)

@@ -1,13 +1,22 @@
-"""Roofline table from the dry-run sweep (results/dryrun/*.json).
+"""Roofline table from the dry-run sweep (results/dryrun/*.json), plus the
+measured-calibration report that closes the perfmodel loop.
 
-Prints the per-cell three-term roofline and the dominant bottleneck; used by
-EXPERIMENTS.md §Roofline.  Run the sweep first:
+Default: prints the per-cell three-term roofline and the dominant
+bottleneck; used by EXPERIMENTS.md §Roofline.  Run the sweep first:
 
     PYTHONPATH=src python -m repro.launch.dryrun --all --both-meshes
+
+``--bench BENCH_<host>.json`` instead calibrates the byte model against a
+measured trajectory artifact (``kernel_bench --measure``): least-squares
+perfmodel coefficients (us per modeled MB, us per DMA issue, us per
+collective MB), modeled-vs-measured rank agreement per schedule axis, and
+the measurement's verdict on the open DMA knobs (prefetch ``priority=1``,
+k_w-direction strip split).
 """
 
 from __future__ import annotations
 
+import argparse
 import glob
 import json
 import os
@@ -66,12 +75,92 @@ def rows_csv() -> List[tuple]:
     return out
 
 
+def calibration_report(bench_path: str) -> Dict:
+    """Fit perfmodel coefficients from a BENCH trajectory artifact and
+    report whether the byte model ORDERS schedule points the way the
+    stopwatch does.
+
+    Every measured candidate point (layer x schedule axes) is one fit
+    sample; the fitted ``us_per_dma_issue`` is the term PR 4 flagged as
+    unmodeled, and its sign/size is what decides the k_w-direction strip
+    split (which buys no bytes, only finer issues).  Returns the report
+    as a dict (tests consume it); prints the human table."""
+    from repro.core.perfmodel import fit_perf_coefficients
+    from repro.core.trajectory import load_bench, rank_agreement
+
+    bench = load_bench(bench_path)
+    samples = []
+    for rec in bench["records"]:
+        for c in rec.get("candidates", ()):
+            samples.append({
+                "walltime_us": c["walltime_us"],
+                "modeled_bytes": c["modeled_bytes"],
+                "dma_issues": c.get("modeled_dma_issues", 0),
+                "collective_bytes": rec.get("collective_bytes", 0),
+            })
+    coeffs = fit_perf_coefficients(samples)
+    host = bench.get("host", {})
+    print(f"== perfmodel calibration: {len(samples)} measured points, "
+          f"{len(bench['records'])} layers, host "
+          f"{host.get('node')}/{host.get('backend')} ==")
+    print(f"base_us              {coeffs.base_us:12.2f}")
+    print(f"us_per_modeled_MB    {coeffs.us_per_mb:12.2f}")
+    print(f"us_per_dma_issue     {coeffs.us_per_dma_issue:12.4f}")
+    print(f"us_per_collective_MB {coeffs.us_per_collective_mb:12.2f}")
+    print(f"fit_rms_us           {coeffs.rms_us:12.2f}")
+    agreements = {}
+    print("\n== modeled-vs-measured rank agreement per schedule axis ==")
+    print("axis,pairs,agree,model_ties,agreement")
+    for axis in ("mode", "residency", "tile_h"):
+        agr = rank_agreement(bench["records"], axis)
+        agreements[axis] = agr
+        if agr is None:
+            print(f"{axis},0,0,0,n/a (no controlled pairs measured)")
+        else:
+            frac = ("n/a" if agr["agreement"] is None
+                    else f"{agr['agreement']:.2f}")
+            print(f"{axis},{agr['pairs']},{agr['agree']},"
+                  f"{agr['model_ties']},{frac}")
+    knobs = bench.get("knobs", {})
+    print("\n== DMA knob verdicts (measured, not argued) ==")
+    if knobs.get("prefetch_priority_supported"):
+        print("prefetch priority=1: exercised by the double-buffered "
+              "stream on this backend — compare same-host artifacts with "
+              "and without it")
+    else:
+        print("prefetch priority=1: NOT exercised — the installed "
+              "pallas's make_async_copy has no priority parameter "
+              "(compat drops the knob; recorded, not pretended)")
+    issue = coeffs.us_per_dma_issue
+    if issue > 0:
+        print(f"k_w strip split: REJECTED at this calibration — each "
+              f"extra issue costs {issue:.4f}us and a k_w split buys no "
+              f"bytes, only finer issues")
+    else:
+        print("k_w strip split: not refuted — fitted per-issue cost is "
+              "non-positive at this calibration (issue rate not the "
+              "bottleneck here); re-fit on TPU before building it")
+    return {"coefficients": coeffs.as_dict(), "rank_agreement": agreements,
+            "knobs": knobs, "n_samples": len(samples)}
+
+
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", default=None, metavar="BENCH.json",
+                    help="calibrate perfmodel coefficients from a "
+                         "kernel_bench --measure trajectory artifact "
+                         "instead of printing the dry-run roofline table")
+    ap.add_argument("--mesh", default="16x16",
+                    help="dry-run mesh to tabulate (default 16x16)")
+    args = ap.parse_args()
+    if args.bench is not None:
+        calibration_report(args.bench)
+        return
     recs = load()
     if not recs:
         print("no dry-run results found; run repro.launch.dryrun first")
         return
-    table(recs, "16x16")
+    table(recs, args.mesh)
     ok = sum(1 for r in recs if r["status"] == "ok")
     skip = sum(1 for r in recs if r["status"] == "skip")
     err = sum(1 for r in recs if r["status"] == "error")

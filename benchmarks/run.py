@@ -6,17 +6,19 @@ framework-level harnesses.  Prints ``name,us_per_call,derived`` CSV.
 
 from __future__ import annotations
 
-import time
+from repro.core.telemetry import measure
 
 
 def main() -> None:
     print("name,us_per_call,derived")
 
     # --- paper tables (Figs. 7-8): analytical CIM model -------------------
-    t0 = time.perf_counter()
     from benchmarks.cim_tables import run_all
-    results = run_all(quiet=True)
-    us = (time.perf_counter() - t0) * 1e6
+    out = {}
+    m = measure(lambda: out.setdefault("r", run_all(quiet=True)),
+                iters=1, warmup=0, name="cim_tables")
+    results = out["r"]
+    us = m.best_us
     for model, util in results["fig7a"].items():
         print(f"fig7a_util_{model},{us:.0f},ws_convdk={util:.2f}%")
     for model, red in results["fig7c"].items():

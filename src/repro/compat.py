@@ -113,12 +113,36 @@ class _SyncCopy:
         pass
 
 
-def pallas_async_copy(src, dst, sem):
-    """``pltpu.make_async_copy`` across versions (sync-copy fallback)."""
+def pallas_async_copy(src, dst, sem, priority=None):
+    """``pltpu.make_async_copy`` across versions (sync-copy fallback).
+
+    ``priority`` requests a DMA stream priority for the copy (prefetches
+    want the low-priority background stream, ``priority=1``, so demand
+    fetches overtake them).  The installed pallas's ``make_async_copy``
+    only grew that parameter in later releases, so it is passed through
+    WHEN SUPPORTED and silently dropped otherwise —
+    ``pallas_dma_priority_supported()`` reports which happened, and the
+    bench records the knob as unsupported rather than pretending it was
+    exercised."""
     pltpu = _pltpu()
     if sem is not None and hasattr(pltpu, "make_async_copy"):
+        if priority is not None and pallas_dma_priority_supported():
+            return pltpu.make_async_copy(src, dst, sem, priority=priority)
         return pltpu.make_async_copy(src, dst, sem)
     return _SyncCopy(src, dst)
+
+
+def pallas_dma_priority_supported() -> bool:
+    """Whether ``make_async_copy`` accepts a ``priority`` argument here."""
+    pltpu = _pltpu()
+    fn = getattr(pltpu, "make_async_copy", None)
+    if fn is None:
+        return False
+    try:
+        import inspect
+        return "priority" in inspect.signature(fn).parameters
+    except (TypeError, ValueError):
+        return False
 
 
 # ---------------------------------------------------------------------------

@@ -77,6 +77,8 @@ from .perfmodel import (
     validate_layout,
     validate_residency,
 )
+from . import telemetry
+from .telemetry import measure
 
 MeshShape = Tuple[int, int]   # ("data", "model") axis sizes, (1, 1) = 1 core
 
@@ -312,9 +314,12 @@ class ScheduleCache:
                 try:
                     payload = json.loads(self.path.read_text())
                     if payload.get("version") == 1:
-                        self._disk = {
-                            self._migrate_key(k): v
-                            for k, v in payload.get("entries", {}).items()}
+                        for k, v in payload.get("entries", {}).items():
+                            new_k = self._migrate_key(k)
+                            if new_k != k:
+                                telemetry.counter(
+                                    "schedule_cache.migrated_keys")
+                            self._disk[new_k] = v
                 except (OSError, ValueError):
                     pass                   # unreadable cache = empty cache
         return self._disk
@@ -335,13 +340,18 @@ class ScheduleCache:
     def get(self, key: str) -> Optional[dict]:
         hit = self._mem.get(key)
         if hit is not None:
+            telemetry.counter("schedule_cache.hit.memory")
             return hit
         hit = self._load_disk().get(key)
         if hit is not None:
+            telemetry.counter("schedule_cache.hit.disk")
             self._mem[key] = hit
+        else:
+            telemetry.counter("schedule_cache.miss")
         return hit
 
     def put(self, key: str, entry: dict, persist: bool = True) -> None:
+        telemetry.counter("schedule_cache.put")
         self._mem[key] = entry
         if persist and self.path is not None:
             disk = self._load_disk()
@@ -669,6 +679,8 @@ def get_fused_schedule(
                             in_layout, collective)
     sched = select_fused_schedule(shape, tpu, mesh_shape, residency,
                                   in_layout, collective)
+    telemetry.counter("autotune.solve.separable")
+    telemetry.counter(f"autotune.pick.residency.{sched.residency}")
     cache.put(key, {"tile_h": sched.tile_h, "residency": sched.residency,
                     "source": "model", "recorded_at": time.time()})
     return sched
@@ -888,6 +900,10 @@ def get_mbconv_schedule(
                                    mesh_shape, res, coll, in_layout)
     sched = select_mbconv_schedule(shape, tpu, mesh_shape, residency, mode,
                                    collective, in_layout)
+    telemetry.counter("autotune.solve.mbconv")
+    telemetry.counter(f"autotune.pick.residency.{sched.residency}")
+    telemetry.counter(f"autotune.pick.mode.{sched.mode}")
+    telemetry.counter(f"autotune.pick.collective.{sched.collective}")
     cache.put(key, {"tile_h": sched.tile_h, "mode": sched.mode,
                     "residency": sched.residency,
                     "collective": sched.collective,
@@ -1203,15 +1219,14 @@ def benchmark_fused_sweep(
 
     Returns (best_tile_h, ((tile_h, seconds_per_call), ...)).  Use when the
     analytical model ties candidates or a deployment wants ground truth; the
-    sweep runs each candidate ``iters`` times after one warmup call, under
+    sweep routes every candidate through ``telemetry.measure`` (one warmup
+    call, then ``iters`` timed calls, best iteration reported), under
     ``residency`` (None = the kernels' default staging mode).  With
     ``persist=True`` the winning tile_h is recorded in the schedule cache —
     under the same residency request it was measured at — as a
     ``"measured"`` entry (which outranks model picks and, when a cache dir
     is configured, survives restarts).
     """
-    import jax
-
     from ..kernels.convdk_fused import convdk_fused_separable
 
     res_used = residency or DEFAULT_RESIDENCY
@@ -1223,11 +1238,9 @@ def benchmark_fused_sweep(
         fn = lambda: convdk_fused_separable(  # noqa: E731
             x, w_dw, w_pw, stride=stride, padding=padding, tile_h=th,
             interpret=interpret, residency=res_used)
-        jax.block_until_ready(fn())                      # warmup / compile
-        t0 = time.perf_counter()
-        for _ in range(iters):
-            jax.block_until_ready(fn())
-        results.append((th, (time.perf_counter() - t0) / iters))
+        m = measure(fn, iters=iters, warmup=1,
+                    name=f"fused_sweep.th{th}.{res_used}")
+        results.append((th, m.best_s))
     best = min(results, key=lambda r: r[1])[0]
     if persist:
         b, h, w_in, c_in = x.shape
@@ -1245,4 +1258,64 @@ def benchmark_fused_sweep(
             entry["residency"] = res_used
         get_schedule_cache().put(
             _sep_key(shape, tpu, residency=residency), entry)
+    return best, tuple(results)
+
+
+def benchmark_mbconv_sweep(
+    x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj, *, stride: int,
+    padding: str = "SAME", se_ratio: float = 0.25, iters: int = 3,
+    interpret: Optional[bool] = None, persist: bool = False,
+    tpu: TPUConfig = TPUConfig(),
+    candidates: Optional[Sequence[dict]] = None,
+) -> Tuple[dict, Tuple[dict, ...]]:
+    """Measured MBConv sweep: time the real two-pass kernel per schedule
+    point and let the stopwatch arbitrate the axes the byte model ties.
+
+    ``candidates`` is a sequence of ``{"tile_h", "mode", "residency"}``
+    dicts; the default set is the solver's own pick under each pinned
+    pass-2 mode — the exact pair of points the retain/recompute crossover
+    model claims to order, measured at the tile_h/residency each mode's
+    VMEM footprint actually allows.  Returns ``(best, results)`` where
+    every result dict carries the candidate axes plus ``seconds`` (best
+    timed iteration via ``telemetry.measure``).  With ``persist=True``
+    the winner lands in the schedule cache under the UNPINNED key as a
+    ``"measured"`` entry — the tier model picks can never clobber.
+    """
+    from ..kernels.convdk_mbconv import convdk_mbconv_fused
+
+    b, h, w_in, c_in = x.shape
+    c_mid, c_out = w_proj.shape
+    shape = MBConvShape(b=b, h=h, w=w_in, c_in=c_in, c_mid=c_mid,
+                        c_out=c_out, k=w_dw.shape[0], s=stride,
+                        se_ratio=se_ratio, dtype_bytes=x.dtype.itemsize)
+    if candidates is None:
+        candidates, seen = [], set()
+        for md in MBCONV_MODES:
+            pick = select_mbconv_schedule(shape, tpu, mode=md)
+            point = (pick.tile_h, pick.mode, pick.residency)
+            if point not in seen:
+                seen.add(point)
+                candidates.append({"tile_h": pick.tile_h, "mode": pick.mode,
+                                   "residency": pick.residency})
+    results = []
+    for cand in candidates:
+        th, md = int(cand["tile_h"]), cand["mode"]
+        res = validate_residency(cand.get("residency") or DEFAULT_RESIDENCY)
+        fn = lambda: convdk_mbconv_fused(  # noqa: E731
+            x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj,
+            stride=stride, padding=padding, tile_h=th, mode=md,
+            interpret=interpret, residency=res)
+        m = measure(fn, iters=iters, warmup=1,
+                    name=f"mbconv_sweep.th{th}.{md}.{res}")
+        results.append({"tile_h": th, "mode": md, "residency": res,
+                        "seconds": m.best_s})
+    best = min(results, key=lambda r: r["seconds"])
+    if persist:
+        entry = {"tile_h": best["tile_h"], "mode": best["mode"],
+                 "residency": best["residency"], "source": "measured",
+                 "recorded_at": time.time(),
+                 "timings_s": {
+                     f"th{r['tile_h']}.{r['mode']}.{r['residency']}":
+                         r["seconds"] for r in results}}
+        get_schedule_cache().put(_mbconv_key(shape, tpu), entry)
     return best, tuple(results)

@@ -61,6 +61,7 @@ from ..compat import (
     residual_barrier_needed,
     shard_map_compat,
 )
+from ..core import telemetry
 from ..core.perfmodel import (
     DEFAULT_COLLECTIVE,
     DEFAULT_LAYOUT,
@@ -300,6 +301,8 @@ def convdk_fused_separable_sharded(
     # the fwd trace; cheap once cached) so the barrier decision the trace
     # bakes in is the probed one, not the safe fallback
     residual_barrier_needed()
+    telemetry.counter("sharded.dispatch.separable")
+    telemetry.counter(f"sharded.collective.{collective}")
     return _sep_sharded_entry(mesh, stride, padding, tile_h, dw_act, act,
                               interpret, residency, collective, in_layout)(
         x, w_dw, w_pw)
@@ -510,6 +513,8 @@ def convdk_mbconv_fused_sharded(
     # wrapper): the probe itself dispatches through _mbconv_sharded_op
     # with the probing flag set, so this never recurses
     residual_barrier_needed()
+    telemetry.counter("sharded.dispatch.mbconv")
+    telemetry.counter(f"sharded.collective.{collective}")
     return _mbconv_sharded_entry(mesh, stride, padding, tile_h, mode,
                                  exp_act, dw_act, interpret, residency,
                                  collective, in_layout)(

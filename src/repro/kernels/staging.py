@@ -57,6 +57,7 @@ from ..compat import (
     pallas_dma_semaphores,
     pallas_supports_dma,
 )
+from ..core import telemetry
 from ..core.perfmodel import (
     DEFAULT_RESIDENCY,
     RESIDENCY_MODES,
@@ -107,6 +108,9 @@ class StripPlan:
     stride: int = 1
     k_h: int = 1
     residency: str = DEFAULT_RESIDENCY
+    prefetch_priority: Optional[int] = None   # DMA stream priority for
+    #                                           prefetches (None = default;
+    #                                           dropped where unsupported)
 
     def __post_init__(self):
         validate_residency(self.residency)
@@ -182,13 +186,28 @@ def strip_plan(
     stride: int = 1,
     k_h: int = 1,
     residency: Optional[str] = None,
+    prefetch_priority: Optional[int] = None,
 ) -> StripPlan:
-    """``StripPlan`` constructor with the engine-wide residency default."""
-    return StripPlan(
+    """``StripPlan`` constructor with the engine-wide residency default.
+
+    Building a plan is trace-time work, so the telemetry hooks here tick
+    once per kernel BUILD (per compilation), not per execution: a plan's
+    stream geometry fully determines its issue count and staged words, so
+    counting at construction is both cheap and exact."""
+    plan = StripPlan(
         h_tot=h_tot, w_tot=w_tot, w_span=w_span, c_block=c_block,
         tile_h=tile_h, grid=tuple(grid), window_dims=tuple(window_dims),
         stride=stride, k_h=k_h,
-        residency=DEFAULT_RESIDENCY if residency is None else residency)
+        residency=DEFAULT_RESIDENCY if residency is None else residency,
+        prefetch_priority=prefetch_priority)
+    telemetry.counter("staging.plans")
+    telemetry.counter(f"staging.residency.{plan.residency}")
+    if plan.is_dma:
+        telemetry.counter("staging.dma_issues", plan.n_steps)
+        telemetry.counter(
+            "staging.window_words",
+            plan.n_steps * plan.in_rows * plan.w_span * plan.c_block)
+    return plan
 
 
 class StripStream:
@@ -241,11 +260,17 @@ class StripStream:
         p = self.plan
         bi, ti, ci = window
         row0 = ti * p.tile_h * p.stride
+        # in the double-buffered stream every copy is a prefetch (started
+        # one cell ahead of its consumer), so the plan's prefetch priority
+        # applies to all of them — start and wait must describe the same
+        # copy, so the priority rides the descriptor uniformly
+        prio = p.prefetch_priority if p.residency == "strip_dma_db" else None
         return pallas_async_copy(
             self.x_ref.at[bi, pl.ds(row0, p.in_rows), pl.ds(0, p.w_span),
                           pl.ds(ci * p.c_block, p.c_block)],
             self.buf.at[slot],
             self.sem.at[slot] if self.sem is not None else None,
+            priority=prio,
         )
 
     # -- the one public op ---------------------------------------------------

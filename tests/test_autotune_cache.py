@@ -312,3 +312,49 @@ def test_schedule_cache_ignores_unwritable_dir(tmp_path):
     cache.directory.write_text("occupied")
     cache.put("k", {"tile_h": 1, "source": "model"})
     assert cache.get("k") == {"tile_h": 1, "source": "model"}
+
+
+# ---------------------------------------------------------------------------
+# telemetry counters (hit/miss/put/migration)
+# ---------------------------------------------------------------------------
+
+
+def _counts():
+    from repro.core import telemetry
+    t = telemetry.get_telemetry()
+    return {k: t.get(f"schedule_cache.{k}")
+            for k in ("hit.memory", "hit.disk", "miss", "put",
+                      "migrated_keys")}
+
+
+def test_cache_counters_hit_miss_put(cache_dir):
+    tmp_path, cache = cache_dir
+    base = _counts()
+    get_fused_schedule(1, 30, 30, 64, 32, 3, 1)     # miss -> solve -> put
+    after_solve = _counts()
+    assert after_solve["miss"] == base["miss"] + 1
+    assert after_solve["put"] == base["put"] + 1
+    get_fused_schedule(1, 30, 30, 64, 32, 3, 1)     # in-process hit
+    after_mem = _counts()
+    assert after_mem["hit.memory"] == after_solve["hit.memory"] + 1
+    assert after_mem["miss"] == after_solve["miss"]
+    cache.clear_memory()                            # simulated restart
+    get_fused_schedule(1, 30, 30, 64, 32, 3, 1)     # disk hit
+    after_disk = _counts()
+    assert after_disk["hit.disk"] == after_mem["hit.disk"] + 1
+    assert after_disk["put"] == after_mem["put"]    # echo, no re-record
+
+
+def test_cache_counters_migration(cache_dir):
+    import json as _json
+
+    tmp_path, cache = cache_dir
+    legacy = "sep|b1-h30-w30-ci64-co32-k3-s1|dtb4|v16777216-c128-t1.2.4.8.16.32|cpu"
+    (tmp_path / "convdk_schedules.json").write_text(_json.dumps(
+        {"version": 1, "entries": {
+            legacy: {"tile_h": 4, "source": "measured"}}}))
+    cache.clear_memory()
+    base = _counts()
+    get_fused_schedule(1, 30, 30, 64, 32, 3, 1)
+    after = _counts()
+    assert after["migrated_keys"] == base["migrated_keys"] + 1
