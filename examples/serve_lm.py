@@ -37,14 +37,11 @@ def main():
           f"(BIG/LITTLE admission): {[len(b) for b in batches]}")
 
     t0 = time.time()
-    done = 0
-    for batch_idx in batches:
-        width = max(len(requests[i]) for i in batch_idx)
-        prompts = np.zeros((len(batch_idx), width), np.int32)
-        for row, i in enumerate(batch_idx):
-            prompts[row, -len(requests[i]):] = requests[i]  # left-pad
-        out = engine.generate(prompts)
-        done += out.size
+    # generate_many consumes schedule() itself: LITTLE packs left-pad to
+    # shared length buckets, BIG prompts run alone, outputs come back in
+    # request order
+    outs = engine.generate_many(requests)
+    done = sum(o.size for o in outs)
     dt = time.time() - t0
     print(f"served {done} tokens in {dt:.2f}s ({done/dt:.1f} tok/s, "
           f"family={cfg.family} cache)")

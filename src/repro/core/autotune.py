@@ -1199,10 +1199,18 @@ def get_network_plan(
     """Trace-time-safe cached network solve (the in-process layer; the
     per-block schedules the plan pins are themselves persisted through
     the regular schedule cache under their ``layout=`` keys when the
-    model layer executes the plan)."""
-    return _network_plan_cached(tuple(tuple(r) for r in rows), b,
+    model layer executes the plan).  Counters distinguish a fresh DP
+    solve from a cache reuse — the vision serving engine leans on reuse
+    being the steady state (one solve per resolution bucket, then every
+    batch of that bucket replays it)."""
+    misses_before = _network_plan_cached.cache_info().misses
+    plan = _network_plan_cached(tuple(tuple(r) for r in rows), b,
                                 tuple(mesh_shape), dtype_bytes, se_ratio,
                                 tpu)
+    solved = _network_plan_cached.cache_info().misses > misses_before
+    telemetry.counter("autotune.network_plan.solve" if solved
+                      else "autotune.network_plan.reuse")
+    return plan
 
 
 # ---------------------------------------------------------------------------

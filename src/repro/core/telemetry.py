@@ -11,6 +11,11 @@ counters that let a run explain what it actually did:
   to leave permanently on.
 * **Spans** — named wall-time aggregates (count / total / min / max) via
   the ``span(name)`` context manager.
+* **Series** — bounded sample recorders (``record(name, value)``) for
+  distributions the aggregates cannot answer: request latencies, queue
+  depths.  A series keeps the most recent ``SERIES_CAP`` samples and
+  summarizes as count / last / max / nearest-rank percentiles
+  (``percentiles()``) — the serving layer's p50/p90/p99 live here.
 * **``measure()``** — THE timing loop for real kernel executions: warmup
   calls (compile) followed by timed iterations, each blocked to
   completion with ``jax.block_until_ready`` (which walks pytrees, so
@@ -33,17 +38,20 @@ The global registry is process-wide.  ``snapshot()`` returns plain dicts
 
 from __future__ import annotations
 
+import math
 import os
 import platform
 import re
 import threading
 import time
+from collections import deque
 from contextlib import contextmanager
 from dataclasses import dataclass
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, Optional, Sequence, Tuple
 
 __all__ = [
     "Measurement",
+    "SERIES_CAP",
     "SpanStat",
     "Telemetry",
     "counter",
@@ -51,10 +59,36 @@ __all__ = [
     "host_fingerprint",
     "host_slug",
     "measure",
+    "percentiles",
+    "record",
     "reset",
+    "series",
     "snapshot",
     "span",
 ]
+
+# samples kept per series (most recent win): enough for stable p99 at
+# serving smoke scale without unbounded growth on a long-lived engine
+SERIES_CAP = 4096
+
+
+def percentiles(values: Sequence[float],
+                qs: Sequence[float] = (50, 90, 99)) -> Dict[str, float]:
+    """Nearest-rank percentiles of ``values`` as ``{"p50": ...}``.
+
+    Nearest-rank (ceil(q/100 * n)-th order statistic) rather than
+    interpolation: every reported number is a latency that actually
+    happened, which is the honest form for small serving samples.
+    Empty input -> empty dict."""
+    if not values:
+        return {}
+    ordered = sorted(values)
+    n = len(ordered)
+    out = {}
+    for q in qs:
+        rank = min(n, max(1, math.ceil(q / 100.0 * n)))
+        out[f"p{q:g}"] = ordered[rank - 1]
+    return out
 
 
 @dataclass
@@ -86,6 +120,7 @@ class Telemetry:
         self._lock = threading.RLock()
         self._counters: Dict[str, float] = {}
         self._spans: Dict[str, SpanStat] = {}
+        self._series: Dict[str, deque] = {}
 
     # -- counters ------------------------------------------------------------
 
@@ -115,21 +150,43 @@ class Telemetry:
         with self._lock:
             return self._spans.get(name)
 
+    # -- series --------------------------------------------------------------
+
+    def record(self, name: str, value: float) -> None:
+        """Append one sample to series ``name`` (bounded to SERIES_CAP)."""
+        with self._lock:
+            self._series.setdefault(
+                name, deque(maxlen=SERIES_CAP)).append(float(value))
+
+    def series(self, name: str) -> Tuple[float, ...]:
+        """The retained samples of series ``name`` (oldest first)."""
+        with self._lock:
+            return tuple(self._series.get(name, ()))
+
     # -- registry ------------------------------------------------------------
 
     def snapshot(self) -> Dict[str, dict]:
-        """JSON-ready view: ``{"counters": {...}, "spans": {...}}``."""
+        """JSON-ready view:
+        ``{"counters": {...}, "spans": {...}, "series": {...}}`` — series
+        summarize to count/last/max plus nearest-rank p50/p90/p99."""
         with self._lock:
+            series = {}
+            for k in sorted(self._series):
+                vals = self._series[k]
+                series[k] = {"count": len(vals), "last": vals[-1],
+                             "max": max(vals), **percentiles(vals)}
             return {
                 "counters": dict(sorted(self._counters.items())),
                 "spans": {k: v.as_dict()
                           for k, v in sorted(self._spans.items())},
+                "series": series,
             }
 
     def reset(self) -> None:
         with self._lock:
             self._counters.clear()
             self._spans.clear()
+            self._series.clear()
 
 
 _GLOBAL = Telemetry()
@@ -147,6 +204,16 @@ def counter(name: str, value: float = 1) -> None:
 def span(name: str):
     """Global span context manager (module-level sugar)."""
     return _GLOBAL.span(name)
+
+
+def record(name: str, value: float) -> None:
+    """Append one sample to a global series (module-level sugar)."""
+    _GLOBAL.record(name, value)
+
+
+def series(name: str) -> Tuple[float, ...]:
+    """Retained samples of a global series (module-level sugar)."""
+    return _GLOBAL.series(name)
 
 
 def snapshot() -> Dict[str, dict]:

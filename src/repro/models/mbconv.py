@@ -114,6 +114,22 @@ def effnet_block_specs(cfg: EffNetConfig) -> List[MBConvSpec]:
     return specs
 
 
+def effnet_chain_rows(specs: List[MBConvSpec], h: int, w: int
+                      ) -> Tuple[Tuple[int, int, int, int, int, int, int],
+                                 ...]:
+    """(h, w, c_in, c_mid, c_out, k, s) chain rows for the network-level
+    layout solver (``core.autotune.get_network_plan``), threading the
+    spatial dims through each block's stride.  ``h``/``w`` are the
+    STEM-OUTPUT dims (the first block's input) — callers with image dims
+    divide by the stem stride first.  Shared by ``efficientnet_b0_apply``
+    and the vision serving engine, so both price the same chain."""
+    rows, hh, ww = [], h, w
+    for sp in specs:
+        rows.append((hh, ww, sp.c_in, sp.c_mid, sp.c_out, sp.k, sp.s))
+        hh, ww = -(-hh // sp.s), -(-ww // sp.s)
+    return tuple(rows)
+
+
 # ---------------------------------------------------------------------------
 # one MBConv block
 # ---------------------------------------------------------------------------
@@ -313,7 +329,7 @@ def efficientnet_b0_def(cfg: EffNetConfig = EffNetConfig()) -> dict:
 
 def efficientnet_b0_apply(params: dict, images: jax.Array,
                           cfg: EffNetConfig = EffNetConfig(),
-                          kcfg=None, mesh=None) -> jax.Array:
+                          kcfg=None, mesh=None, plan=None) -> jax.Array:
     """(B, H, W, 3) images -> (B, num_classes) logits.
 
     Every MBConv block runs the two-pass fused ConvDK pipeline (or the
@@ -326,7 +342,13 @@ def efficientnet_b0_apply(params: dict, images: jax.Array,
     chain — the stem output materializes model-sharded when the plan says
     so (a ``with_sharding_constraint``; block0's identity expand then
     consumes it collective-free), and every block call threads the solved
-    layout chain via ``pin=`` / ``in_layout=``."""
+    layout chain via ``pin=`` / ``in_layout=``.
+
+    ``plan`` passes a pre-solved ``core.autotune.NetworkPlan`` explicitly
+    (it must match this call's chain shapes): the vision serving engine
+    solves one plan per resolution bucket and threads it here, so the
+    bytes its telemetry counters charge are — by construction — the
+    schedules the blocks actually run."""
     specs = effnet_block_specs(cfg)
     dt = jnp.dtype(cfg.dtype)
     x = jax.lax.conv_general_dilated(
@@ -337,27 +359,24 @@ def efficientnet_b0_apply(params: dict, images: jax.Array,
     if kcfg is None:
         from ..configs.base import kernel_config
         kcfg = kernel_config()
-    plan = None
-    if (mesh is not None and kcfg.shard_fused and kcfg.fused_mbconv
-            and kcfg.autotune):
-        from ..configs.base import SchedulePin
+    if plan is None and (mesh is not None and kcfg.shard_fused
+                         and kcfg.fused_mbconv and kcfg.autotune):
         from ..core.autotune import get_network_plan
         from ..kernels import conv_mesh_shape
-        from ..kernels.convdk_sharded import MODEL_AXIS, _batch_axes
-        b, h, w, c0 = x.shape
-        rows, hh, ww = [], h, w
-        for sp in specs:
-            rows.append((hh, ww, sp.c_in, sp.c_mid, sp.c_out, sp.k, sp.s))
-            hh, ww = -(-hh // sp.s), -(-ww // sp.s)
-        plan = get_network_plan(rows, b, conv_mesh_shape(mesh),
+        b, h, w, _c0 = x.shape
+        plan = get_network_plan(effnet_chain_rows(specs, h, w), b,
+                                conv_mesh_shape(mesh),
                                 dtype_bytes=dt.itemsize,
                                 se_ratio=cfg.se_ratio)
-        if plan.stem_layout == "model_sharded":
+    if plan is not None:
+        from ..configs.base import SchedulePin
+        if mesh is not None and plan.stem_layout == "model_sharded":
             # materialize the stem output once per element mesh-wide: each
             # device of a model group holds only its c0/mp channel slice,
             # which block0's sharded-in entry consumes without a gather
             from jax.sharding import NamedSharding
             from jax.sharding import PartitionSpec as _P
+            from ..kernels.convdk_sharded import MODEL_AXIS, _batch_axes
             x = jax.lax.with_sharding_constraint(
                 x, NamedSharding(mesh, _P(_batch_axes(mesh), None, None,
                                           MODEL_AXIS)))

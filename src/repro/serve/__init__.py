@@ -1,0 +1,19 @@
+"""Serving engines: LM (length-bucketed BIG/LITTLE) and vision
+(resolution-bucketed batches with per-layer traffic telemetry)."""
+
+from .engine import Engine, ServeConfig
+from .vision import (
+    VisionEngine,
+    VisionRequest,
+    VisionResult,
+    VisionServeConfig,
+)
+
+__all__ = [
+    "Engine",
+    "ServeConfig",
+    "VisionEngine",
+    "VisionRequest",
+    "VisionResult",
+    "VisionServeConfig",
+]

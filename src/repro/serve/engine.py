@@ -10,7 +10,14 @@ serving, DESIGN.md §Pillar C): requests are bucketed by prompt length and
 a bucket is launched either as one BIG batch (few long prompts — prefill
 dominated) or as packed LITTLE batches (many short prompts share one decode
 batch so the state memory stays fully utilized), mirroring how the CIM
-scheduler packs small channels into one TRF.
+scheduler packs small channels into one TRF.  ``generate_many`` is the
+entry point that actually consumes ``schedule()``'s batches: prompts in a
+LITTLE pack are left-padded to a shared length bucket so unequal-length
+requests stack into one shape-stable prefill.
+
+The vision-side counterpart (admission by RESOLUTION bucket over the fused
+EfficientNet pipeline, with per-layer traffic telemetry) lives in
+``serve.vision``.
 """
 
 from __future__ import annotations
@@ -34,16 +41,24 @@ class ServeConfig:
     temperature: float = 1.0
     # LITTLE-packing: prompts shorter than this share a packed batch
     little_threshold: int = 256
+    # requests per LITTLE pack (the shared decode batch size)
+    little_pack: int = 8
+    # LITTLE prompts pad up to a multiple of this, so mixed lengths stack
+    # into few distinct prefill shapes (shape-stable jit)
+    length_bucket: int = 32
+    pad_id: int = 0
     eos_id: Optional[int] = None
 
 
 class Engine:
-    def __init__(self, cfg: ModelConfig, params, serve_cfg: ServeConfig = None):
+    def __init__(self, cfg: ModelConfig, params,
+                 serve_cfg: Optional[ServeConfig] = None):
         self.cfg = cfg
         self.params = params
         self.scfg = serve_cfg or ServeConfig()
         self._prefill = jax.jit(self._prefill_fn)
         self._step = jax.jit(self._step_fn)
+        self._generate_calls = 0       # per-call default-rng derivation
 
     # -- jitted bodies ------------------------------------------------------
     def _prefill_fn(self, params, tokens, state):
@@ -68,7 +83,17 @@ class Engine:
     # -- public API ----------------------------------------------------------
     def generate(self, prompts: np.ndarray, rng: Optional[jax.Array] = None
                  ) -> np.ndarray:
-        """prompts: (B, S_prompt) int32 -> (B, max_new_tokens) int32."""
+        """prompts: (B, S_prompt) int32 -> (B, max_new_tokens) int32.
+
+        With ``eos_id`` set, a row that emits EOS stops: its later
+        positions are filled with ``eos_id`` (the output stays rectangular)
+        and the decode loop exits early once EVERY row has finished — the
+        config field is load-bearing, not decorative.
+
+        ``rng=None`` derives a fresh per-call key (folding a call counter
+        into a fixed base), so two sampled calls on one engine draw
+        different tokens instead of silently replaying key(0).
+        """
         b, s_prompt = prompts.shape
         total = s_prompt + self.scfg.max_new_tokens
         state = init_decode_state(self.cfg, b, total,
@@ -76,25 +101,87 @@ class Engine:
         state, last_logits = self._prefill(
             self.params, jnp.asarray(prompts, jnp.int32), state)
         tok = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
-        rng = rng if rng is not None else jax.random.key(0)
+        if rng is None:
+            rng = jax.random.fold_in(jax.random.key(0), self._generate_calls)
+            self._generate_calls += 1
 
+        eos = self.scfg.eos_id
+        done = np.zeros(b, bool)
+        if eos is not None:
+            done |= np.asarray(tok) == eos
         outs = [tok]
-        for i in range(self.scfg.max_new_tokens - 1):
+        for _ in range(self.scfg.max_new_tokens - 1):
+            if eos is not None and done.all():
+                break                       # every row hit EOS: stop decoding
             rng, sub = jax.random.split(rng)
             state, tok = self._step(self.params, state, tok, sub)
+            if eos is not None:
+                # rows past their EOS emit eos_id from here on (and the
+                # masked token is what feeds the next step's cache)
+                tok = jnp.where(jnp.asarray(done), jnp.int32(eos), tok)
+                done |= np.asarray(tok) == eos
             outs.append(tok)
-        return np.stack([np.asarray(t) for t in outs], axis=1)
+        out = np.stack([np.asarray(t) for t in outs], axis=1)
+        if out.shape[1] < self.scfg.max_new_tokens:      # early EOS exit
+            pad = np.full((b, self.scfg.max_new_tokens - out.shape[1]),
+                          eos, np.int32)
+            out = np.concatenate([out, pad], axis=1)
+        return out
+
+    def generate_many(self, requests: List[np.ndarray],
+                      rng: Optional[jax.Array] = None) -> List[np.ndarray]:
+        """Serve a mixed request list through BIG/LITTLE admission.
+
+        ``schedule()`` groups request indices into launch batches; each
+        LITTLE pack left-pads its prompts with ``pad_id`` to the pack's
+        shared length bucket (``length_bucket`` multiples — mixed lengths
+        produce few distinct prefill shapes, so the jitted prefill
+        retraces per bucket, not per request) and runs one ``generate``.
+        Left-padding keeps every prompt's last real token at the final
+        scan position, where the prefill reads its next-token logits.
+        Returns per-request (max_new_tokens,) outputs in request order.
+        """
+        outs: List[Optional[np.ndarray]] = [None] * len(requests)
+        for idxs in self.schedule(requests):
+            longest = max(len(requests[i]) for i in idxs)
+            bucket = -(-max(1, longest) // self.scfg.length_bucket) \
+                * self.scfg.length_bucket
+            prompts = np.full((len(idxs), bucket), self.scfg.pad_id,
+                              np.int32)
+            for row, i in enumerate(idxs):
+                r = np.asarray(requests[i], np.int32).reshape(-1)
+                if len(r):
+                    prompts[row, bucket - len(r):] = r
+            sub = None
+            if rng is not None:
+                rng, sub = jax.random.split(rng)
+            toks = self.generate(prompts, sub)
+            for row, i in enumerate(idxs):
+                outs[i] = toks[row]
+        return outs
 
     def schedule(self, requests: List[np.ndarray]) -> List[List[int]]:
-        """BIG/LITTLE admission: group request indices into launch batches."""
-        little, big = [], []
+        """BIG/LITTLE admission: group request indices into launch batches.
+
+        LITTLE requests (shorter than ``little_threshold``) are first
+        grouped by their padded length bucket — a pack only holds prompts
+        that stack into ONE prefill shape — then packed ``little_pack``
+        at a time; BIG prompts run alone.
+        """
+        buckets: dict = {}
+        big = []
         for i, r in enumerate(requests):
-            (little if len(r) < self.scfg.little_threshold else big).append(i)
+            if len(r) < self.scfg.little_threshold:
+                key = -(-max(1, len(r)) // self.scfg.length_bucket)
+                buckets.setdefault(key, []).append(i)
+            else:
+                big.append(i)
         batches = []
-        if little:
-            # LITTLE: pack many short prompts into shared batches of 8+
-            for j in range(0, len(little), 8):
-                batches.append(little[j:j + 8])
+        pack = max(1, self.scfg.little_pack)
+        for key in sorted(buckets):
+            little = buckets[key]
+            for j in range(0, len(little), pack):
+                batches.append(little[j:j + pack])
         for i in big:
             batches.append([i])      # BIG: long prompts run alone
         return batches

@@ -65,12 +65,34 @@ def test_snapshot_is_json_ready_and_reset_clears():
     t.count("a.b", 4)
     with t.span("s"):
         pass
+    t.record("lat", 0.25)
     snap = t.snapshot()
     json.dumps(snap)                       # must serialize as-is
     assert snap["counters"] == {"a.b": 4}
     assert snap["spans"]["s"]["count"] == 1
+    assert snap["series"]["lat"]["count"] == 1
     t.reset()
-    assert t.snapshot() == {"counters": {}, "spans": {}}
+    assert t.snapshot() == {"counters": {}, "spans": {}, "series": {}}
+
+
+def test_series_bounded_and_summarized():
+    t = Telemetry()
+    for v in range(telemetry.SERIES_CAP + 10):
+        t.record("depth", v)
+    vals = t.series("depth")
+    assert len(vals) == telemetry.SERIES_CAP     # oldest samples dropped
+    assert vals[-1] == telemetry.SERIES_CAP + 9
+    summ = t.snapshot()["series"]["depth"]
+    assert summ["max"] == telemetry.SERIES_CAP + 9
+    assert summ["p50"] in vals                   # nearest-rank: a real sample
+    assert t.series("absent") == ()
+
+
+def test_percentiles_nearest_rank():
+    assert telemetry.percentiles([]) == {}
+    p = telemetry.percentiles([3.0, 1.0, 2.0, 4.0], qs=(50, 99))
+    assert p == {"p50": 2.0, "p99": 4.0}         # ceil-rank order statistics
+    assert telemetry.percentiles([7.0])["p50"] == 7.0
 
 
 def test_global_sugar_routes_to_one_registry():
