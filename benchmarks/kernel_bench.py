@@ -328,6 +328,76 @@ def network_report(mesh_shape) -> bool:
     return ok
 
 
+def pipeline_report(mesh_shape, records=None) -> bool:
+    """The cross-block pipelining gate: solve the B0 chain (layout DP +
+    overlap annotation), print the per-boundary serialized-vs-pipelined
+    modeled latency table, and compare the chain totals.
+
+    Latencies come from ``PerfCoefficients`` — the repo-default fit
+    unless ``records`` (a ``measure_b0`` run from this invocation) is
+    handed in, in which case a FRESH fit over its candidate points is
+    installed first and reported alongside (the ``--measure`` point:
+    same verdict, this host's stopwatch).
+
+    Gate: on a model-sharded mesh the plan must pipeline >= 1 boundary
+    AND its modeled chain latency must sit STRICTLY below the fully
+    serialized chain; on a degenerate mesh pipelined <= serialized (the
+    annotation may legitimately find nothing to overlap)."""
+    from repro.core.autotune import (
+        network_rows_from_table, solve_network_schedule,
+    )
+    from repro.core.perfmodel import (
+        fit_perf_coefficients, get_perf_coefficients, set_perf_coefficients,
+    )
+    b = 8 if mesh_shape != (1, 1) else 1
+    chain = network_rows_from_table(EFFICIENTNET_B0_MBCONV)
+    fitted = None
+    if records:
+        samples = [
+            {"walltime_us": c["walltime_us"],
+             "modeled_bytes": c["modeled_bytes"],
+             "dma_issues": c.get("modeled_dma_issues", 0),
+             "collective_bytes": rec.get("collective_bytes", 0)}
+            for rec in records for c in rec.get("candidates", [])]
+        fitted = fit_perf_coefficients(samples)
+        set_perf_coefficients(fitted)
+        print(f"# --measure point: coefficients refit from "
+              f"{fitted.n_samples} candidate timings on this host "
+              f"(us_per_mb={fitted.us_per_mb:.2f}, "
+              f"us_per_dma_issue={fitted.us_per_dma_issue:.2f}, "
+              f"rms={fitted.rms_us:.1f}us)")
+    coeffs = get_perf_coefficients()
+    try:
+        plan = solve_network_schedule(chain, b, mesh_shape)
+        print(f"# cross-block pipelining: mesh={mesh_shape[0]}x"
+              f"{mesh_shape[1]} batch={b} "
+              f"coeffs={'measured-refit' if fitted else 'repo-default'}")
+        print("boundary,pass2_us,pass1_us,serialized_us,overlap_us,overlap")
+        for row in plan.boundary_latencies(coeffs):
+            a, b_ = row["boundary"]
+            print(f"block{a}->block{b_},{row['pass2_us']:.1f},"
+                  f"{row['pass1_us']:.1f},{row['serialized_us']:.1f},"
+                  f"{row['overlap_us']:.1f},{row['overlap']}")
+        serial = plan.serial_latency_us(coeffs)
+        pipe = plan.pipelined_latency_us(coeffs)
+        n_pipe = len(plan.pipelined_boundaries)
+        print(f"# chain totals: serialized={serial:.1f}us "
+              f"pipelined={pipe:.1f}us "
+              f"({n_pipe}/{max(0, len(plan.blocks) - 1)} boundaries "
+              f"pipelined, saving {serial - pipe:.1f}us)")
+        if mesh_shape[1] > 1:
+            ok = n_pipe >= 1 and pipe < serial
+            print(f"# >=1 pipelined boundary and pipelined strictly below "
+                  f"serialized: {ok}")
+        else:
+            ok = pipe <= serial
+            print(f"# pipelined <= serialized (degenerate mesh): {ok}")
+        return ok
+    finally:
+        if fitted is not None:
+            set_perf_coefficients(None)
+
+
 def mbconv_walltime_row():
     """Interpret-mode wall times + numerics check on one small MBConv block
     (fused two-pass vs staged vs the pure-lax reference).  Fused rows are
@@ -392,7 +462,7 @@ def measure_b0(scale=4, iters=3, persist=True, bench_out=None):
     cache's measured tier, keyed at the measured shape.
     """
     from repro.core.perfmodel import MBConvShape as _MBShape
-    from repro.core.perfmodel import mbconv_fused_traffic
+    from repro.core.perfmodel import mbconv_fused_traffic, mbconv_pass_traffic
 
     rng = np.random.default_rng(7)
     records = []
@@ -427,12 +497,19 @@ def measure_b0(scale=4, iters=3, persist=True, bench_out=None):
                          "modeled_bytes": sch.traffic.total_bytes,
                          "modeled_dma_issues": sch.traffic.dma_issues}
             cands.append(at_solver)
+        # the pass split of the SOLVER's point: the two-pass pipelining
+        # model prices boundary overlap from exactly these two halves
+        # (they sum to modeled_bytes by construction — gated)
+        p1, p2 = mbconv_pass_traffic(shape, sch.tile_h, sch.mode,
+                                     residency=sch.residency)
         records.append({
             "name": name,
             "shape": {"b": 1, "hw": hw, "full_hw": full_hw, "c_in": ci,
                       "c_mid": cm, "c_out": co, "k": k, "s": s},
             "axes": solver_point,
             "modeled_bytes": at_solver["modeled_bytes"],
+            "modeled_pass1_bytes": p1.total_bytes,
+            "modeled_pass2_bytes": p2.total_bytes,
             "modeled_dma_issues": at_solver["modeled_dma_issues"],
             "collective_bytes": 0,
             "walltime_us": at_solver["walltime_us"],
@@ -539,6 +616,14 @@ def main():
                          "modeled bytes against greedy per-layer picks "
                          "(strictly lower, with >=1 boundary staying "
                          "sharded, on a model-sharded mesh)")
+    ap.add_argument("--pipeline", action="store_true",
+                    help="with --network: run the cross-block pipelining "
+                         "report — per-boundary serialized-vs-pipelined "
+                         "modeled latency over the solved B0 plan, gated "
+                         "(>=1 pipelined boundary, pipelined strictly "
+                         "below serialized) on a model-sharded mesh; with "
+                         "--measure the coefficients are refit from this "
+                         "run's stopwatch first")
     ap.add_argument("--measure", action="store_true",
                     help="time REAL fused-MBConv executions per (B0 layer "
                          "x schedule-axes) point at a scaled-down "
@@ -574,13 +659,17 @@ def main():
         raise SystemExit("--collective requires --mesh DxM with M > 1")
     if args.network and not args.fused:
         raise SystemExit("--network requires --fused")
+    if args.pipeline and not args.network:
+        raise SystemExit("--pipeline requires --network")
     if args.bench_out is not None and not args.measure:
         raise SystemExit("--bench-out requires --measure")
+    measured_records = None
     if args.measure:
         if args.measure_scale < 1 or args.measure_iters < 1:
             raise SystemExit("--measure-scale/--measure-iters must be >= 1")
-        measure_b0(scale=args.measure_scale, iters=args.measure_iters,
-                   persist=not args.no_persist, bench_out=args.bench_out)
+        measured_records = measure_b0(
+            scale=args.measure_scale, iters=args.measure_iters,
+            persist=not args.no_persist, bench_out=args.bench_out)
         if not args.fused:
             return
         print()
@@ -600,6 +689,9 @@ def main():
             print()
         if args.network:
             ok &= network_report(mesh_shape)
+            print()
+        if args.pipeline:
+            ok &= pipeline_report(mesh_shape, records=measured_records)
             print()
         for name, us, derived in mbconv_walltime_row():
             print(f"{name},{us:.1f},{derived}")

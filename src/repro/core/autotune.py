@@ -43,7 +43,7 @@ from __future__ import annotations
 import json
 import os
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from functools import lru_cache
 from pathlib import Path
 from typing import Dict, Optional, Sequence, Tuple
@@ -52,29 +52,36 @@ from .perfmodel import (
     COLLECTIVE_MODES,
     DEFAULT_COLLECTIVE,
     DEFAULT_LAYOUT,
+    DEFAULT_OVERLAP,
     DEFAULT_RESIDENCY,
-    LAYOUT_MODES,
     MBCONV_MODES,
     RESIDENCY_MODES,
     HBMTraffic,
+    MBConvPassCosts,
     MBConvShape,
+    PerfCoefficients,
     SeparableShape,
     ShardedTraffic,
+    boundary_overlap_us,
     can_psum_scatter,
     can_shard_input,
+    get_perf_coefficients,
     layout_transition_words,
+    mbconv_pass_us,
     mbconv_shard,
     mbconv_staging_bytes,
     pick_channel_block,
     separable_shard,
     separable_staging_bytes,
     shard_factors,
+    sharded_mbconv_pass_costs,
     sharded_mbconv_staged_traffic,
     sharded_mbconv_traffic,
     sharded_separable_staged_traffic,
     sharded_separable_traffic,
     validate_collective,
     validate_layout,
+    validate_overlap,
     validate_residency,
 )
 from . import telemetry
@@ -221,6 +228,12 @@ class MBConvSchedule(_ScheduleTraffic):
     sharded: ShardedTraffic      # fused pricing (the solver's objective)
     staged: ShardedTraffic       # identically partitioned staged baseline
     residency: str = DEFAULT_RESIDENCY   # input-staging mode
+    # entry-overlap the schedule was solved under: "pipelined" means this
+    # block's pass 1 streams behind the upstream block's pass 2, so its
+    # pass-1 footprint was feasibility-checked against HALF the VMEM
+    # budget (the two co-resident stages split the core) — a genuinely
+    # different solve, hence a cache-key axis (``ov=`` segment)
+    overlap: str = DEFAULT_OVERLAP
 
 
 def _round_up(x: int, m: int) -> int:
@@ -266,7 +279,7 @@ class ScheduleCache:
 
     @staticmethod
     def _migrate_key(key: str) -> str:
-        """Upgrade legacy cache keys in place, chaining the four schema
+        """Upgrade legacy cache keys in place, chaining the five schema
         migrations so measured sweeps keep outranking model picks instead
         of being silently orphaned:
 
@@ -286,7 +299,13 @@ class ScheduleCache:
           solved for a REPLICATED input arrival — the only entry form
           that existed — so they ARE the ``layout=replicated`` picks
           (unlike residency/collective this axis is a dataflow fact the
-          caller states, not a solver choice, so there is no ``auto``)."""
+          caller states, not a solver choice, so there is no ``auto``);
+        * pre-overlap MBConv entries (no ``ov=`` segment) were all
+          solved for a SERIAL entry — pipelined entries did not exist,
+          and a serial pick was feasibility-checked against the full
+          VMEM budget where a pipelined solve halves it — so they ARE
+          the ``ov=serial`` picks (like layout, the entry overlap is a
+          dataflow fact the network DP states: no ``auto``)."""
         parts = key.split("|")
         if len(parts) == 5 and parts[0] in ("sep", "mbconv") \
                 and not parts[3].startswith("mesh"):
@@ -305,6 +324,11 @@ class ScheduleCache:
                 and parts[5].startswith("coll=") \
                 and not parts[6].startswith("layout="):
             parts.insert(6, "layout=replicated")
+        if len(parts) >= 9 and parts[0] == "mbconv" \
+                and parts[5].startswith("coll=") \
+                and parts[6].startswith("layout=") \
+                and not parts[7].startswith("ov="):
+            parts.insert(7, "ov=serial")
         return "|".join(parts)
 
     def _load_disk(self) -> Dict[str, dict]:
@@ -453,12 +477,22 @@ def _layout_segment(in_layout: str) -> str:
     return f"layout={validate_layout(in_layout)}"
 
 
+def _overlap_segment(overlap: str) -> str:
+    """Key segment for the entry-overlap the schedule is solved under.
+    Like ``layout=`` this axis has no ``auto``: the network DP states
+    whether a block's pass 1 streams behind the upstream pass 2 (which
+    halves the VMEM budget its pass-1 footprint may claim) — legacy keys
+    migrate into ``ov=serial``, the only entry form that existed."""
+    return f"ov={validate_overlap(overlap)}"
+
+
 def _mbconv_key(shape: MBConvShape, tpu: TPUConfig,
                 mesh_shape: MeshShape = (1, 1),
                 residency: Optional[str] = None,
                 mode: Optional[str] = None,
                 collective: Optional[str] = None,
-                in_layout: str = DEFAULT_LAYOUT) -> str:
+                in_layout: str = DEFAULT_LAYOUT,
+                overlap: str = DEFAULT_OVERLAP) -> str:
     dp, mp = shard_factors(shape.b, shape.c_mid, mesh_shape)
     # a pinned pass-2 mode gets its OWN entries (appended segment, so the
     # unpinned key format — and its migration chain — is untouched): a
@@ -469,7 +503,7 @@ def _mbconv_key(shape: MBConvShape, tpu: TPUConfig,
             f"-cm{shape.c_mid}-co{shape.c_out}-k{shape.k}-s{shape.s}"
             f"|dtb{shape.dtype_bytes}|mesh{dp}x{mp}"
             f"|{_res_segment(residency)}|{_coll_segment(collective)}"
-            f"|{_layout_segment(in_layout)}"
+            f"|{_layout_segment(in_layout)}|{_overlap_segment(overlap)}"
             f"|{_tpu_key(tpu)}|{_backend()}{pin}")
 
 
@@ -718,11 +752,70 @@ def mbconv_vmem_footprint_bytes(shape: MBConvShape, tile_h: int,
     return staging + exp_acc + dw_blk + proj_acc + weights
 
 
+def mbconv_pass_vmem_bytes(shape: MBConvShape, tile_h: int,
+                           tpu: TPUConfig,
+                           residency: str = DEFAULT_RESIDENCY,
+                           mode: str = "retain") -> Tuple[int, int]:
+    """``mbconv_vmem_footprint_bytes`` split by pass: ``(pass1, pass2)``
+    bytes, summing EXACTLY to the whole-cell footprint (property-tested —
+    the conservative serial feasibility check is unchanged by the split).
+
+    Pass 1 holds the input staging, the expand accumulator, the DW block
+    and the expand/DW weights; pass 2 holds the DW re-read stream (retain
+    — the staging split between the x window and the DW slots follows
+    ``mbconv_staging_bytes``) or the recompute re-run of pass 1's input
+    terms, plus the projection accumulator and weight.  Cross-block
+    pipelining co-resides block i's pass 2 with block i+1's pass 1, so
+    the overlap feasibility check is per-pass against HALF the budget
+    (``_OVERLAP_VMEM_DIV``), not the summed footprint against all of it.
+    """
+    ci = pick_channel_block(shape.c_in, tpu.c_block)
+    cm = pick_channel_block(shape.c_mid, tpu.c_block)
+    co = _blocks(shape.c_out, tpu.c_block)
+    tile_h = max(1, min(tile_h, shape.out_h))
+    in_rows = (tile_h - 1) * shape.s + shape.k
+    w_need = (shape.out_w - 1) * shape.s + shape.k
+    # x-window staging only (the recompute form of the staging model);
+    # the retain total adds the pass-2 DW re-read slots on top
+    x_stage = mbconv_staging_bytes(shape, tile_h, "recompute", residency,
+                                   tpu.c_block)
+    dw_stage = mbconv_staging_bytes(shape, tile_h, mode, residency,
+                                    tpu.c_block) - x_stage
+    exp_acc = in_rows * w_need * cm * 4
+    dw_blk = tile_h * shape.out_w * cm * 4
+    proj_acc = tile_h * shape.out_w * co * 4
+    w_p1 = (ci * cm + shape.k * shape.k * cm) * shape.dtype_bytes
+    w_p2 = cm * co * shape.dtype_bytes
+    pass1 = x_stage + exp_acc + dw_blk + w_p1
+    if mode == "retain":
+        pass2 = dw_stage + proj_acc + w_p2
+    else:
+        # recompute pass 2 re-runs the expand+DW front end; it owns the
+        # whole-cell terms minus what pass 1 already counted (the sum
+        # must stay identical, so pass 2 carries only the projection side)
+        pass2 = proj_acc + w_p2
+    return pass1, pass2
+
+
+# A pipelined entry co-resides two stages on one core (upstream pass 2 +
+# this block's pass 1), so each stage may claim at most half the budget.
+_OVERLAP_VMEM_DIV = 2
+
+
+def _overlap_vmem_ok(shape: MBConvShape, tile_h: int, tpu: TPUConfig,
+                     residency: str, mode: str) -> bool:
+    """Pipelined-entry feasibility for THIS block's pass 1: it must fit
+    the halved budget while the upstream pass 2 holds the other half.
+    (The upstream side is checked symmetrically by the network DP.)"""
+    p1, _p2 = mbconv_pass_vmem_bytes(shape, tile_h, tpu, residency, mode)
+    return p1 <= tpu.vmem_bytes // _OVERLAP_VMEM_DIV
+
+
 def candidate_mbconv_schedules(
     shape: MBConvShape, tpu: TPUConfig = TPUConfig(),
     mesh_shape: MeshShape = (1, 1), residency: Optional[str] = None,
     mode: Optional[str] = None, collective: Optional[str] = None,
-    in_layout: str = DEFAULT_LAYOUT,
+    in_layout: str = DEFAULT_LAYOUT, overlap: str = DEFAULT_OVERLAP,
 ) -> Tuple[MBConvSchedule, ...]:
     """All VMEM-feasible (tile_h, mode, residency, collective) schedules,
     model-priced.
@@ -744,10 +837,17 @@ def candidate_mbconv_schedules(
     ``model_sharded`` arrival collective-free with c_in sharded alongside
     c_mid (feasibility and channel blocks re-solved at the smaller
     shard), while a real expand prices the entry all-gather it must pay
-    (``ShardedTraffic.transition_words``)."""
+    (``ShardedTraffic.transition_words``).
+
+    ``overlap`` is, like the layout, a dataflow fact the network DP
+    states: a ``pipelined`` entry co-resides this block's pass 1 with the
+    upstream block's pass 2, so candidates must ALSO fit their pass-1
+    footprint into half the VMEM budget (``_overlap_vmem_ok``) — a
+    genuinely different feasibility set, hence a different solve."""
     if mode is not None and mode not in MBCONV_MODES:
         raise ValueError(mode)
     validate_layout(in_layout)
+    validate_overlap(overlap)
     modes = MBCONV_MODES if mode is None else (mode,)
     local, eff = mbconv_shard(shape, mesh_shape, in_layout)
     colls = _collective_set(shape, eff, collective)
@@ -761,7 +861,9 @@ def candidate_mbconv_schedules(
               for th in ths for md in modes
               for res in _residency_set(residency)
               if mbconv_vmem_footprint_bytes(local, th, tpu, res, md)
-              <= tpu.vmem_bytes]
+              <= tpu.vmem_bytes
+              and (overlap == DEFAULT_OVERLAP
+                   or _overlap_vmem_ok(local, th, tpu, res, md))]
     if not combos:
         combos = [(1, md, residency or "strip_dma") for md in modes]
     staged_cache: dict = {}
@@ -779,7 +881,7 @@ def candidate_mbconv_schedules(
                                                tpu.c_block, res, coll,
                                                in_layout),
                 staged=staged_cache[th, coll],
-                residency=res,
+                residency=res, overlap=overlap,
             ))
     return tuple(out)
 
@@ -788,16 +890,16 @@ def select_mbconv_schedule(
     shape: MBConvShape, tpu: TPUConfig = TPUConfig(),
     mesh_shape: MeshShape = (1, 1), residency: Optional[str] = None,
     mode: Optional[str] = None, collective: Optional[str] = None,
-    in_layout: str = DEFAULT_LAYOUT,
+    in_layout: str = DEFAULT_LAYOUT, overlap: str = DEFAULT_OVERLAP,
 ) -> MBConvSchedule:
     """Pick (tile_h, mode, residency, collective) minimizing modeled total
     two-pass traffic (ties -> larger tile_h, then retain: one DW
     round-trip beats recompute MACs; then the residency rank, then the
     ring default).  ``mode``/``residency``/``collective`` pins restrict
-    the solve; ``in_layout`` states the arrival layout the schedule must
-    be priced for."""
+    the solve; ``in_layout`` states the arrival layout — and ``overlap``
+    the entry overlap — the schedule must be priced/checked for."""
     cands = candidate_mbconv_schedules(shape, tpu, mesh_shape, residency,
-                                       mode, collective, in_layout)
+                                       mode, collective, in_layout, overlap)
     return min(cands, key=lambda c: (c.total_bytes, -c.tile_h,
                                      c.mode != "retain",
                                      _RESIDENCY_RANK[c.residency],
@@ -808,7 +910,8 @@ def _mbconv_schedule_at(shape: MBConvShape, tile_h: int, mode: str,
                         tpu: TPUConfig, mesh_shape: MeshShape = (1, 1),
                         residency: str = DEFAULT_RESIDENCY,
                         collective: str = DEFAULT_COLLECTIVE,
-                        in_layout: str = DEFAULT_LAYOUT
+                        in_layout: str = DEFAULT_LAYOUT,
+                        overlap: str = DEFAULT_OVERLAP
                         ) -> MBConvSchedule:
     local, eff = mbconv_shard(shape, mesh_shape, in_layout)
     if eff[1] <= 1:
@@ -825,7 +928,7 @@ def _mbconv_schedule_at(shape: MBConvShape, tile_h: int, mode: str,
         staged=sharded_mbconv_staged_traffic(shape, tile_h, eff,
                                              tpu.c_block, collective,
                                              in_layout),
-        residency=residency,
+        residency=residency, overlap=overlap,
     )
 
 
@@ -865,6 +968,7 @@ def get_mbconv_schedule(
     tpu: TPUConfig = TPUConfig(), mesh_shape: MeshShape = (1, 1),
     residency: Optional[str] = None, mode: Optional[str] = None,
     collective: Optional[str] = None, in_layout: str = DEFAULT_LAYOUT,
+    overlap: str = DEFAULT_OVERLAP,
 ) -> MBConvSchedule:
     """Cached per-layer-shape two-pass schedule lookup (trace-time safe).
 
@@ -879,12 +983,17 @@ def get_mbconv_schedule(
     arrival.  Legacy entries keep their (tile_h, mode) priority with the
     residency — and, for pre-collective entries, the collective —
     re-solved at that point; pre-layout entries migrate into
-    ``layout=replicated`` (the only entry form that existed)."""
+    ``layout=replicated`` and pre-overlap entries into ``ov=serial``
+    (the only entry forms that existed).  ``overlap`` — the entry
+    overlap the network DP states — is a key axis for the same reason
+    ``in_layout`` is: a pipelined entry's picks were feasibility-checked
+    against the halved VMEM budget and must never be echoed for a serial
+    entry (or vice versa)."""
     shape = MBConvShape(b=b, h=h, w=w, c_in=c_in, c_mid=c_mid, c_out=c_out,
                         k=k, s=s, se_ratio=se_ratio, dtype_bytes=dtype_bytes)
     cache = get_schedule_cache()
     key = _mbconv_key(shape, tpu, mesh_shape, residency, mode, collective,
-                      in_layout)
+                      in_layout, overlap)
     hit = cache.get(key)
     tile_h = _entry_tile_h(hit, shape.out_h) if hit is not None else None
     hit_mode = hit.get("mode") if isinstance(hit, dict) else None
@@ -897,9 +1006,10 @@ def get_mbconv_schedule(
             or _solve_mbconv_collective_at(shape, tile_h, hit_mode, tpu,
                                            mesh_shape, res, in_layout)
         return _mbconv_schedule_at(shape, tile_h, hit_mode, tpu,
-                                   mesh_shape, res, coll, in_layout)
+                                   mesh_shape, res, coll, in_layout,
+                                   overlap)
     sched = select_mbconv_schedule(shape, tpu, mesh_shape, residency, mode,
-                                   collective, in_layout)
+                                   collective, in_layout, overlap)
     telemetry.counter("autotune.solve.mbconv")
     telemetry.counter(f"autotune.pick.residency.{sched.residency}")
     telemetry.counter(f"autotune.pick.mode.{sched.mode}")
@@ -907,7 +1017,8 @@ def get_mbconv_schedule(
     cache.put(key, {"tile_h": sched.tile_h, "mode": sched.mode,
                     "residency": sched.residency,
                     "collective": sched.collective,
-                    "in_layout": sched.in_layout, "source": "model",
+                    "in_layout": sched.in_layout,
+                    "overlap": sched.overlap, "source": "model",
                     "recorded_at": time.time()})
     return sched
 
@@ -950,6 +1061,13 @@ class BlockPlan:
     out_layout: str              # layout the output leaves in
     schedule: MBConvSchedule     # per-layer solve under the pinned axes
     boundary_words: int          # all-gather repay paid AT this entry
+    # overlap of the boundary ENTERING this block (upstream pass 2 vs
+    # this block's pass 1); "pipelined" only where the annotation pass
+    # proved eligibility — see ``_annotate_overlap``
+    entry_overlap: str = DEFAULT_OVERLAP
+    # the per-pass cost split the latency accessors price (filled by the
+    # solvers; None for hand-built plans, re-derived lazily)
+    pass_costs: Optional[MBConvPassCosts] = None
 
     @property
     def boundary_bytes(self) -> int:
@@ -1015,6 +1133,89 @@ class NetworkPlan:
             prev_idx, prev_lay = p.index, p.out_layout
         return tuple(pairs)
 
+    # -- overlap-aware latency accessors -----------------------------------
+    #
+    # The byte DP above stays the primary objective; latency is priced on
+    # top of the solved plan from the fitted PerfCoefficients applied to
+    # each block's per-pass cost split.  The stem is not a two-pass block
+    # and is not priced here — these totals compare the SAME chain
+    # serialized vs pipelined, which is the only comparison the overlap
+    # axis decides.
+
+    @property
+    def pipelined_boundaries(self) -> Tuple[int, ...]:
+        """Block indices whose ENTRY boundary pipelines (block i-1's
+        pass 2 overlapping block i's pass 1; stem→block0 never appears —
+        the stem is not a two-pass producer)."""
+        return tuple(p.index for p in self.blocks
+                     if p.entry_overlap == "pipelined")
+
+    def _costs(self, p: BlockPlan) -> MBConvPassCosts:
+        if p.pass_costs is not None:
+            return p.pass_costs
+        sch = p.schedule
+        return sharded_mbconv_pass_costs(
+            p.shape, sch.tile_h, sch.mode, self.mesh_shape, 128,
+            sch.residency, sch.collective, sch.in_layout)
+
+    def block_pass_us(self, index: int,
+                      coeffs: Optional[PerfCoefficients] = None
+                      ) -> Tuple[float, float]:
+        """Calibrated (pass1_us, pass2_us) of one chain block."""
+        coeffs = coeffs or get_perf_coefficients()
+        pc = self._costs(self.blocks[index])
+        return (mbconv_pass_us(coeffs, pc.pass1, pc.pass1_collective_words),
+                mbconv_pass_us(coeffs, pc.pass2, pc.pass2_collective_words))
+
+    def serial_latency_us(self,
+                          coeffs: Optional[PerfCoefficients] = None
+                          ) -> float:
+        """Modeled chain latency with every boundary serialized (every
+        pass of every block paid in full, back to back)."""
+        coeffs = coeffs or get_perf_coefficients()
+        return sum(sum(self.block_pass_us(i, coeffs))
+                   for i in range(len(self.blocks)))
+
+    def pipelined_latency_us(self,
+                             coeffs: Optional[PerfCoefficients] = None
+                             ) -> float:
+        """Modeled chain latency honoring the solved ``entry_overlap``
+        marks: each pipelined boundary pays max(prev pass 2, next pass 1)
+        instead of their sum — i.e. the serial total minus the hidden
+        min.  Structurally <= ``serial_latency_us`` (both terms are
+        nonnegative), equal iff nothing pipelines."""
+        coeffs = coeffs or get_perf_coefficients()
+        total = self.serial_latency_us(coeffs)
+        for i in range(1, len(self.blocks)):
+            if self.blocks[i].entry_overlap != "pipelined":
+                continue
+            _p1_prev, p2_prev = self.block_pass_us(i - 1, coeffs)
+            p1_cur, _p2_cur = self.block_pass_us(i, coeffs)
+            total -= min(p2_prev, p1_cur)
+        return total
+
+    def boundary_latencies(self,
+                           coeffs: Optional[PerfCoefficients] = None
+                           ) -> Tuple[dict, ...]:
+        """Per-interior-boundary latency table (block i-1 → block i):
+        the two overlapped pass terms, the serialized and
+        overlap-honoring boundary costs, and the solved overlap mark."""
+        coeffs = coeffs or get_perf_coefficients()
+        out = []
+        for i in range(1, len(self.blocks)):
+            _p1, p2_prev = self.block_pass_us(i - 1, coeffs)
+            p1_cur, _p2 = self.block_pass_us(i, coeffs)
+            ov = self.blocks[i].entry_overlap
+            out.append({
+                "boundary": (self.blocks[i - 1].index, self.blocks[i].index),
+                "pass2_us": p2_prev, "pass1_us": p1_cur,
+                "serialized_us": boundary_overlap_us(p2_prev, p1_cur,
+                                                     "serial"),
+                "overlap_us": boundary_overlap_us(p2_prev, p1_cur, ov),
+                "overlap": ov,
+            })
+        return tuple(out)
+
 
 def _stem_words(b: int, h: int, w: int, c: int, mesh_shape: MeshShape,
                 layout: str) -> int:
@@ -1072,6 +1273,82 @@ def _allowed_out_layouts(shape: MBConvShape,
     return (DEFAULT_LAYOUT,)
 
 
+def _block_pass_costs(shape: MBConvShape, sch: MBConvSchedule,
+                      mesh_shape: MeshShape,
+                      tpu: TPUConfig) -> MBConvPassCosts:
+    return sharded_mbconv_pass_costs(
+        shape, sch.tile_h, sch.mode, mesh_shape, tpu.c_block,
+        sch.residency, sch.collective, sch.in_layout)
+
+
+def _annotate_overlap(plan: NetworkPlan, tpu: TPUConfig,
+                      coeffs: Optional[PerfCoefficients] = None
+                      ) -> NetworkPlan:
+    """Mark every chain boundary that can pipeline (the overlap axis).
+
+    The byte DP stays untouched — overlap never changes what moves, only
+    when, so it is annotated on the solved chain per boundary (the
+    per-boundary savings are separable, which makes greedy per-boundary
+    marking optimal).  Boundary i-1 → i pipelines iff ALL of:
+
+    * no boundary repay and no entry-internal gather at block i's entry —
+      an all-gather is a barrier the consumer's first strip must wait on;
+    * the producer's pass-2 VMEM occupancy fits half the budget (retain
+      pass 2 holds only the DW re-read stream + projection terms; a
+      recompute pass 2 re-runs the whole front end and occupies its full
+      cell footprint);
+    * re-solving block i under ``overlap="pipelined"`` (pass-1 footprint
+      against the halved budget, same collective/in_layout pins) finds a
+      schedule with EQUAL total bytes — latency is secondary to the DP's
+      byte objective, a boundary never buys overlap with extra traffic —
+      and the same out_layout (the downstream chain must be unaffected);
+    * the overlap actually hides time at the calibration: min(pass2_us,
+      pass1_us) > 0.
+
+    Blocks that stay serial keep their DP schedules; pipelined blocks
+    carry the byte-equal pipelined re-solve (its ``ov=pipelined`` cache
+    entries live under their own key segment)."""
+    coeffs = coeffs or get_perf_coefficients()
+    blocks = list(plan.blocks)
+    half = tpu.vmem_bytes // _OVERLAP_VMEM_DIV
+    for i in range(1, len(blocks)):
+        prev, cur = blocks[i - 1], blocks[i]
+        if cur.boundary_words != 0 or cur.schedule.transition_bytes != 0:
+            continue
+        psch = prev.schedule
+        local_prev, _eff = mbconv_shard(prev.shape, plan.mesh_shape,
+                                        psch.in_layout)
+        if psch.mode == "retain":
+            _p1v, p2_vmem = mbconv_pass_vmem_bytes(
+                local_prev, psch.tile_h, tpu, psch.residency, psch.mode)
+        else:
+            p2_vmem = mbconv_vmem_footprint_bytes(
+                local_prev, psch.tile_h, tpu, psch.residency, psch.mode)
+        if p2_vmem > half:
+            continue
+        resolved = select_mbconv_schedule(
+            cur.shape, tpu, plan.mesh_shape,
+            collective=cur.schedule.collective,
+            in_layout=cur.in_layout, overlap="pipelined")
+        if (resolved.total_bytes != cur.schedule.total_bytes
+                or resolved.out_layout != cur.out_layout):
+            continue
+        prev_costs = plan._costs(prev)
+        cur_costs = _block_pass_costs(cur.shape, resolved,
+                                      plan.mesh_shape, tpu)
+        p2_us = mbconv_pass_us(coeffs, prev_costs.pass2,
+                               prev_costs.pass2_collective_words)
+        p1_us = mbconv_pass_us(coeffs, cur_costs.pass1,
+                               cur_costs.pass1_collective_words)
+        if min(p2_us, p1_us) <= 0.0:
+            continue
+        blocks[i] = replace(cur, schedule=resolved,
+                            entry_overlap="pipelined",
+                            pass_costs=cur_costs)
+        telemetry.counter("autotune.network_plan.pipelined_boundary")
+    return replace(plan, blocks=tuple(blocks))
+
+
 def solve_network_schedule(
     rows: Sequence[Tuple[int, ...]], b: int,
     mesh_shape: MeshShape = (1, 1), tpu: TPUConfig = TPUConfig(),
@@ -1089,7 +1366,11 @@ def solve_network_schedule(
     inside the pin.  Byte ties prefer replicated boundaries (candidates
     are enumerated replicated-first and only a STRICT improvement
     replaces a state), so the plan shards exactly the boundaries that
-    pay."""
+    pay.
+
+    After the byte DP, ``_annotate_overlap`` marks the boundaries that
+    can pipeline (upstream pass 2 overlapping the consumer's pass 1) —
+    bytes first, then hide what latency the calibration says can hide."""
     shapes = _chain_shapes(rows, b, se_ratio, dtype_bytes)
     if not shapes:
         raise ValueError("network solve needs at least one block row")
@@ -1121,7 +1402,9 @@ def solve_network_schedule(
                     plan = BlockPlan(
                         index=i, shape=shape, in_layout=sch.in_layout,
                         out_layout=sch.out_layout, schedule=sch,
-                        boundary_words=bwords)
+                        boundary_words=bwords,
+                        pass_costs=_block_pass_costs(shape, sch,
+                                                     mesh_shape, tpu))
                     cur = new_states.get(sch.out_layout)
                     if cur is None or total < cur[0]:
                         new_states[sch.out_layout] = (
@@ -1143,6 +1426,8 @@ def solve_network_schedule(
         blocks=plans, head_boundary_words=head_words,
         dtype_bytes=dtype_bytes, policy="solved")
     assert plan.total_bytes == total   # the parts must re-sum to the DP cost
+    plan = _annotate_overlap(plan, tpu)
+    assert plan.total_bytes == total   # overlap moves time, never bytes
     return plan
 
 
@@ -1170,7 +1455,8 @@ def greedy_network_schedule(
         plans.append(BlockPlan(
             index=i, shape=shape, in_layout=DEFAULT_LAYOUT,
             out_layout=sch.out_layout, schedule=sch,
-            boundary_words=bwords))
+            boundary_words=bwords,
+            pass_costs=_block_pass_costs(shape, sch, mesh_shape, tpu)))
         prev_lay = sch.out_layout
         prev_dims = (shape.out_h, shape.out_w, shape.c_out)
     head_words = layout_transition_words(

@@ -43,7 +43,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field, replace
-from typing import Callable, Dict, Iterable, List, Tuple
+from typing import Callable, Dict, Iterable, List, Optional, Tuple
 
 from .tiling import (
     DWLayer,
@@ -678,6 +678,75 @@ def _mbconv_common(shape: MBConvShape, tile_h: int, c_block: int):
     return n_th, n_cm, n_co, strips, e_rows, out, w_exp, w_dw, w_proj, pool
 
 
+def mbconv_pass_traffic(
+    shape: MBConvShape, tile_h: int, mode: str = "retain",
+    c_block: int = 128, residency: str = DEFAULT_RESIDENCY,
+) -> Tuple[HBMTraffic, HBMTraffic]:
+    """Per-pass HBM traffic of the two-pass fused MBConv pipeline.
+
+    Returns ``(pass1, pass2)`` such that their fields SUM exactly to
+    ``mbconv_fused_traffic`` (that function is defined as the merge, so
+    the split cannot drift).  The boundary between the two passes is the
+    SE-pool barrier:
+
+    * ``pass1``: input strip reads per c_mid block + per-strip expand/DW
+      weight refetches + the SE pool write, the SE MLP words (the MLP
+      runs on the pass-1 pool before pass 2 can gate), and — under
+      ``mode == "retain"`` — the one DW-tensor retain write.
+    * ``pass2``: the retained-DW re-read per c_out block (or the
+      recompute re-read of strips + expand/DW weights), the SE scale +
+      projection-weight reads, and the block's only activation write.
+
+    The split is what cross-block pipelining prices: pass 2 of block i
+    and pass 1 of block i+1 touch disjoint buffers (pass 2 reads DW_i /
+    scale_i and writes act_{i+1}; pass 1 of i+1 reads act_{i+1} strips as
+    they land and writes DW_{i+1} / pool_{i+1}), so a boundary can pay
+    ``max`` instead of ``sum`` — see ``boundary_overlap_us``.
+    """
+    if mode not in MBCONV_MODES:
+        raise ValueError(mode)
+    validate_residency(residency)
+    (n_th, n_cm, n_co, strips, e_rows, out, w_exp, w_dw, w_proj,
+     pool) = _mbconv_common(shape, tile_h, c_block)
+    n_ci = _n_chan_blocks(shape.c_in, c_block)
+    # launched height incl. height-cover padding (see _covered_rows)
+    x_full = shape.b * _covered_rows(shape, tile_h) * shape.padded_w \
+        * shape.c_in
+    resident = residency == "resident"
+    scale = pool                                   # SE gate, (B, C_mid) words
+    # pass 1: strips per c_mid block + per-strip weight refetches + pool
+    issues1 = 0
+    if resident:
+        reads1 = x_full * (n_cm * n_th if n_ci > 1 else 1)
+    else:
+        reads1 = strips * n_cm
+        issues1 += shape.b * n_cm * n_th * n_ci
+    reads1 += (w_exp + w_dw) * n_th
+    writes1 = pool
+    # SE MLP between passes (host-side; tiny but accounted with pass 1 —
+    # it consumes the pass-1 pool and must finish before pass 2 gates)
+    reads1 += pool + shape.se_words
+    writes1 += scale
+    # pass 2
+    issues2 = 0
+    if mode == "retain":
+        writes1 += e_rows                          # pass-1 DW retain write
+        reads2 = e_rows * n_co + scale * n_th * n_co + w_proj * n_th
+        if not resident:
+            issues2 += shape.b * n_co * n_th * n_cm
+    else:
+        if resident:
+            reads2 = x_full * (n_co * n_th * n_cm if n_ci > 1 else 1)
+        else:
+            reads2 = strips * n_cm * n_co
+            issues2 += shape.b * n_co * n_th * n_cm * n_ci
+        reads2 += ((w_exp + w_dw) * n_th * n_co
+                   + scale * n_th * n_co + w_proj * n_th)
+    writes2 = out
+    return (HBMTraffic(reads1, writes1, shape.dtype_bytes, issues1),
+            HBMTraffic(reads2, writes2, shape.dtype_bytes, issues2))
+
+
 def mbconv_fused_traffic(
     shape: MBConvShape, tile_h: int, mode: str = "retain",
     c_block: int = 128, residency: str = DEFAULT_RESIDENCY,
@@ -698,46 +767,14 @@ def mbconv_fused_traffic(
     same words); ``resident`` BlockSpec-refetches the full padded height of
     a c_in block every revisiting grid cell.  The retained-DW re-read is a
     non-overlapping block stream, so its words are residency-invariant.
+
+    Defined as the SUM of ``mbconv_pass_traffic`` — the whole-block total
+    and the per-pass split cannot diverge.
     """
-    if mode not in MBCONV_MODES:
-        raise ValueError(mode)
-    validate_residency(residency)
-    (n_th, n_cm, n_co, strips, e_rows, out, w_exp, w_dw, w_proj,
-     pool) = _mbconv_common(shape, tile_h, c_block)
-    n_ci = _n_chan_blocks(shape.c_in, c_block)
-    # launched height incl. height-cover padding (see _covered_rows)
-    x_full = shape.b * _covered_rows(shape, tile_h) * shape.padded_w \
-        * shape.c_in
-    resident = residency == "resident"
-    scale = pool                                   # SE gate, (B, C_mid) words
-    issues = 0
-    # pass 1: strips per c_mid block + per-strip weight refetches + pool
-    if resident:
-        reads = x_full * (n_cm * n_th if n_ci > 1 else 1)
-    else:
-        reads = strips * n_cm
-        issues += shape.b * n_cm * n_th * n_ci
-    reads += (w_exp + w_dw) * n_th
-    writes = pool
-    # SE MLP between passes (host-side; tiny but accounted)
-    reads += pool + shape.se_words
-    writes += scale
-    # pass 2
-    if mode == "retain":
-        writes += e_rows                           # pass-1 DW retain write
-        reads += e_rows * n_co + scale * n_th * n_co + w_proj * n_th
-        if not resident:
-            issues += shape.b * n_co * n_th * n_cm
-    else:
-        if resident:
-            reads += x_full * (n_co * n_th * n_cm if n_ci > 1 else 1)
-        else:
-            reads += strips * n_cm * n_co
-            issues += shape.b * n_co * n_th * n_cm * n_ci
-        reads += ((w_exp + w_dw) * n_th * n_co
-                  + scale * n_th * n_co + w_proj * n_th)
-    writes += out
-    return HBMTraffic(reads, writes, shape.dtype_bytes, issues)
+    p1, p2 = mbconv_pass_traffic(shape, tile_h, mode, c_block, residency)
+    return HBMTraffic(p1.read_words + p2.read_words,
+                      p1.write_words + p2.write_words,
+                      shape.dtype_bytes, p1.dma_issues + p2.dma_issues)
 
 
 def mbconv_staging_bytes(
@@ -1120,19 +1157,30 @@ def _mbconv_collective_words(shape: MBConvShape, dp: int, mp: int,
       (mp-1) words per reduced word, under ``psum_scatter`` — the pass-2
       output then leaves the kernel sharded on c_out.  Non-dividing c_out
       scatters at the zero-padded width (``scatter_c_out``)."""
+    squeeze, proj = _mbconv_collective_split(shape, dp, mp, collective)
+    return squeeze + proj
+
+
+def _mbconv_collective_split(
+    shape: MBConvShape, dp: int, mp: int,
+    collective: str = DEFAULT_COLLECTIVE,
+) -> Tuple[int, int]:
+    """``_mbconv_collective_words`` split by pass: ``(squeeze, proj)``
+    mesh-wide words.  The SE-squeeze ring belongs to pass 1 (pass 2
+    cannot gate until it lands); the projection reduction belongs to
+    pass 2.  ``_mbconv_collective_words`` is defined as the sum."""
     validate_collective(collective)
     if mp <= 1:
-        return 0
+        return 0, 0
     b_local = shape.b // dp
     squeeze = b_local * shape.c_se
     proj = b_local * shape.out_h * shape.out_w * shape.c_out
     if collective == "psum_scatter":
-        proj_pad = (b_local * shape.out_h * shape.out_w
-                    * scatter_c_out(shape.c_out, mp))
-        words = 2 * (mp - 1) * squeeze + (mp - 1) * proj_pad
+        proj_words = (mp - 1) * (b_local * shape.out_h * shape.out_w
+                                 * scatter_c_out(shape.c_out, mp))
     else:
-        words = 2 * (mp - 1) * (squeeze + proj)
-    return dp * words
+        proj_words = 2 * (mp - 1) * proj
+    return dp * 2 * (mp - 1) * squeeze, dp * proj_words
 
 
 def sharded_mbconv_traffic(
@@ -1194,6 +1242,82 @@ def sharded_mbconv_staged_traffic(
         in_layout=eff_layout,
         transition_words=_mbconv_entry_transition_words(
             shape, dp, mp, eff_layout))
+
+
+# ---------------------------------------------------------------------------
+# Cross-block pipelining: per-pass costs + overlap-aware latency
+#
+# Pass 2 of block i and pass 1 of block i+1 touch disjoint buffers (pass 2
+# reads DW_i / scale_i and writes act_{i+1}; pass 1 of i+1 reads act_{i+1}
+# strips as they land and writes DW_{i+1} / pool_{i+1}), so a block-chain
+# executor can hide the consumer's pass-1 DMA behind the producer's pass-2
+# compute — the staging engine's double-buffering generalized one level
+# up.  A pipelined boundary then prices as max(pass2_us, pass1_us) instead
+# of their sum.  The verdict is calibrated, not asserted: the pass
+# latencies come from the fitted ``PerfCoefficients`` applied to the
+# per-pass traffic split above.
+# ---------------------------------------------------------------------------
+
+
+OVERLAP_MODES: Tuple[str, ...] = ("serial", "pipelined")
+DEFAULT_OVERLAP = "serial"
+
+
+def validate_overlap(overlap: str) -> str:
+    if overlap not in OVERLAP_MODES:
+        raise ValueError(
+            f"overlap must be one of {OVERLAP_MODES}, got {overlap!r}")
+    return overlap
+
+
+@dataclass(frozen=True)
+class MBConvPassCosts:
+    """The two-pass split of one sharded MBConv block's costs: per-device
+    HBM traffic plus the mesh-wide collective words each pass must wait
+    on.  Sums exactly to ``sharded_mbconv_traffic`` (property-tested)."""
+
+    pass1: HBMTraffic            # one device's pass-1 (+SE MLP) traffic
+    pass2: HBMTraffic            # one device's pass-2 traffic
+    pass1_collective_words: int  # SE squeeze ring + any entry repay
+    pass2_collective_words: int  # projection reduction (ring or scatter)
+
+    @property
+    def dtype_bytes(self) -> int:
+        return self.pass1.dtype_bytes
+
+    @property
+    def pass1_collective_bytes(self) -> int:
+        return self.pass1_collective_words * self.dtype_bytes
+
+    @property
+    def pass2_collective_bytes(self) -> int:
+        return self.pass2_collective_words * self.dtype_bytes
+
+
+def sharded_mbconv_pass_costs(
+    shape: MBConvShape, tile_h: int, mode: str = "retain",
+    mesh_shape: Tuple[int, int] = (1, 1), c_block: int = 128,
+    residency: str = DEFAULT_RESIDENCY,
+    collective: str = DEFAULT_COLLECTIVE,
+    in_layout: str = DEFAULT_LAYOUT,
+) -> MBConvPassCosts:
+    """Per-pass split of ``sharded_mbconv_traffic`` at the same point.
+
+    Device traffic splits via ``mbconv_pass_traffic`` on the shard shape;
+    collective words split via ``_mbconv_collective_split`` (squeeze →
+    pass 1, projection → pass 2).  Any entry-side layout repay gathers
+    BEFORE the first strip can stream, so it lands on pass 1 — one more
+    reason a boundary with transition words never pipelines.
+    """
+    validate_layout(in_layout)
+    local, (dp, mp) = mbconv_shard(shape, mesh_shape, in_layout)
+    eff_layout = in_layout if mp > 1 else DEFAULT_LAYOUT
+    p1, p2 = mbconv_pass_traffic(local, tile_h, mode, c_block, residency)
+    squeeze, proj = _mbconv_collective_split(shape, dp, mp, collective)
+    entry = _mbconv_entry_transition_words(shape, dp, mp, eff_layout)
+    return MBConvPassCosts(pass1=p1, pass2=p2,
+                           pass1_collective_words=squeeze + entry,
+                           pass2_collective_words=proj)
 
 
 # ---------------------------------------------------------------------------
@@ -1281,3 +1405,62 @@ def predict_walltime_us(coeffs: PerfCoefficients, *, modeled_bytes: float,
             + coeffs.us_per_mb * modeled_bytes / 1e6
             + coeffs.us_per_dma_issue * dma_issues
             + coeffs.us_per_collective_mb * collective_bytes / 1e6)
+
+
+# Fallback calibration for latency-shaped decisions (the overlap axis)
+# when no fresh fit is installed: fit_perf_coefficients over the B0
+# ``kernel_bench --measure --measure-scale 8 --measure-iters 1`` candidate
+# sweep on this repo's CPU interpret-mode reference host (2026-08-09).
+# CPU interpret walltimes swing under load (see ROADMAP PR-7 edges), so
+# these decide only RELATIVE pass weights; deployments should install a
+# host-local fit via ``set_perf_coefficients(fit_perf_coefficients(...))``
+# — ``roofline_bench --bench`` prints one from any BENCH artifact.
+DEFAULT_PERF_COEFFICIENTS = PerfCoefficients(
+    base_us=-1508.24, us_per_mb=3559.22, us_per_dma_issue=68.68,
+    us_per_collective_mb=0.0, n_samples=32, rms_us=4446.75)
+
+_installed_coefficients: Optional[PerfCoefficients] = None
+
+
+def set_perf_coefficients(coeffs: Optional[PerfCoefficients]) -> None:
+    """Install a measured fit as the process-wide calibration (``None``
+    reverts to ``DEFAULT_PERF_COEFFICIENTS``)."""
+    global _installed_coefficients
+    _installed_coefficients = coeffs
+
+
+def get_perf_coefficients() -> PerfCoefficients:
+    """The calibration latency-shaped decisions use: the installed fit
+    if ``set_perf_coefficients`` provided one, else the defaults."""
+    return (_installed_coefficients if _installed_coefficients is not None
+            else DEFAULT_PERF_COEFFICIENTS)
+
+
+def mbconv_pass_us(coeffs: PerfCoefficients, traffic: HBMTraffic,
+                   collective_words: int = 0) -> float:
+    """Calibrated walltime of ONE pass, floored at zero (an lstsq fit can
+    go negative at tiny extrapolated points; a pass never takes negative
+    time, and the floor keeps ``boundary_overlap_us`` monotone)."""
+    return max(0.0, predict_walltime_us(
+        coeffs, modeled_bytes=traffic.total_bytes,
+        dma_issues=traffic.dma_issues,
+        collective_bytes=collective_words * traffic.dtype_bytes))
+
+
+def boundary_overlap_us(pass2_us: float, pass1_us: float,
+                        overlap: str = DEFAULT_OVERLAP) -> float:
+    """Modeled latency of one block boundary: the producer's pass-2 tail
+    plus the consumer's pass-1 head when serialized, their ``max`` when
+    the boundary pipelines (the consumer's pass-1 DMA streams behind the
+    producer's pass-2 compute).  Both terms are >= 0, so pipelined <=
+    serialized ALWAYS — the saving is ``min(pass2_us, pass1_us)``."""
+    validate_overlap(overlap)
+    if overlap == "pipelined":
+        return max(pass2_us, pass1_us)
+    return pass2_us + pass1_us
+
+
+def overlap_saving_us(pass2_us: float, pass1_us: float) -> float:
+    """Latency a pipelined boundary hides vs serialized: min of the two
+    overlapped terms (sum - max)."""
+    return min(pass2_us, pass1_us)

@@ -213,16 +213,25 @@ def diff_bench(old: dict, new: dict, *, walltime_tol: float = 0.5,
         nrec = new_recs.get(name)
         if nrec is None:
             continue
-        ob, nb = orec["modeled_bytes"], nrec["modeled_bytes"]
-        if nb > ob * (1 + bytes_tol):
-            diff.failures.append(
-                f"{name}: modeled bytes regressed {ob} -> {nb} "
-                f"(+{100 * (nb - ob) / ob:.1f}% > tol "
-                f"{100 * bytes_tol:.1f}%)")
-        elif nb < ob:
-            diff.notes.append(
-                f"{name}: modeled bytes improved {ob} -> {nb} "
-                f"({100 * (ob - nb) / ob:.1f}% less)")
+        # deterministic byte fields: always the whole-block bytes, plus
+        # the two-pass split when BOTH artifacts carry it (the pipeline
+        # model's inputs — older baselines without the split stay valid)
+        byte_fields = {"modeled_bytes": "modeled bytes"}
+        for f, lbl in (("modeled_pass1_bytes", "modeled pass-1 bytes"),
+                       ("modeled_pass2_bytes", "modeled pass-2 bytes")):
+            if f in orec and f in nrec:
+                byte_fields[f] = lbl
+        for field, label in byte_fields.items():
+            ob, nb = orec[field], nrec[field]
+            if nb > ob * (1 + bytes_tol):
+                diff.failures.append(
+                    f"{name}: {label} regressed {ob} -> {nb} "
+                    f"(+{100 * (nb - ob) / max(ob, 1):.1f}% > tol "
+                    f"{100 * bytes_tol:.1f}%)")
+            elif nb < ob:
+                diff.notes.append(
+                    f"{name}: {label} improved {ob} -> {nb} "
+                    f"({100 * (ob - nb) / max(ob, 1):.1f}% less)")
         if orec["axes"] != nrec["axes"]:
             msg = (f"{name}: solver axes changed {orec['axes']} -> "
                    f"{nrec['axes']}")

@@ -1,0 +1,256 @@
+"""Dataflow-graph form of an MBConv block chain.
+
+``efficientnet_b0_apply`` used to call its 16 blocks in a bare Python
+loop, which leaves the chain's buffer structure implicit: each two-pass
+fused block (``kernels.convdk_mbconv_fused``) writes a set of
+intermediate buffers in pass 1 (the retained DW tensor, the SE pool and
+gate scale) that only pass 2 of the SAME block reads — so pass 2 of
+block *i* and pass 1 of block *i+1* touch disjoint buffers except for
+the activation streamed between them.  That disjointness is exactly what
+the cross-block pipelining axis of ``core.autotune`` exploits (pricing a
+pipelined boundary as ``max(pass2_us, pass1_us)`` instead of their sum),
+and it deserves to be checkable rather than folklore.
+
+``BlockGraph`` makes it explicit: every block becomes a ``BlockNode``
+carrying per-pass ``StageIO`` read/write buffer sets plus the block's
+apply closure, and ``validate()`` proves each boundary the plan marked
+``pipelined`` is hazard-free — the ONLY buffer flowing from the
+producer's pass 2 into the consumer's pass 1 is the boundary activation
+(which the executor streams strip-by-strip, the one-level-up analogue of
+``kernels/staging.py`` double-buffering), with no write-after-write or
+write-after-read conflicts on the side buffers.  ``lower(x)`` then
+executes the chain in node order, calling each node's closure exactly as
+the old loop did — forward and grad stay bit-exact because each closure
+wraps the whole-block ``custom_vjp`` kernel unchanged.
+
+Buffer naming convention (canonical, used by the builders and tests):
+
+* ``act{i}``    — the activation entering node *i* (node *i* writes
+  ``act{i+1}``);
+* ``dw{i}``     — node *i*'s retained DW tensor (retain mode only);
+* ``pool{i}``   — node *i*'s on-chip SE pool result;
+* ``scale{i}``  — node *i*'s SE gate, written by the between-pass SE MLP
+  (accounted to pass 1, matching ``perfmodel.mbconv_pass_traffic``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, FrozenSet, Optional, Tuple
+
+from ..core.perfmodel import DEFAULT_OVERLAP, validate_overlap
+
+
+class GraphValidationError(ValueError):
+    """A BlockGraph chain or overlap annotation is ill-formed."""
+
+
+@dataclasses.dataclass(frozen=True)
+class StageIO:
+    """The HBM-level buffer sets one pass of a block touches."""
+
+    reads: FrozenSet[str]
+    writes: FrozenSet[str]
+
+    @staticmethod
+    def of(reads, writes) -> "StageIO":
+        return StageIO(reads=frozenset(reads), writes=frozenset(writes))
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockNode:
+    """One block of the chain: per-pass buffer sets + the apply closure.
+
+    ``entry_overlap`` annotates the ENTRY boundary (this node's pass 1
+    against the previous node's pass 2) — mirroring
+    ``autotune.BlockPlan.entry_overlap``, so a plan lowers 1:1 onto a
+    graph.  ``apply`` maps the boundary activation to the next one;
+    it is excluded from equality so nodes compare structurally.
+    """
+
+    index: int
+    name: str
+    pass1: StageIO
+    pass2: StageIO
+    entry_overlap: str = DEFAULT_OVERLAP
+    apply: Optional[Callable] = dataclasses.field(
+        default=None, compare=False, repr=False)
+
+    def __post_init__(self):
+        validate_overlap(self.entry_overlap)
+
+    @property
+    def input_buffer(self) -> str:
+        return f"act{self.index}"
+
+    @property
+    def output_buffer(self) -> str:
+        return f"act{self.index + 1}"
+
+
+def mbconv_stage_io(index: int, mode: str = "retain",
+                    residual: bool = False) -> Tuple[StageIO, StageIO]:
+    """The canonical (pass1, pass2) buffer sets of one two-pass fused
+    MBConv block, matching the kernel's dataflow:
+
+    * pass 1 reads the entry activation, writes the SE pool and gate
+      scale (the SE MLP between the passes is accounted to pass 1, as in
+      ``perfmodel.mbconv_pass_traffic``) plus the retained DW tensor in
+      retain mode;
+    * pass 2 reads the gate scale plus either the retained DW tensor
+      (retain) or the entry activation again (recompute re-runs the
+      front end), plus the entry activation for the identity residual
+      when present, and writes the exit activation.
+    """
+    a_in, a_out = f"act{index}", f"act{index + 1}"
+    dw, pool, scale = f"dw{index}", f"pool{index}", f"scale{index}"
+    p1_writes = {pool, scale}
+    p2_reads = {scale}
+    if mode == "retain":
+        p1_writes.add(dw)
+        p2_reads.add(dw)
+    else:
+        p2_reads.add(a_in)
+    if residual:
+        p2_reads.add(a_in)
+    return (StageIO.of({a_in}, p1_writes),
+            StageIO.of(p2_reads, {a_out}))
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockGraph:
+    """A validated chain of ``BlockNode``s ``lower()`` executes in order."""
+
+    nodes: Tuple[BlockNode, ...]
+
+    @property
+    def pipelined_boundaries(self) -> Tuple[int, ...]:
+        """Node indices whose ENTRY boundary is pipelined."""
+        return tuple(n.index for n in self.nodes[1:]
+                     if n.entry_overlap == "pipelined")
+
+    def validate(self) -> None:
+        """Prove the chain well-formed and every pipelined boundary legal.
+
+        Chain (all boundaries): node indices are 0..n-1 in order, each
+        node's pass 1 reads its entry activation, and its pass 2 writes
+        exactly its exit activation — the RAW chain the executor relies
+        on.  Pipelined boundaries additionally require hazard freedom
+        between the overlapped stages (producer pass 2 ∥ consumer
+        pass 1):
+
+        * the only buffer flowing producer-pass-2 → consumer-pass-1 is
+          the boundary activation (streamed strip-by-strip);
+        * no write-write conflict between the overlapped stages;
+        * consumer pass 1 writes nothing producer pass 2 reads (no WAR
+          on the side buffers — e.g. a recompute producer still reading
+          ITS entry activation must not see it clobbered).
+        """
+        for i, node in enumerate(self.nodes):
+            if node.index != i:
+                raise GraphValidationError(
+                    f"node {i} carries index {node.index}; chain order "
+                    "and buffer naming must agree")
+            if node.input_buffer not in node.pass1.reads:
+                raise GraphValidationError(
+                    f"{node.name}: pass 1 does not read its entry "
+                    f"activation {node.input_buffer!r}")
+            if node.output_buffer not in node.pass2.writes:
+                raise GraphValidationError(
+                    f"{node.name}: pass 2 does not write its exit "
+                    f"activation {node.output_buffer!r}")
+        if self.nodes and self.nodes[0].entry_overlap == "pipelined":
+            raise GraphValidationError(
+                f"{self.nodes[0].name}: the first node has no producer "
+                "to overlap with")
+        for node in self.nodes[1:]:
+            if node.entry_overlap != "pipelined":
+                continue
+            prev = self.nodes[node.index - 1]
+            streamed = prev.pass2.writes & node.pass1.reads
+            if streamed != {node.input_buffer}:
+                raise GraphValidationError(
+                    f"boundary {prev.name}->{node.name}: pipelining "
+                    f"requires exactly the boundary activation "
+                    f"{node.input_buffer!r} to flow producer-pass-2 -> "
+                    f"consumer-pass-1, got {sorted(streamed)}")
+            waw = prev.pass2.writes & node.pass1.writes
+            if waw:
+                raise GraphValidationError(
+                    f"boundary {prev.name}->{node.name}: write-write "
+                    f"conflict on {sorted(waw)} between overlapped "
+                    "stages")
+            war = node.pass1.writes & prev.pass2.reads
+            if war:
+                raise GraphValidationError(
+                    f"boundary {prev.name}->{node.name}: consumer "
+                    f"pass 1 overwrites {sorted(war)} while producer "
+                    "pass 2 still reads it")
+
+    def lower(self, x):
+        """Execute the chain: thread ``x`` through every node's apply
+        closure in node order — operation-for-operation identical to the
+        sequential loop, so forward and grad are bit-exact with it."""
+        from ..core import telemetry
+        telemetry.counter("blockgraph.lower")
+        telemetry.counter("blockgraph.pipelined_boundaries",
+                          len(self.pipelined_boundaries))
+        for node in self.nodes:
+            if node.apply is None:
+                raise GraphValidationError(
+                    f"{node.name}: no apply closure bound; build the "
+                    "graph through build_mbconv_graph to lower it")
+            x = node.apply(x)
+        return x
+
+
+def build_mbconv_graph(specs, params, *, kcfg=None, mesh=None,
+                       plan=None) -> BlockGraph:
+    """The ``BlockGraph`` of an MBConv chain (the 16 B0 blocks; stem and
+    head stay in the caller).  Each node's apply closure performs the
+    exact block call the sequential loop in ``efficientnet_b0_apply``
+    used to make — same ``SchedulePin``, same ``in_layout`` — so
+    ``graph.lower(x)`` is bit-exact with the loop; with a ``plan``, each
+    node additionally inherits the plan's solved ``entry_overlap`` and
+    per-pass buffer sets reflect the solved mode (retain vs recompute).
+
+    Without a plan every boundary is serial and the buffer sets use the
+    nodes' default retain dataflow — the graph is then purely the
+    structural form of the loop.
+    """
+    from ..configs.base import SchedulePin
+    from .mbconv import mbconv_block
+
+    if plan is not None and len(plan.blocks) != len(specs):
+        raise GraphValidationError(
+            f"plan covers {len(plan.blocks)} blocks, chain has "
+            f"{len(specs)}")
+    nodes = []
+    for i, sp in enumerate(specs):
+        if plan is not None:
+            bp = plan.blocks[i]
+            pin = SchedulePin(mode=bp.schedule.mode,
+                              residency=bp.schedule.residency,
+                              collective=bp.schedule.collective)
+            mode = bp.schedule.mode
+            overlap = bp.entry_overlap
+            in_layout = bp.in_layout
+
+            def apply(x, _p=params[f"block{i}"], _s=sp.s, _pin=pin,
+                      _lay=in_layout, _ov=overlap):
+                y, _ = mbconv_block(x, _p, stride=_s, cfg=kcfg, mesh=mesh,
+                                    pin=_pin, in_layout=_lay,
+                                    overlap=_ov)
+                return y
+        else:
+            mode, overlap = "retain", DEFAULT_OVERLAP
+
+            def apply(x, _p=params[f"block{i}"], _s=sp.s):
+                y, _ = mbconv_block(x, _p, stride=_s, cfg=kcfg, mesh=mesh)
+                return y
+
+        p1, p2 = mbconv_stage_io(i, mode=mode, residual=sp.has_residual)
+        nodes.append(BlockNode(index=i, name=f"mbconv{i}", pass1=p1,
+                               pass2=p2, entry_overlap=overlap,
+                               apply=apply))
+    return BlockGraph(nodes=tuple(nodes))

@@ -166,6 +166,7 @@ def mbconv_block(
     mesh=None,
     pin=None,
     in_layout: str = "replicated",
+    overlap: Optional[str] = None,
     kcfg=None,
 ):
     """Apply one MBConv block, routed by the conv-kernel config.
@@ -203,6 +204,14 @@ def mbconv_block(
     network DP exploits exactly this) and via an entry all-gather by
     real-expand blocks (byte-identical to a boundary regather: the dense
     expand needs all of c_in, which is why e > 1 boundaries tie).
+
+    ``overlap`` declares the ENTRY-boundary overlap mode the caller's
+    chain executor runs this block under ("serial" | "pipelined", see
+    ``core.perfmodel.OVERLAP_MODES``; None = serial).  It does not change
+    the block's math — it threads into the schedule lookup so a
+    pipelined entry solves under the halved pass-1 VMEM budget (two
+    blocks share VMEM while their stages overlap) and caches under its
+    own ``ov=`` key segment.
 
     x: (B, H, W, C_in) NHWC -> (B, H', W', C_out).
     """
@@ -257,6 +266,7 @@ def mbconv_block(
     collective = pinned_collective
     if cfg.autotune:
         from ..core.autotune import get_mbconv_schedule
+        from ..core.perfmodel import DEFAULT_OVERLAP
         b, h, w, _ = x.shape
         se_ratio = params["se_w1"].shape[1] / max(1, c_in)
         # a pinned mbconv_mode enters the solve: tile_h/residency must be
@@ -266,7 +276,8 @@ def mbconv_block(
             se_ratio=se_ratio, dtype_bytes=x.dtype.itemsize,
             mesh_shape=mesh_shape, residency=eff.residency,
             mode=eff.mode, collective=pinned_collective,
-            in_layout=eff_in_layout)
+            in_layout=eff_in_layout,
+            overlap=overlap if overlap is not None else DEFAULT_OVERLAP)
         tile_h = sch.tile_h
         mode = sch.mode
         residency = sch.residency
@@ -348,7 +359,14 @@ def efficientnet_b0_apply(params: dict, images: jax.Array,
     (it must match this call's chain shapes): the vision serving engine
     solves one plan per resolution bucket and threads it here, so the
     bytes its telemetry counters charge are — by construction — the
-    schedules the blocks actually run."""
+    schedules the blocks actually run.
+
+    The block chain itself lowers through ``models.blockgraph``: the
+    specs (and plan, when present) build a ``BlockGraph`` whose nodes
+    carry explicit per-pass buffer sets and the plan's solved
+    ``entry_overlap``, ``validate()`` proves every pipelined boundary
+    hazard-free, and ``lower()`` runs the chain — bit-exact with the
+    former sequential loop."""
     specs = effnet_block_specs(cfg)
     dt = jnp.dtype(cfg.dtype)
     x = jax.lax.conv_general_dilated(
@@ -369,7 +387,6 @@ def efficientnet_b0_apply(params: dict, images: jax.Array,
                                 dtype_bytes=dt.itemsize,
                                 se_ratio=cfg.se_ratio)
     if plan is not None:
-        from ..configs.base import SchedulePin
         if mesh is not None and plan.stem_layout == "model_sharded":
             # materialize the stem output once per element mesh-wide: each
             # device of a model group holds only its c0/mp channel slice,
@@ -381,18 +398,18 @@ def efficientnet_b0_apply(params: dict, images: jax.Array,
                 x, NamedSharding(mesh, _P(_batch_axes(mesh), None, None,
                                           MODEL_AXIS)))
 
-    for i, sp in enumerate(specs):
-        if plan is not None:
-            bp = plan.blocks[i]
-            pin = SchedulePin(mode=bp.schedule.mode,
-                              residency=bp.schedule.residency,
-                              collective=bp.schedule.collective)
-            x, _lay = mbconv_block(x, params[f"block{i}"], stride=sp.s,
-                                   cfg=kcfg, mesh=mesh, pin=pin,
-                                   in_layout=bp.in_layout)
-        else:
-            x, _lay = mbconv_block(x, params[f"block{i}"], stride=sp.s,
-                                   cfg=kcfg, mesh=mesh)
+    # the 16-block chain lowers through its dataflow-graph form: each
+    # block is a BlockNode with explicit per-pass read/write buffer
+    # sets, validate() proves every plan-pipelined boundary hazard-free
+    # (only the boundary activation flows producer-pass-2 ->
+    # consumer-pass-1), and lower() executes the nodes in chain order —
+    # operation-for-operation what the old Python loop did, so forward
+    # and grad are bit-exact with it
+    from .blockgraph import build_mbconv_graph
+    graph = build_mbconv_graph(specs, params, kcfg=kcfg, mesh=mesh,
+                               plan=plan)
+    graph.validate()
+    x = graph.lower(x)
     x = jax.nn.silu(jnp.einsum("bhwc,cd->bhwd", x,
                                params["head"].astype(x.dtype)))
     x = x.mean(axis=(1, 2))

@@ -25,14 +25,30 @@ here:
   (``jax.block_until_ready``, the ``telemetry.measure`` discipline)
   recorded as telemetry series alongside queue depth and wait times.
 
+Admission is a TWO-LEVEL FIFO: ``submit(image, priority=1)`` places a
+request in the priority lane, which ``step`` drains ahead of the normal
+lane (FIFO within each lane; the batch back-fills from the normal lane's
+same bucket).  Shedding is unchanged — the queue bound applies to the
+COMBINED depth, so priority requests cannot starve the shed accounting.
+
+Every bucket's plan comes from the network-level solve, which now
+includes the cross-block ``overlap`` axis: boundaries the DP proves
+pipelinable execute pass 2 of block *i* overlapped with pass 1 of block
+*i+1* (``models.blockgraph`` validates the buffer hazards at lowering),
+so serving inherits the pipelined chain latency without any engine code
+knowing about it.  ``serve.pipelined_boundaries.r<res>`` records how
+many boundaries of the bucket's plan pipeline.
+
 Counter naming (shape-class first, then layer):
 
-    serve.admitted / serve.shed.queue_full / serve.shed.oversize
+    serve.admitted / serve.admitted.priority
+    serve.shed.queue_full / serve.shed.oversize
     serve.batches.r<res> / serve.requests.r<res> / serve.pad_slots.r<res>
     serve.bytes.r<res>.<layer>       modeled bytes moved (layer = stem,
                                      block00..blockNN, boundaries)
     serve.collective.r<res>.<layer>  modeled interconnect bytes
     serve.trace.r<res>               trace-time: retrace counter
+    serve.pipelined_boundaries.r<res>  plan-time: solved overlap count
 
 Series: ``serve.queue_depth``, ``serve.queue_wait_s``, ``serve.latency_s``.
 """
@@ -105,6 +121,7 @@ class VisionRequest:
     image: np.ndarray
     bucket: int                  # admission resolution
     t_submit: float
+    priority: int = 0            # > 0 = priority lane (drained first)
 
 
 @dataclasses.dataclass
@@ -151,6 +168,7 @@ class VisionEngine:
         self.kcfg = kcfg
         self.specs = effnet_block_specs(cfg)
         self._queue: Deque[VisionRequest] = deque()
+        self._pqueue: Deque[VisionRequest] = deque()
         self._next_rid = 0
         self._plans: Dict[int, NetworkPlan] = {}
         self._applies: Dict[int, object] = {}
@@ -165,10 +183,15 @@ class VisionEngine:
                 return res
         return None
 
-    def submit(self, image: np.ndarray) -> Optional[int]:
+    def submit(self, image: np.ndarray, priority: int = 0) -> Optional[int]:
         """Admit one (H, W, 3) image.  Returns the request id, or None
         when the request is SHED (queue at bound, or image above the
-        largest bucket) — every shed increments its rejection counter."""
+        largest bucket) — every shed increments its rejection counter.
+
+        ``priority > 0`` admits into the priority lane, which ``step``
+        drains ahead of the normal lane.  The queue bound covers BOTH
+        lanes combined — priority admission never bypasses shedding, it
+        only reorders service among the admitted."""
         image = np.asarray(image)
         if image.ndim != 3 or image.shape[-1] != 3:
             raise ValueError(f"expected an (H, W, 3) image, "
@@ -177,20 +200,22 @@ class VisionEngine:
         if bucket is None:
             telemetry.counter("serve.shed.oversize")
             return None
-        if len(self._queue) >= self.scfg.max_queue:
+        if self.pending() >= self.scfg.max_queue:
             telemetry.counter("serve.shed.queue_full")
             return None
         rid = self._next_rid
         self._next_rid += 1
-        self._queue.append(VisionRequest(
-            rid=rid, image=image, bucket=bucket,
-            t_submit=time.perf_counter()))
+        rq = VisionRequest(rid=rid, image=image, bucket=bucket,
+                           t_submit=time.perf_counter(), priority=priority)
+        (self._pqueue if priority > 0 else self._queue).append(rq)
         telemetry.counter("serve.admitted")
-        telemetry.record("serve.queue_depth", len(self._queue))
+        if priority > 0:
+            telemetry.counter("serve.admitted.priority")
+        telemetry.record("serve.queue_depth", self.pending())
         return rid
 
     def pending(self) -> int:
-        return len(self._queue)
+        return len(self._pqueue) + len(self._queue)
 
     @property
     def shed(self) -> int:
@@ -215,10 +240,15 @@ class VisionEngine:
         if res not in self._plans:
             stem_hw = -(-res // STEM_STRIDE)
             rows = effnet_chain_rows(self.specs, stem_hw, stem_hw)
-            self._plans[res] = get_network_plan(
+            plan = get_network_plan(
                 rows, self.scfg.batch_size, self._mesh_shape(),
                 dtype_bytes=jnp.dtype(self.cfg.dtype).itemsize,
                 se_ratio=self.cfg.se_ratio)
+            self._plans[res] = plan
+            # solve-time, like the plan itself: how many boundaries of
+            # this bucket's chain execute pipelined (pass-2 ∥ pass-1)
+            telemetry.counter(f"serve.pipelined_boundaries.r{res}",
+                              len(plan.pipelined_boundaries))
         return self._plans[res]
 
     def modeled_layer_bytes(self, res: int) -> Dict[str, Tuple[int, int]]:
@@ -254,25 +284,30 @@ class VisionEngine:
     # -- serving -------------------------------------------------------------
 
     def step(self) -> List[VisionResult]:
-        """Launch ONE batch: the oldest waiter's bucket, filled FIFO from
-        that bucket up to ``batch_size`` (short packs zero-pad)."""
-        if not self._queue:
+        """Launch ONE batch: the oldest PRIORITY waiter's bucket (falling
+        back to the oldest normal waiter), filled FIFO from that bucket —
+        priority lane first, then back-filled from the normal lane — up
+        to ``batch_size`` (short packs zero-pad)."""
+        if not self._pqueue and not self._queue:
             return []
-        res = self._queue[0].bucket
+        head = self._pqueue[0] if self._pqueue else self._queue[0]
+        res = head.bucket
         take: List[VisionRequest] = []
-        keep: Deque[VisionRequest] = deque()
-        for rq in self._queue:
-            if rq.bucket == res and len(take) < self.scfg.batch_size:
-                take.append(rq)
-            else:
-                keep.append(rq)
-        self._queue = keep
+        for lane_name in ("_pqueue", "_queue"):
+            lane: Deque[VisionRequest] = getattr(self, lane_name)
+            keep: Deque[VisionRequest] = deque()
+            for rq in lane:
+                if rq.bucket == res and len(take) < self.scfg.batch_size:
+                    take.append(rq)
+                else:
+                    keep.append(rq)
+            setattr(self, lane_name, keep)
         return self._launch(res, take)
 
     def drain(self) -> List[VisionResult]:
-        """Step until the queue is empty; results in completion order."""
+        """Step until both lanes are empty; results in completion order."""
         out: List[VisionResult] = []
-        while self._queue:
+        while self._pqueue or self._queue:
             out.extend(self.step())
         return out
 

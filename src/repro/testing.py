@@ -9,7 +9,7 @@ pseudo-random example sweep instead of erroring at import time.
 ``install_hypothesis_fallback()`` (called from ``tests/conftest.py``)
 registers a stub module under the ``hypothesis`` name implementing exactly
 the surface the suites use: ``given``, ``settings`` and the
-``integers`` / ``sampled_from`` / ``builds`` strategies.  Examples are drawn
+``integers`` / ``sampled_from`` / ``floats`` / ``builds`` strategies.  Examples are drawn
 from a fixed-seed ``random.Random`` so failures reproduce across runs.
 """
 
@@ -45,6 +45,11 @@ def integers(min_value: int = 0, max_value: int = 1 << 16) -> _Strategy:
 def sampled_from(elements) -> _Strategy:
     elements = list(elements)
     return _Strategy(lambda rng: elements[rng.randrange(len(elements))])
+
+
+def floats(min_value: float = 0.0, max_value: float = 1.0,
+           **_ignored) -> _Strategy:
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
 
 
 def builds(target, **kwargs) -> _Strategy:
@@ -99,6 +104,7 @@ def install_hypothesis_fallback() -> bool:
     strat = types.ModuleType("hypothesis.strategies")
     strat.integers = integers
     strat.sampled_from = sampled_from
+    strat.floats = floats
     strat.builds = builds
     mod.strategies = strat
     mod.__is_repro_fallback__ = True

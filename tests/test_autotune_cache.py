@@ -275,6 +275,46 @@ def test_legacy_pre_layout_keys_migrate(cache_dir):
     assert any("|layout=replicated|" in k for k in keys)
 
 
+def test_legacy_pre_overlap_keys_migrate(cache_dir):
+    """MBConv entries persisted before the cross-block overlap axis (no
+    ``ov=`` segment) were all solved under the serial-entry VMEM budget —
+    so they must be honored as the ``ov=serial`` picks after a disk
+    round-trip, while a pipelined entry (halved pass-1 VMEM budget)
+    solves and caches under its own ``ov=pipelined`` key instead of
+    echoing the serial schedule."""
+    tmp_path, cache = cache_dir
+    sch = get_mbconv_schedule(8, 14, 14, 80, 480, 112, 5, 1,
+                              mesh_shape=(2, 4))
+    (key,) = list(_entries(tmp_path))
+    assert "|ov=serial|" in key
+    legacy_key = key.replace("|ov=serial|", "|")           # pre-overlap era
+    assert "ov=" not in legacy_key
+    edited_th = 1 if sch.tile_h != 1 else 2
+    (tmp_path / "convdk_schedules.json").write_text(json.dumps(
+        {"version": 1,
+         "entries": {legacy_key: {"tile_h": edited_th, "mode": "recompute",
+                                  "source": "measured"}}}))
+    cache.clear_memory()                                   # "new process"
+    again = get_mbconv_schedule(8, 14, 14, 80, 480, 112, 5, 1,
+                                mesh_shape=(2, 4))
+    assert (again.tile_h, again.mode) == (edited_th, "recompute")
+    assert again.overlap == "serial"
+
+    # a pipelined entry must NOT hit the migrated serial entry: it
+    # solves fresh (halved pass-1 budget) and persists under ov=pipelined
+    pipe = get_mbconv_schedule(8, 14, 14, 80, 480, 112, 5, 1,
+                               mesh_shape=(2, 4), overlap="pipelined")
+    assert pipe.overlap == "pipelined"
+    keys = list(_entries(tmp_path))
+    assert any("|ov=pipelined|" in k for k in keys)
+    assert any("|ov=serial|" in k for k in keys)
+
+    # separable keys never grow the segment
+    get_fused_schedule(8, 28, 28, 64, 64, 3, 1, mesh_shape=(2, 4))
+    sep_keys = [k for k in _entries(tmp_path) if k.startswith("sep|")]
+    assert sep_keys and all("ov=" not in k for k in sep_keys)
+
+
 def test_corrupt_cache_file_is_ignored(cache_dir):
     tmp_path, _cache = cache_dir
     (tmp_path / "convdk_schedules.json").write_text("{not json")
