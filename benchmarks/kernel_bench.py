@@ -32,9 +32,12 @@ import numpy as np
 from repro.compat import pallas_dma_priority_supported
 from repro.core import telemetry
 from repro.core.autotune import (
+    BlockRow,
     benchmark_mbconv_sweep,
     get_fused_schedule,
+    get_fusedmb_schedule,
     get_mbconv_schedule,
+    network_rows_from_table,
 )
 from repro.core.perfmodel import (
     COLLECTIVE_MODES,
@@ -48,7 +51,24 @@ from repro.core.workloads import (
     EFFICIENTNET_B0_MBCONV,
     EFFICIENTNET_V2_K7_SEPARABLE,
     MOBILENET_V2_SEPARABLE,
+    effnet_v2_chain_rows,
+    mobilenet_v3_chain_rows,
 )
+
+# the three end-to-end workloads --family selects from: the all-MBConv
+# EfficientNet-B0 chain (the original gate), MobileNet-V3-Large (per-row
+# act/SE variants) and EfficientNet-V2-S (mixed Fused-MBConv + MBConv)
+FAMILY_CHOICES = ("b0", "v3l", "v2s")
+
+
+def family_chain(family: str) -> tuple:
+    """The family-generic ``BlockRow`` chain of one ``--family`` choice."""
+    if family == "b0":
+        return tuple(BlockRow(*r)
+                     for r in network_rows_from_table(EFFICIENTNET_B0_MBCONV))
+    if family == "v3l":
+        return mobilenet_v3_chain_rows("large")
+    return effnet_v2_chain_rows()
 from repro.kernels import (
     DEFAULT_RESIDENCY, causal_conv1d_ref, convdk_causal_conv1d,
     convdk_depthwise2d, convdk_fused_separable, convdk_mbconv_fused,
@@ -172,35 +192,38 @@ def fused_traffic_report(mesh_shape=(1, 1), residency=None) -> bool:
 
 
 def mbconv_traffic_report(mesh_shape=(1, 1), residency=None,
-                          collective=None):
-    """Modeled HBM traffic of the two-pass fused MBConv pipeline vs the
-    staged DW->HBM->SE->PW baseline for every EfficientNet-B0 MBConv block
-    (f32), with the autotuned (tile_h, retain/recompute, residency,
-    collective) schedule — ``residency``/``collective`` pin their axes
-    when given.  Returns (ok, totals): ok iff the two-pass traffic is
-    strictly below staged for ALL sharded layers (fallback rows labeled
-    and excluded), totals mapping layer name -> mesh-wide fused bytes
-    (None for fallback rows).
+                          collective=None, family="b0", chain=None):
+    """Modeled HBM traffic of the fused block pipelines vs their staged
+    baselines for every block of one ``--family`` chain (f32), with the
+    autotuned schedule — ``residency``/``collective`` pin their axes when
+    given.  Family-generic: ``mbconv`` rows price the two-pass SE-aware
+    pipeline (per-row act and SE — a no-SE row pays zero SE bytes and,
+    under a mesh, zero squeeze-collective bytes), ``fusedmb`` rows the
+    single-pass pipeline (no mode axis — the column prints ``-``; the
+    only collective is the projection reduction).  Returns (ok, totals):
+    ok iff fused traffic is strictly below staged for ALL sharded layers
+    (fallback rows labeled and excluded), totals mapping layer name ->
+    mesh-wide fused bytes (None for fallback rows).
 
     With a non-trivial ``mesh_shape`` the comparison is the SHARDED one
     (batch 8 over "data", c_mid over "model"): per-device fused bytes plus
-    the SE-squeeze/projection collective bytes — surfaced in their own
-    ``collective_bytes`` column — vs the staged pipeline partitioned
-    identically (which pays the SAME collectives: its reductions over
-    c_mid are the same, under the same layout)."""
+    the collective bytes — surfaced in their own ``collective_bytes``
+    column — vs the staged pipeline partitioned identically (which pays
+    the SAME collectives)."""
+    chain = family_chain(family) if chain is None else chain
     b = 8 if mesh_shape != (1, 1) else 1
-    print(f"# mesh={mesh_shape[0]}x{mesh_shape[1]} batch={b} "
-          f"residency={residency or 'auto'} "
+    print(f"# family={family} mesh={mesh_shape[0]}x{mesh_shape[1]} "
+          f"batch={b} residency={residency or 'auto'} "
           f"collective={collective or 'auto'}")
-    print("layer,c_in,c_mid,c_out,hw,k,s,tile_h,mode,residency,collective,"
-          "mesh,per_dev_bytes,dma_issues,collective_bytes,fused_bytes,"
-          "staged_bytes,saving_pct")
+    print("layer,c_in,c_mid,c_out,hw,k,s,act,se,tile_h,mode,residency,"
+          "collective,mesh,per_dev_bytes,dma_issues,collective_bytes,"
+          "fused_bytes,staged_bytes,saving_pct")
     ok = True
     fallbacks = 0
     dropped = 0
     totals = {}
-    for i, (ci, co, e, k, s, hw) in enumerate(EFFICIENTNET_B0_MBCONV):
-        name = f"b0_mbconv{i}"
+    for i, r in enumerate(chain):
+        name = f"{family}_{r.family}{i}"
         # a pinned psum_scatter may not be runnable on a layer (c_out
         # does not divide the model axis): price the ring instead, label
         # the row, keep it out of the pinned gate — same policy as the
@@ -209,13 +232,21 @@ def mbconv_traffic_report(mesh_shape=(1, 1), residency=None,
         pin_dropped = (collective == "psum_scatter"
                        and mesh_shape[1] > 1
                        and not can_psum_scatter(
-                           MBConvShape(b=b, h=hw, w=hw, c_in=ci,
-                                       c_mid=ci * e, c_out=co, k=k, s=s),
+                           MBConvShape(b=b, h=r.h, w=r.w, c_in=r.c_in,
+                                       c_mid=r.c_mid, c_out=r.c_out,
+                                       k=r.k, s=r.s),
                            mesh_shape))
-        sch = get_mbconv_schedule(
-            b, hw, hw, ci, ci * e, co, k, s, mesh_shape=mesh_shape,
-            residency=residency,
-            collective="ring_allreduce" if pin_dropped else collective)
+        eff_coll = "ring_allreduce" if pin_dropped else collective
+        if r.family == "fusedmb":
+            sch = get_fusedmb_schedule(
+                b, r.h, r.w, r.c_in, r.c_mid, r.c_out, r.k, r.s,
+                mesh_shape=mesh_shape, residency=residency,
+                collective=eff_coll, act=r.act)
+        else:
+            sch = get_mbconv_schedule(
+                b, r.h, r.w, r.c_in, r.c_mid, r.c_out, r.k, r.s,
+                se_ratio=r.se_ratio, mesh_shape=mesh_shape,
+                residency=residency, collective=eff_coll, act=r.act)
         f, st = sch.total_bytes, sch.staged_total_bytes
         fallback = _is_fallback(sch.mesh_shape, mesh_shape)
         if fallback or pin_dropped:
@@ -227,8 +258,12 @@ def mbconv_traffic_report(mesh_shape=(1, 1), residency=None,
             totals[name] = f
         coll_label = sch.collective + (" (pin dropped)" if pin_dropped
                                        else "")
-        print(f"{name},{ci},{ci * e},{co},{hw},{k},{s},"
-              f"{sch.tile_h},{sch.mode},{sch.residency},{coll_label},"
+        se_label = "on" if r.family == "mbconv" and r.se_ratio > 0 \
+            else "off"
+        print(f"{name},{r.c_in},{r.c_mid},{r.c_out},{r.h},{r.k},{r.s},"
+              f"{r.act},{se_label},"
+              f"{sch.tile_h},{getattr(sch, 'mode', '-')},{sch.residency},"
+              f"{coll_label},"
               f"{_mesh_label(sch.mesh_shape, fallback)},"
               f"{sch.traffic.total_bytes},{sch.traffic.dma_issues},"
               f"{sch.collective_bytes},{f},{st},"
@@ -239,27 +274,31 @@ def mbconv_traffic_report(mesh_shape=(1, 1), residency=None,
               f"ring_allreduce, excluded from the gate")
     if fallbacks:
         print(f"# {fallbacks} fallback row(s) excluded from the gate")
-        if fallbacks == len(EFFICIENTNET_B0_MBCONV):
+        if fallbacks == len(chain):
             # a mesh that divides NOTHING must not turn the gate green
             # vacuously (e.g. a typo'd --mesh in CI)
             print("# every row fell back: nothing was gated -> FAIL")
             ok = False
-    print(f"# two-pass fused strictly below staged on all sharded layers "
-          f"[residency={residency or 'auto'}, "
+    print(f"# fused strictly below staged on all sharded layers "
+          f"[family={family}, residency={residency or 'auto'}, "
           f"collective={collective or 'auto'}]: {ok}")
     return ok, totals
 
 
-def mbconv_collective_sweep(mesh_shape, residency=None) -> bool:
-    """The model-sharded collective gate: price every B0 block under BOTH
-    collective modes — the autotuned pick (scatter where it is runnable
-    and wins) and the ring pin — and require the autotuned total <= the
-    ring-pinned total on every sharded layer.  Returns True iff both
-    fused-vs-staged gates AND the autotuned-vs-ring comparison hold."""
-    auto_ok, auto_totals = mbconv_traffic_report(mesh_shape, residency, None)
+def mbconv_collective_sweep(mesh_shape, residency=None, family="b0",
+                            chain=None) -> bool:
+    """The model-sharded collective gate: price every block of the chain
+    under BOTH collective modes — the autotuned pick (scatter where it is
+    runnable and wins) and the ring pin — and require the autotuned total
+    <= the ring-pinned total on every sharded layer.  Returns True iff
+    both fused-vs-staged gates AND the autotuned-vs-ring comparison
+    hold."""
+    auto_ok, auto_totals = mbconv_traffic_report(mesh_shape, residency,
+                                                 None, family, chain)
     print()
     ring_ok, ring_totals = mbconv_traffic_report(mesh_shape, residency,
-                                                 "ring_allreduce")
+                                                 "ring_allreduce", family,
+                                                 chain)
     worse = [name for name, t in auto_totals.items()
              if t is not None and ring_totals.get(name) is not None
              and t > ring_totals[name]]
@@ -268,45 +307,52 @@ def mbconv_collective_sweep(mesh_shape, residency=None) -> bool:
     return auto_ok and ring_ok and not worse
 
 
-def network_report(mesh_shape) -> bool:
-    """The network-level layout gate: solve the whole B0 chain (stem + 16
-    MBConv blocks + head boundary) with the layout DP and compare its
-    end-to-end modeled bytes against the greedy per-layer reference (the
-    PR-5 status quo: every block solved in isolation, every sharded exit
-    repaying its all-gather at the next replicated entry).  The
-    layout-transition bytes are their own column — greedy's repays are
-    exactly where the per-layer scatter win evaporates.
+def network_report(mesh_shape, family="b0", chain=None) -> bool:
+    """The network-level layout gate: solve the whole chain (stem +
+    blocks + head boundary) with the layout DP and compare its end-to-end
+    modeled bytes against the greedy per-layer reference (every block
+    solved in isolation, every sharded exit repaying its all-gather at
+    the next replicated entry).  The layout-transition bytes are their
+    own column — greedy's repays are exactly where the per-layer scatter
+    win evaporates.
 
-    Gate: solved <= greedy always; on a model-sharded mesh additionally
-    solved STRICTLY below greedy with at least one adjacent chain pair
-    staying sharded across the boundary."""
+    Gate: solved <= greedy always.  On a model-sharded mesh, when the
+    chain carries an identity-expand MBConv row (the one place a sharded
+    boundary strictly wins — B0's block 0, V3-Large's block 0) the gate
+    additionally requires solved STRICTLY below greedy with at least one
+    adjacent pair staying sharded.  A chain with no such row
+    (EfficientNet-V2-S: fusedmb entries are always replicated, its
+    MBConv tail is all real-expand) legitimately ties greedy — the gate
+    then instead requires every fusedmb block to enter replicated (the
+    family's layout contract, priced AND executed that way)."""
     from repro.core.autotune import (
-        greedy_network_schedule, network_rows_from_table,
-        solve_network_schedule,
+        greedy_network_schedule, solve_network_schedule,
     )
+    chain = family_chain(family) if chain is None else chain
     b = 8 if mesh_shape != (1, 1) else 1
-    chain = network_rows_from_table(EFFICIENTNET_B0_MBCONV)
     solved = solve_network_schedule(chain, b, mesh_shape)
     greedy = greedy_network_schedule(chain, b, mesh_shape)
     mb = 1e6
-    print(f"# network-level layout solve: mesh={mesh_shape[0]}x"
+    print(f"# network-level layout solve [{family}]: mesh={mesh_shape[0]}x"
           f"{mesh_shape[1]} batch={b} chain=stem+{len(chain)} blocks")
-    print("element,c_in,c_mid,c_out,hw,in_layout,out_layout,mode,"
+    print("element,family,c_in,c_mid,c_out,hw,in_layout,out_layout,mode,"
           "residency,collective,block_mb,transition_mb")
     for plan, tag in ((solved, "solved"), (greedy, "greedy")):
         print(f"# {tag} plan")
-        h0, w0, c0 = chain[0][0], chain[0][1], chain[0][2]
-        print(f"stem[{tag}],3,,{c0},{h0},,{plan.stem_layout},,,,"
+        r0 = chain[0]
+        print(f"stem[{tag}],,3,,{r0.c_in},{r0.h},,{plan.stem_layout},,,,"
               f"{plan.stem_bytes / mb:.3f},0.000")
         for p in plan.blocks:
             sh = p.shape
             trans = p.boundary_bytes + p.schedule.transition_bytes
-            print(f"b0_mbconv{p.index}[{tag}],{sh.c_in},{sh.c_mid},"
+            print(f"{family}_{p.family}{p.index}[{tag}],{p.family},"
+                  f"{sh.c_in},{sh.c_mid},"
                   f"{sh.c_out},{sh.h},{p.in_layout},{p.out_layout},"
-                  f"{p.schedule.mode},{p.schedule.residency},"
+                  f"{getattr(p.schedule, 'mode', '-')},"
+                  f"{p.schedule.residency},"
                   f"{p.schedule.collective},"
                   f"{p.schedule.total_bytes / mb:.3f},{trans / mb:.3f}")
-        print(f"head[{tag}],,,,,,,,,,0.000,"
+        print(f"head[{tag}],,,,,,,,,,,0.000,"
               f"{plan.head_boundary_words * plan.dtype_bytes / mb:.3f}")
         print(f"# {tag} totals: stem={plan.stem_bytes / mb:.3f} MB, "
               f"blocks={plan.block_bytes / mb:.3f} MB, "
@@ -318,18 +364,30 @@ def network_report(mesh_shape) -> bool:
     print(f"# sharded boundary pairs (solved): "
           f"{pair_label or 'none'}")
     ok = solved.total_bytes <= greedy.total_bytes
-    if mesh_shape[1] > 1:
+    has_identity = any(r.family == "mbconv" and r.c_mid == r.c_in
+                       for r in chain)
+    if mesh_shape[1] > 1 and has_identity:
         ok &= solved.total_bytes < greedy.total_bytes and len(pairs) >= 1
         print(f"# solved strictly below greedy with >=1 sharded pair: "
               f"{ok} ({solved.total_bytes / mb:.3f} vs "
               f"{greedy.total_bytes / mb:.3f} MB)")
+    elif mesh_shape[1] > 1:
+        bad_entries = [p.index for p in solved.blocks
+                       if p.family == "fusedmb"
+                       and p.in_layout != "replicated"]
+        ok &= not bad_entries
+        print(f"# no identity-expand row: solved <= greedy and every "
+              f"fusedmb entry replicated: {ok}"
+              + (f" (sharded fusedmb entries: {bad_entries})"
+                 if bad_entries else ""))
     else:
         print(f"# solved <= greedy (degenerate mesh): {ok}")
     return ok
 
 
-def pipeline_report(mesh_shape, records=None) -> bool:
-    """The cross-block pipelining gate: solve the B0 chain (layout DP +
+def pipeline_report(mesh_shape, records=None, family="b0",
+                    chain=None) -> bool:
+    """The cross-block pipelining gate: solve the chain (layout DP +
     overlap annotation), print the per-boundary serialized-vs-pipelined
     modeled latency table, and compare the chain totals.
 
@@ -342,15 +400,17 @@ def pipeline_report(mesh_shape, records=None) -> bool:
     Gate: on a model-sharded mesh the plan must pipeline >= 1 boundary
     AND its modeled chain latency must sit STRICTLY below the fully
     serialized chain; on a degenerate mesh pipelined <= serialized (the
-    annotation may legitimately find nothing to overlap)."""
-    from repro.core.autotune import (
-        network_rows_from_table, solve_network_schedule,
-    )
+    annotation may legitimately find nothing to overlap).  On chains
+    with Fused-MBConv blocks, every boundary BEHIND a one-pass producer
+    must additionally be serial — a single-pass block has no pass 2 to
+    hide a consumer's DMA behind, and the report must price that
+    honestly rather than claim phantom overlap."""
+    from repro.core.autotune import solve_network_schedule
     from repro.core.perfmodel import (
         fit_perf_coefficients, get_perf_coefficients, set_perf_coefficients,
     )
+    chain = family_chain(family) if chain is None else chain
     b = 8 if mesh_shape != (1, 1) else 1
-    chain = network_rows_from_table(EFFICIENTNET_B0_MBCONV)
     fitted = None
     if records:
         samples = [
@@ -369,7 +429,7 @@ def pipeline_report(mesh_shape, records=None) -> bool:
     coeffs = get_perf_coefficients()
     try:
         plan = solve_network_schedule(chain, b, mesh_shape)
-        print(f"# cross-block pipelining: mesh={mesh_shape[0]}x"
+        print(f"# cross-block pipelining [{family}]: mesh={mesh_shape[0]}x"
               f"{mesh_shape[1]} batch={b} "
               f"coeffs={'measured-refit' if fitted else 'repo-default'}")
         print("boundary,pass2_us,pass1_us,serialized_us,overlap_us,overlap")
@@ -392,6 +452,16 @@ def pipeline_report(mesh_shape, records=None) -> bool:
         else:
             ok = pipe <= serial
             print(f"# pipelined <= serialized (degenerate mesh): {ok}")
+        behind_one_pass = {p.index + 1 for p in plan.blocks[:-1]
+                          if p.family == "fusedmb"}
+        if behind_one_pass:
+            phantom = sorted(behind_one_pass
+                             & set(plan.pipelined_boundaries))
+            ok &= not phantom
+            print(f"# every boundary behind a one-pass producer serial: "
+                  f"{not phantom}"
+                  + (f" (phantom overlap into blocks {phantom})"
+                     if phantom else ""))
         return ok
     finally:
         if fitted is not None:
@@ -593,6 +663,12 @@ def main():
                          "stem rows) AND every EfficientNet-B0 MBConv "
                          "block (exit 1 if the fused pipeline loses any "
                          "layer under any requested residency)")
+    ap.add_argument("--family", default="b0", metavar="FAM[,FAM...]",
+                    help="with --fused: the end-to-end workload chain(s) "
+                         "to gate — b0 (EfficientNet-B0, default), v3l "
+                         "(MobileNet-V3-Large: per-block act/SE variants), "
+                         "v2s (EfficientNet-V2-S: Fused-MBConv head + "
+                         "MBConv tail), or a comma list")
     ap.add_argument("--mesh", default=None, metavar="DxM",
                     help="with --fused: price the SHARDED pipelines over a "
                          "(data, model) mesh of this shape — per-device "
@@ -645,6 +721,13 @@ def main():
                     help="with --measure: do NOT record stopwatch winners "
                          "in the schedule cache's measured tier")
     args = ap.parse_args()
+    families = [t.strip() for t in args.family.lower().split(",")]
+    for fam in families:
+        if fam not in FAMILY_CHOICES:
+            raise SystemExit(f"--family wants a comma list of "
+                             f"{FAMILY_CHOICES}, got {fam!r}")
+    if args.family != "b0" and not args.fused:
+        raise SystemExit("--family requires --fused")
     if args.mesh is not None and not args.fused:
         raise SystemExit("--mesh requires --fused")
     if args.residency != "auto" and not args.fused:
@@ -678,21 +761,30 @@ def main():
         collective = _parse_collective(args.collective)
         ok = True
         for res in _parse_residencies(args.residency):
-            ok &= fused_traffic_report(mesh_shape, res)
-            print()
-            if collective is None and mesh_shape[1] > 1:
-                ok &= mbconv_collective_sweep(mesh_shape, res)
-            else:
-                r_ok, _totals = mbconv_traffic_report(mesh_shape, res,
-                                                      collective)
-                ok &= r_ok
-            print()
+            if "b0" in families:
+                # the separable-family sweep rides with the default chain
+                # only (it is family-independent of --family's choices)
+                ok &= fused_traffic_report(mesh_shape, res)
+                print()
+            for fam in families:
+                chain = family_chain(fam)
+                if collective is None and mesh_shape[1] > 1:
+                    ok &= mbconv_collective_sweep(mesh_shape, res, fam,
+                                                  chain)
+                else:
+                    r_ok, _totals = mbconv_traffic_report(
+                        mesh_shape, res, collective, fam, chain)
+                    ok &= r_ok
+                print()
         if args.network:
-            ok &= network_report(mesh_shape)
-            print()
+            for fam in families:
+                ok &= network_report(mesh_shape, fam)
+                print()
         if args.pipeline:
-            ok &= pipeline_report(mesh_shape, records=measured_records)
-            print()
+            for fam in families:
+                ok &= pipeline_report(mesh_shape,
+                                      records=measured_records, family=fam)
+                print()
         for name, us, derived in mbconv_walltime_row():
             print(f"{name},{us:.1f},{derived}")
         sys.exit(0 if ok else 1)

@@ -57,7 +57,14 @@ class SchedulePin:
       requires the psum_scatter exit, "replicated" the ring); pinning
       both to conflicting values raises;
     * ``shard``: route through the ``shard_map`` wrappers when a mesh is
-      handed in (``shard_fused``).
+      handed in (``shard_fused``);
+    * ``act``: the block family's main activation ("silu" | "relu" |
+      "hard_swish") — a first-class family axis: EfficientNet blocks run
+      silu, MobileNet-V3 mixes relu and hard_swish per stage;
+    * ``se``: squeeze-excite presence ("on" | "off") — se=off blocks skip
+      the pass-1 pool, the pass-2 gate and their psums/VMEM entirely
+      (MobileNet-V3's no-SE blocks must not pay SE bytes; the Fused-MBConv
+      family is always se=off).
     """
 
     fused: Optional[bool] = None
@@ -66,6 +73,8 @@ class SchedulePin:
     collective: Optional[str] = None
     layout: Optional[str] = None
     shard: Optional[bool] = None
+    act: Optional[str] = None
+    se: Optional[str] = None
 
     def merged_over(self, other: "SchedulePin") -> "SchedulePin":
         """This pin's explicit fields, falling back to ``other``'s."""
@@ -92,7 +101,20 @@ class SchedulePin:
 # ConvKernelConfig fields that SchedulePin supersedes (the deprecation
 # shim in set_kernel_config warns once when they are set directly)
 _LEGACY_PIN_FIELDS = ("fused_separable", "fused_mbconv", "mbconv_mode",
-                      "residency", "collective", "shard_fused")
+                      "residency", "collective", "shard_fused",
+                      "act", "se")
+
+# The solved/priced values of the two family axes.  ``act`` names the
+# family's MAIN activation (expand/DW for MBConv, the dense conv for
+# Fused-MBConv); the SE-internal squeeze/gate acts are family facts the
+# model layer states, not pinnable axes.
+ACT_MODES = ("silu", "relu", "hard_swish")
+SE_MODES = ("on", "off")
+
+# block families the pin resolver (and the kernel stack) knows about:
+# the two-pass SE-aware MBConv, the single-pass separable, and the
+# single-pass Fused-MBConv (dense expand+DW collapse, always se=off)
+BLOCK_FAMILIES = ("mbconv", "separable", "fusedmb")
 
 
 def resolve_pin(cfg: "ConvKernelConfig", pin: Optional[SchedulePin] = None,
@@ -100,16 +122,28 @@ def resolve_pin(cfg: "ConvKernelConfig", pin: Optional[SchedulePin] = None,
     """The effective pin for one block call: explicit ``pin`` fields win
     over ``cfg.pin`` fields, which win over the legacy per-axis config
     fields (``family`` picks which fused toggle backs ``fused``)."""
-    assert family in ("mbconv", "separable"), family
+    assert family in BLOCK_FAMILIES, family
     base = cfg.pin if cfg.pin is not None else SchedulePin()
     if pin is not None:
         base = pin.merged_over(base)
     legacy = SchedulePin(
-        fused=(cfg.fused_mbconv if family == "mbconv"
-               else cfg.fused_separable),
+        fused=(cfg.fused_separable if family == "separable"
+               else cfg.fused_mbconv),
         mode=cfg.mbconv_mode, residency=cfg.residency,
-        collective=cfg.collective, shard=cfg.shard_fused)
-    return base.merged_over(legacy)
+        collective=cfg.collective, shard=cfg.shard_fused,
+        act=cfg.act, se=cfg.se)
+    resolved = base.merged_over(legacy)
+    if resolved.act is not None and resolved.act not in ACT_MODES:
+        raise ValueError(
+            f"act must be one of {ACT_MODES}, got {resolved.act!r}")
+    if resolved.se is not None and resolved.se not in SE_MODES:
+        raise ValueError(
+            f"se must be one of {SE_MODES}, got {resolved.se!r}")
+    if family == "fusedmb" and resolved.se == "on":
+        raise ValueError(
+            "the fusedmb family has no SE stage: se='on' cannot be pinned "
+            "on a Fused-MBConv block")
+    return resolved
 
 
 @dataclasses.dataclass(frozen=True)
@@ -143,6 +177,11 @@ class ConvKernelConfig:
     whenever the block wrapper is handed a mesh whose axes divide the
     grid; off = ignore the mesh and run the single-device kernels (the
     staged baselines always run single-device — GSPMD owns them).
+    ``act`` / ``se`` pin the family axes process-wide ("silu" | "relu" |
+    "hard_swish"; "on" | "off") — None leaves them to the block spec (the
+    model layer states them per block: EfficientNet-B0 is act=silu/se=on
+    throughout, MobileNet-V3 mixes per stage).  Like the other per-axis
+    fields they are superseded by ``pin=SchedulePin(act=..., se=...)``.
     ``interpret`` forces Pallas interpret mode (None = auto: interpret on
     CPU backends, compiled Mosaic on TPU).
     """
@@ -157,6 +196,8 @@ class ConvKernelConfig:
     tile_h: int = 8
     interpret: Optional[bool] = None
     pin: Optional[SchedulePin] = None
+    act: Optional[str] = None
+    se: Optional[str] = None
 
 
 _KERNEL_CONFIG = ConvKernelConfig()

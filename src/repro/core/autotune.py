@@ -65,6 +65,8 @@ from .perfmodel import (
     boundary_overlap_us,
     can_psum_scatter,
     can_shard_input,
+    fusedmb_shard,
+    fusedmb_staging_bytes,
     get_perf_coefficients,
     layout_transition_words,
     mbconv_pass_us,
@@ -74,6 +76,9 @@ from .perfmodel import (
     separable_shard,
     separable_staging_bytes,
     shard_factors,
+    sharded_fusedmb_pass_costs,
+    sharded_fusedmb_staged_traffic,
+    sharded_fusedmb_traffic,
     sharded_mbconv_pass_costs,
     sharded_mbconv_staged_traffic,
     sharded_mbconv_traffic,
@@ -88,6 +93,25 @@ from . import telemetry
 from .telemetry import measure
 
 MeshShape = Tuple[int, int]   # ("data", "model") axis sizes, (1, 1) = 1 core
+
+# Block activation vocabulary (mirrored by ``configs.base.ACT_MODES`` —
+# configs sits above models and cannot be imported from core).  The act
+# axis never changes a byte count, but it IS a schedule-cache key segment:
+# entries must record the block variant they were solved for, so a future
+# act-sensitive refinement (e.g. hard_swish's clip chain changing the
+# VMEM scratch) can split the entries without orphaning them.
+ACT_MODES: Tuple[str, ...] = ("silu", "relu", "hard_swish")
+DEFAULT_ACT = "silu"
+
+# Families a network CHAIN element may take (separable blocks are solved
+# per-layer via ``get_fused_schedule`` and never enter the chain DP)
+CHAIN_FAMILIES: Tuple[str, ...] = ("mbconv", "fusedmb")
+
+
+def validate_act(act: str) -> str:
+    if act not in ACT_MODES:
+        raise ValueError(f"act must be one of {ACT_MODES}, got {act!r}")
+    return act
 
 # Solver preference among byte-identical residencies: double-buffering hides
 # the strip DMA behind compute at 2x scratch, single-slot DMA is the
@@ -236,6 +260,30 @@ class MBConvSchedule(_ScheduleTraffic):
     overlap: str = DEFAULT_OVERLAP
 
 
+@dataclass(frozen=True)
+class FusedMBSchedule(_ScheduleTraffic):
+    """One selected single-pass schedule for ``convdk_fusedmb_fused``.
+
+    Fused-MBConv has no pass-2 mode axis (the whole block is one pass —
+    its pass-2 figures are exactly zero, see
+    ``perfmodel.fusedmb_pass_traffic``) and no layout axis (the dense
+    conv needs all of c_in, so the entry is always replicated).  It keeps
+    the residency, collective and overlap axes: the projection partial
+    still reduces over the c_mid shards, and the block's single pass can
+    still stream behind an upstream two-pass producer's pass 2 (the
+    converse never holds — there is no pass 2 here to hide anything
+    behind)."""
+
+    tile_h: int
+    ci_block: int
+    cm_block: int
+    co_block: int
+    sharded: ShardedTraffic      # fused pricing (the solver's objective)
+    staged: ShardedTraffic       # identically partitioned staged baseline
+    residency: str = DEFAULT_RESIDENCY   # input-staging mode
+    overlap: str = DEFAULT_OVERLAP       # entry overlap (see MBConvSchedule)
+
+
 def _round_up(x: int, m: int) -> int:
     return -(-x // m) * m
 
@@ -279,7 +327,7 @@ class ScheduleCache:
 
     @staticmethod
     def _migrate_key(key: str) -> str:
-        """Upgrade legacy cache keys in place, chaining the five schema
+        """Upgrade legacy cache keys in place, chaining the six schema
         migrations so measured sweeps keep outranking model picks instead
         of being silently orphaned:
 
@@ -305,7 +353,15 @@ class ScheduleCache:
           and a serial pick was feasibility-checked against the full
           VMEM budget where a pipelined solve halves it — so they ARE
           the ``ov=serial`` picks (like layout, the entry overlap is a
-          dataflow fact the network DP states: no ``auto``)."""
+          dataflow fact the network DP states: no ``auto``);
+        * pre-family MBConv entries (no ``act=``/``se=`` segments) were
+          all solved for the classic EfficientNet block — silu
+          activations, SE present (the only variant that existed) — so
+          they ARE the ``act=silu|se=on`` picks.  The ``se=off`` and
+          non-silu variants are NEW entry forms: an SE-carrying
+          schedule's pick must never be echoed for a block whose pass 1
+          vanishes (``fusedmb`` keys are born with every segment and
+          never migrate)."""
         parts = key.split("|")
         if len(parts) == 5 and parts[0] in ("sep", "mbconv") \
                 and not parts[3].startswith("mesh"):
@@ -329,6 +385,12 @@ class ScheduleCache:
                 and parts[6].startswith("layout=") \
                 and not parts[7].startswith("ov="):
             parts.insert(7, "ov=serial")
+        if len(parts) >= 10 and parts[0] == "mbconv" \
+                and parts[6].startswith("layout=") \
+                and parts[7].startswith("ov=") \
+                and not parts[8].startswith("act="):
+            parts.insert(8, "act=silu")
+            parts.insert(9, "se=on")
         return "|".join(parts)
 
     def _load_disk(self) -> Dict[str, dict]:
@@ -486,13 +548,29 @@ def _overlap_segment(overlap: str) -> str:
     return f"ov={validate_overlap(overlap)}"
 
 
+def _act_segment(act: str) -> str:
+    """Key segment for the block's activation variant.  No ``auto``: the
+    act is a model fact the caller states — legacy keys migrate into
+    ``act=silu`` (the only variant that existed)."""
+    return f"act={validate_act(act)}"
+
+
+def _se_segment(shape: MBConvShape) -> str:
+    """Key segment for the SE axis, derived from the shape: ``se_ratio``
+    never entered the legacy key, so an SE-less block would collide with
+    the SE form of the same dims — a genuinely different solve (its pass
+    1 can vanish entirely).  Legacy keys migrate into ``se=on``."""
+    return f"se={'on' if shape.has_se else 'off'}"
+
+
 def _mbconv_key(shape: MBConvShape, tpu: TPUConfig,
                 mesh_shape: MeshShape = (1, 1),
                 residency: Optional[str] = None,
                 mode: Optional[str] = None,
                 collective: Optional[str] = None,
                 in_layout: str = DEFAULT_LAYOUT,
-                overlap: str = DEFAULT_OVERLAP) -> str:
+                overlap: str = DEFAULT_OVERLAP,
+                act: str = DEFAULT_ACT) -> str:
     dp, mp = shard_factors(shape.b, shape.c_mid, mesh_shape)
     # a pinned pass-2 mode gets its OWN entries (appended segment, so the
     # unpinned key format — and its migration chain — is untouched): a
@@ -504,6 +582,7 @@ def _mbconv_key(shape: MBConvShape, tpu: TPUConfig,
             f"|dtb{shape.dtype_bytes}|mesh{dp}x{mp}"
             f"|{_res_segment(residency)}|{_coll_segment(collective)}"
             f"|{_layout_segment(in_layout)}|{_overlap_segment(overlap)}"
+            f"|{_act_segment(act)}|{_se_segment(shape)}"
             f"|{_tpu_key(tpu)}|{_backend()}{pin}")
 
 
@@ -968,7 +1047,7 @@ def get_mbconv_schedule(
     tpu: TPUConfig = TPUConfig(), mesh_shape: MeshShape = (1, 1),
     residency: Optional[str] = None, mode: Optional[str] = None,
     collective: Optional[str] = None, in_layout: str = DEFAULT_LAYOUT,
-    overlap: str = DEFAULT_OVERLAP,
+    overlap: str = DEFAULT_OVERLAP, act: str = DEFAULT_ACT,
 ) -> MBConvSchedule:
     """Cached per-layer-shape two-pass schedule lookup (trace-time safe).
 
@@ -988,12 +1067,16 @@ def get_mbconv_schedule(
     overlap the network DP states — is a key axis for the same reason
     ``in_layout`` is: a pipelined entry's picks were feasibility-checked
     against the halved VMEM budget and must never be echoed for a serial
-    entry (or vice versa)."""
+    entry (or vice versa).  ``act`` and the SE axis (derived from
+    ``se_ratio``) are key segments too: an SE-less block's pass 1 can
+    vanish entirely, so its picks live apart from the classic form's —
+    legacy entries migrate into ``act=silu|se=on``, the only variant
+    that existed, with no cold re-solve."""
     shape = MBConvShape(b=b, h=h, w=w, c_in=c_in, c_mid=c_mid, c_out=c_out,
                         k=k, s=s, se_ratio=se_ratio, dtype_bytes=dtype_bytes)
     cache = get_schedule_cache()
     key = _mbconv_key(shape, tpu, mesh_shape, residency, mode, collective,
-                      in_layout, overlap)
+                      in_layout, overlap, act)
     hit = cache.get(key)
     tile_h = _entry_tile_h(hit, shape.out_h) if hit is not None else None
     hit_mode = hit.get("mode") if isinstance(hit, dict) else None
@@ -1019,6 +1102,201 @@ def get_mbconv_schedule(
                     "collective": sched.collective,
                     "in_layout": sched.in_layout,
                     "overlap": sched.overlap, "source": "model",
+                    "recorded_at": time.time()})
+    return sched
+
+
+# ---------------------------------------------------------------------------
+# Fused-MBConv (single-pass) schedules
+# ---------------------------------------------------------------------------
+
+def _fusedmb_shape(b, h, w, c_in, c_mid, c_out, k, s,
+                   dtype_bytes: int = 4) -> MBConvShape:
+    """Fused-MBConv blocks reuse the MBConvShape vocabulary with
+    ``se_ratio=0`` pinned (the family never carries SE)."""
+    return MBConvShape(b=b, h=h, w=w, c_in=c_in, c_mid=c_mid, c_out=c_out,
+                       k=k, s=s, se_ratio=0.0, dtype_bytes=dtype_bytes)
+
+
+def _fusedmb_key(shape: MBConvShape, tpu: TPUConfig,
+                 mesh_shape: MeshShape = (1, 1),
+                 residency: Optional[str] = None,
+                 collective: Optional[str] = None,
+                 overlap: str = DEFAULT_OVERLAP,
+                 act: str = DEFAULT_ACT) -> str:
+    """Schedule-cache key for the Fused-MBConv family.  Born with every
+    segment (``act=`` included) — there are no legacy fusedmb entries, so
+    the key never migrates.  No ``layout=`` or ``se=`` segments: the
+    entry is always replicated and the family never carries SE (both are
+    family invariants, not axes)."""
+    dp, mp = shard_factors(shape.b, shape.c_mid, mesh_shape)
+    return (f"fusedmb|b{shape.b}-h{shape.h}-w{shape.w}-ci{shape.c_in}"
+            f"-cm{shape.c_mid}-co{shape.c_out}-k{shape.k}-s{shape.s}"
+            f"|dtb{shape.dtype_bytes}|mesh{dp}x{mp}"
+            f"|{_res_segment(residency)}|{_coll_segment(collective)}"
+            f"|{_overlap_segment(overlap)}|{_act_segment(act)}"
+            f"|{_tpu_key(tpu)}|{_backend()}")
+
+
+def fusedmb_vmem_footprint_bytes(shape: MBConvShape, tile_h: int,
+                                 tpu: TPUConfig,
+                                 residency: str = DEFAULT_RESIDENCY) -> int:
+    """Modeled VMEM residency of one single-pass Fused-MBConv grid cell:
+    the input staging, the f32 dense-conv accumulator and f32 projection
+    accumulator (both live the whole cell — the conv output feeds the
+    projection without leaving VMEM) and both weight blocks."""
+    ci = pick_channel_block(shape.c_in, tpu.c_block)
+    cm = pick_channel_block(shape.c_mid, tpu.c_block)
+    co = _blocks(shape.c_out, tpu.c_block)
+    tile_h = max(1, min(tile_h, shape.out_h))
+    staging = fusedmb_staging_bytes(shape, tile_h, residency, tpu.c_block)
+    conv_acc = tile_h * shape.out_w * cm * 4
+    proj_acc = tile_h * shape.out_w * co * 4
+    weights = (shape.k * shape.k * ci * cm + cm * co) * shape.dtype_bytes
+    return staging + conv_acc + proj_acc + weights
+
+
+def candidate_fusedmb_schedules(
+    shape: MBConvShape, tpu: TPUConfig = TPUConfig(),
+    mesh_shape: MeshShape = (1, 1), residency: Optional[str] = None,
+    collective: Optional[str] = None, overlap: str = DEFAULT_OVERLAP,
+) -> Tuple[FusedMBSchedule, ...]:
+    """All VMEM-feasible (tile_h, residency, collective) single-pass
+    schedules, model-priced.  A ``pipelined`` entry checks the WHOLE cell
+    footprint against half the budget — the single pass IS the block's
+    pass 1, so there is no cheaper per-pass split to co-reside."""
+    validate_overlap(overlap)
+    local, eff = fusedmb_shard(shape, mesh_shape)
+    colls = _collective_set(shape, eff, collective)
+    ci = pick_channel_block(local.c_in, tpu.c_block)
+    cm = pick_channel_block(local.c_mid, tpu.c_block)
+    co = _blocks(local.c_out, tpu.c_block)
+    budget = tpu.vmem_bytes if overlap == DEFAULT_OVERLAP \
+        else tpu.vmem_bytes // _OVERLAP_VMEM_DIV
+    out: list[FusedMBSchedule] = []
+    seen = set()
+    ths = [max(1, min(th, shape.out_h)) for th in tpu.tile_h_candidates]
+    feasible = [(th, res) for th in ths for res in _residency_set(residency)
+                if fusedmb_vmem_footprint_bytes(local, th, tpu, res)
+                <= budget]
+    if not feasible:
+        feasible = [(1, residency or "strip_dma")]
+    staged_cache: dict = {}
+    for th, res in feasible:
+        for coll in colls:
+            if (th, res, coll) in seen:
+                continue
+            seen.add((th, res, coll))
+            if (th, coll) not in staged_cache:
+                staged_cache[th, coll] = sharded_fusedmb_staged_traffic(
+                    shape, th, eff, tpu.c_block, coll)
+            out.append(FusedMBSchedule(
+                tile_h=th, ci_block=ci, cm_block=cm, co_block=co,
+                sharded=sharded_fusedmb_traffic(shape, th, eff, tpu.c_block,
+                                                res, coll),
+                staged=staged_cache[th, coll],
+                residency=res, overlap=overlap,
+            ))
+    return tuple(out)
+
+
+def select_fusedmb_schedule(
+    shape: MBConvShape, tpu: TPUConfig = TPUConfig(),
+    mesh_shape: MeshShape = (1, 1), residency: Optional[str] = None,
+    collective: Optional[str] = None, overlap: str = DEFAULT_OVERLAP,
+) -> FusedMBSchedule:
+    """Pick (tile_h, residency, collective) minimizing modeled total
+    traffic (ties -> larger tile_h, then the residency rank, then the
+    ring default) — the MBConv objective minus the mode axis."""
+    cands = candidate_fusedmb_schedules(shape, tpu, mesh_shape, residency,
+                                        collective, overlap)
+    return min(cands, key=lambda c: (c.total_bytes, -c.tile_h,
+                                     _RESIDENCY_RANK[c.residency],
+                                     _COLLECTIVE_RANK[c.collective]))
+
+
+def _fusedmb_schedule_at(shape: MBConvShape, tile_h: int, tpu: TPUConfig,
+                         mesh_shape: MeshShape = (1, 1),
+                         residency: str = DEFAULT_RESIDENCY,
+                         collective: str = DEFAULT_COLLECTIVE,
+                         overlap: str = DEFAULT_OVERLAP) -> FusedMBSchedule:
+    local, eff = fusedmb_shard(shape, mesh_shape)
+    if eff[1] <= 1:
+        collective = DEFAULT_COLLECTIVE   # degenerate axis: nothing crosses
+    return FusedMBSchedule(
+        tile_h=tile_h,
+        ci_block=pick_channel_block(local.c_in, tpu.c_block),
+        cm_block=pick_channel_block(local.c_mid, tpu.c_block),
+        co_block=_blocks(local.c_out, tpu.c_block),
+        sharded=sharded_fusedmb_traffic(shape, tile_h, eff, tpu.c_block,
+                                        residency, collective),
+        staged=sharded_fusedmb_staged_traffic(shape, tile_h, eff,
+                                              tpu.c_block, collective),
+        residency=residency, overlap=overlap,
+    )
+
+
+def _solve_fusedmb_residency_at(shape: MBConvShape, tile_h: int,
+                                tpu: TPUConfig,
+                                mesh_shape: MeshShape) -> str:
+    """Best residency at a FIXED tile_h (cache entries whose residency
+    field is missing or stale) — see ``_solve_residency_at``."""
+    local, eff = fusedmb_shard(shape, mesh_shape)
+    modes = [res for res in RESIDENCY_MODES
+             if fusedmb_vmem_footprint_bytes(local, tile_h, tpu, res)
+             <= tpu.vmem_bytes] or ["strip_dma"]
+    return min(modes, key=lambda res: (
+        sharded_fusedmb_traffic(shape, tile_h, eff, tpu.c_block,
+                                res).device.total_bytes,
+        _RESIDENCY_RANK[res]))
+
+
+def _solve_fusedmb_collective_at(shape: MBConvShape, tile_h: int,
+                                 tpu: TPUConfig, mesh_shape: MeshShape,
+                                 residency: str) -> str:
+    """Best collective at a FIXED (tile_h, residency), ties to the ring
+    default — see ``_solve_mbconv_collective_at``."""
+    _local, eff = fusedmb_shard(shape, mesh_shape)
+    return min(_collective_set(shape, eff, None), key=lambda coll: (
+        sharded_fusedmb_traffic(shape, tile_h, eff, tpu.c_block,
+                                residency, coll).total_bytes,
+        _COLLECTIVE_RANK[coll]))
+
+
+def get_fusedmb_schedule(
+    b: int, h: int, w: int, c_in: int, c_mid: int, c_out: int, k: int,
+    s: int, dtype_bytes: int = 4, tpu: TPUConfig = TPUConfig(),
+    mesh_shape: MeshShape = (1, 1), residency: Optional[str] = None,
+    collective: Optional[str] = None, overlap: str = DEFAULT_OVERLAP,
+    act: str = DEFAULT_ACT,
+) -> FusedMBSchedule:
+    """Cached per-layer-shape single-pass schedule lookup (trace-time
+    safe) for the Fused-MBConv family — the third pipeline next to
+    ``get_fused_schedule`` (separable) and ``get_mbconv_schedule``.  Same
+    cache discipline: mesh, pins, overlap and act are key axes; the
+    family has no mode (single pass), no se (never carried) and no
+    layout (always replicated) axis."""
+    shape = _fusedmb_shape(b, h, w, c_in, c_mid, c_out, k, s, dtype_bytes)
+    cache = get_schedule_cache()
+    key = _fusedmb_key(shape, tpu, mesh_shape, residency, collective,
+                       overlap, act)
+    hit = cache.get(key)
+    tile_h = _entry_tile_h(hit, shape.out_h) if hit is not None else None
+    if tile_h is not None:
+        res = residency or _entry_residency(hit) \
+            or _solve_fusedmb_residency_at(shape, tile_h, tpu, mesh_shape)
+        coll = collective or _entry_collective(hit) \
+            or _solve_fusedmb_collective_at(shape, tile_h, tpu, mesh_shape,
+                                            res)
+        return _fusedmb_schedule_at(shape, tile_h, tpu, mesh_shape, res,
+                                    coll, overlap)
+    sched = select_fusedmb_schedule(shape, tpu, mesh_shape, residency,
+                                    collective, overlap)
+    telemetry.counter("autotune.solve.fusedmb")
+    telemetry.counter(f"autotune.pick.residency.{sched.residency}")
+    telemetry.counter(f"autotune.pick.collective.{sched.collective}")
+    cache.put(key, {"tile_h": sched.tile_h, "residency": sched.residency,
+                    "collective": sched.collective, "source": "model",
                     "recorded_at": time.time()})
     return sched
 
@@ -1052,6 +1330,38 @@ def get_mbconv_schedule(
 
 
 @dataclass(frozen=True)
+class BlockRow:
+    """One family-generic network-chain element: the block FAMILY is data
+    on the row, not code in the solver.  Legacy 7-tuples (h, w, c_in,
+    c_mid, c_out, k, s) remain accepted everywhere rows are consumed and
+    mean ``family="mbconv"`` at the chain-wide ``se_ratio`` — BlockRow is
+    how a chain mixes families (EfficientNet-V2's fused stages + MBConv
+    tail) and per-block act/SE variants (MobileNet-V3) in one solve."""
+
+    h: int
+    w: int
+    c_in: int
+    c_mid: int
+    c_out: int
+    k: int
+    s: int
+    family: str = "mbconv"       # "mbconv" | "fusedmb"
+    act: str = DEFAULT_ACT
+    se_ratio: float = 0.25       # <= 0 means no SE; ignored for fusedmb
+
+    def __post_init__(self):
+        if self.family not in CHAIN_FAMILIES:
+            raise ValueError(
+                f"family must be one of {CHAIN_FAMILIES}, "
+                f"got {self.family!r}")
+        validate_act(self.act)
+        if self.family == "fusedmb" and self.se_ratio > 0:
+            # the family never carries SE — normalize rather than trip
+            # every table builder over the default
+            object.__setattr__(self, "se_ratio", 0.0)
+
+
+@dataclass(frozen=True)
 class BlockPlan:
     """One chain element's solved assignment inside a ``NetworkPlan``."""
 
@@ -1059,7 +1369,9 @@ class BlockPlan:
     shape: MBConvShape
     in_layout: str               # arrival layout the entry consumes
     out_layout: str              # layout the output leaves in
-    schedule: MBConvSchedule     # per-layer solve under the pinned axes
+    # per-layer solve under the pinned axes: MBConvSchedule for the
+    # two-pass family, FusedMBSchedule for the single-pass one
+    schedule: "MBConvSchedule | FusedMBSchedule"
     boundary_words: int          # all-gather repay paid AT this entry
     # overlap of the boundary ENTERING this block (upstream pass 2 vs
     # this block's pass 1); "pipelined" only where the annotation pass
@@ -1068,6 +1380,8 @@ class BlockPlan:
     # the per-pass cost split the latency accessors price (filled by the
     # solvers; None for hand-built plans, re-derived lazily)
     pass_costs: Optional[MBConvPassCosts] = None
+    family: str = "mbconv"       # which pipeline runs this element
+    act: str = DEFAULT_ACT       # activation variant (model fact)
 
     @property
     def boundary_bytes(self) -> int:
@@ -1154,6 +1468,10 @@ class NetworkPlan:
         if p.pass_costs is not None:
             return p.pass_costs
         sch = p.schedule
+        if p.family == "fusedmb":
+            return sharded_fusedmb_pass_costs(
+                p.shape, sch.tile_h, self.mesh_shape, 128,
+                sch.residency, sch.collective)
         return sharded_mbconv_pass_costs(
             p.shape, sch.tile_h, sch.mode, self.mesh_shape, 128,
             sch.residency, sch.collective, sch.in_layout)
@@ -1233,14 +1551,32 @@ def _stem_words(b: int, h: int, w: int, c: int, mesh_shape: MeshShape,
     return full * max(1, mesh_shape[1])
 
 
-def _chain_shapes(rows: Sequence[Tuple[int, ...]], b: int,
+def _chain_shapes(rows: Sequence, b: int,
                   se_ratio: float, dtype_bytes: int
-                  ) -> Tuple[MBConvShape, ...]:
-    """Rows (h, w, c_in, c_mid, c_out, k, s) -> per-block MBConvShapes."""
-    return tuple(
-        MBConvShape(b=b, h=h, w=w, c_in=ci, c_mid=cm, c_out=co, k=k, s=s,
-                    se_ratio=se_ratio, dtype_bytes=dtype_bytes)
-        for h, w, ci, cm, co, k, s in rows)
+                  ) -> Tuple[Tuple[MBConvShape, str, str], ...]:
+    """Normalize chain rows to (shape, family, act) triples.
+
+    Rows may be legacy (h, w, c_in, c_mid, c_out, k, s) tuples — MBConv
+    at the chain-wide ``se_ratio``, silu — or family-generic
+    ``BlockRow``s carrying their own family/act/se_ratio.  Both forms mix
+    freely in one chain."""
+    out = []
+    for row in rows:
+        if isinstance(row, BlockRow):
+            out.append((
+                MBConvShape(b=b, h=row.h, w=row.w, c_in=row.c_in,
+                            c_mid=row.c_mid, c_out=row.c_out, k=row.k,
+                            s=row.s, se_ratio=row.se_ratio,
+                            dtype_bytes=dtype_bytes),
+                row.family, row.act))
+        else:
+            h, w, ci, cm, co, k, s = row
+            out.append((
+                MBConvShape(b=b, h=h, w=w, c_in=ci, c_mid=cm, c_out=co,
+                            k=k, s=s, se_ratio=se_ratio,
+                            dtype_bytes=dtype_bytes),
+                "mbconv", DEFAULT_ACT))
+    return tuple(out)
 
 
 def network_rows_from_table(
@@ -1273,9 +1609,13 @@ def _allowed_out_layouts(shape: MBConvShape,
     return (DEFAULT_LAYOUT,)
 
 
-def _block_pass_costs(shape: MBConvShape, sch: MBConvSchedule,
-                      mesh_shape: MeshShape,
-                      tpu: TPUConfig) -> MBConvPassCosts:
+def _block_pass_costs(shape: MBConvShape, sch, mesh_shape: MeshShape,
+                      tpu: TPUConfig,
+                      family: str = "mbconv") -> MBConvPassCosts:
+    if family == "fusedmb":
+        return sharded_fusedmb_pass_costs(
+            shape, sch.tile_h, mesh_shape, tpu.c_block,
+            sch.residency, sch.collective)
     return sharded_mbconv_pass_costs(
         shape, sch.tile_h, sch.mode, mesh_shape, tpu.c_block,
         sch.residency, sch.collective, sch.in_layout)
@@ -1313,6 +1653,13 @@ def _annotate_overlap(plan: NetworkPlan, tpu: TPUConfig,
     half = tpu.vmem_bytes // _OVERLAP_VMEM_DIV
     for i in range(1, len(blocks)):
         prev, cur = blocks[i - 1], blocks[i]
+        if prev.family == "fusedmb":
+            # single-pass producer: its "pass 2" is exactly zero — there
+            # is no compute for the consumer's pass-1 DMA to hide behind,
+            # so the boundary stays honestly serial (the calibrated
+            # min(p2, p1) == 0 guard below would catch this too; skipping
+            # here keeps the mode/vmem probing two-pass-only)
+            continue
         if cur.boundary_words != 0 or cur.schedule.transition_bytes != 0:
             continue
         psch = prev.schedule
@@ -1326,16 +1673,24 @@ def _annotate_overlap(plan: NetworkPlan, tpu: TPUConfig,
                 local_prev, psch.tile_h, tpu, psch.residency, psch.mode)
         if p2_vmem > half:
             continue
-        resolved = select_mbconv_schedule(
-            cur.shape, tpu, plan.mesh_shape,
-            collective=cur.schedule.collective,
-            in_layout=cur.in_layout, overlap="pipelined")
+        if cur.family == "fusedmb":
+            # a single-pass CONSUMER can still stream behind a two-pass
+            # producer's pass 2 — its whole cell is the pass-1 footprint
+            # the halved budget must fit
+            resolved = select_fusedmb_schedule(
+                cur.shape, tpu, plan.mesh_shape,
+                collective=cur.schedule.collective, overlap="pipelined")
+        else:
+            resolved = select_mbconv_schedule(
+                cur.shape, tpu, plan.mesh_shape,
+                collective=cur.schedule.collective,
+                in_layout=cur.in_layout, overlap="pipelined")
         if (resolved.total_bytes != cur.schedule.total_bytes
                 or resolved.out_layout != cur.out_layout):
             continue
         prev_costs = plan._costs(prev)
         cur_costs = _block_pass_costs(cur.shape, resolved,
-                                      plan.mesh_shape, tpu)
+                                      plan.mesh_shape, tpu, cur.family)
         p2_us = mbconv_pass_us(coeffs, prev_costs.pass2,
                                prev_costs.pass2_collective_words)
         p1_us = mbconv_pass_us(coeffs, cur_costs.pass1,
@@ -1357,24 +1712,31 @@ def solve_network_schedule(
     """DP over the block chain picking per-block (residency, collective,
     in-layout, out-layout) jointly to minimize total modeled bytes.
 
-    ``rows`` are (h, w, c_in, c_mid, c_out, k, s) per block (see
-    ``network_rows_from_table``); the stem boundary is seeded from the
-    first block's input.  States are boundary layouts; each (state,
-    in-layout, out-layout) candidate prices as the boundary transition
-    plus the per-layer solve under the pinned (collective, in_layout) —
-    tile_h, mode and residency re-solved by ``select_mbconv_schedule``
-    inside the pin.  Byte ties prefer replicated boundaries (candidates
-    are enumerated replicated-first and only a STRICT improvement
-    replaces a state), so the plan shards exactly the boundaries that
-    pay.
+    ``rows`` are legacy (h, w, c_in, c_mid, c_out, k, s) tuples (see
+    ``network_rows_from_table``) or family-generic ``BlockRow``s — the
+    two forms mix freely, so an EfficientNet-V2 chain states its fused
+    stages next to its MBConv tail and a MobileNet-V3 chain states
+    per-block act/SE; the stem boundary is seeded from the first block's
+    input.  States are boundary layouts; each (state, in-layout,
+    out-layout) candidate prices as the boundary transition plus the
+    per-layer solve under the pinned (collective, in_layout) — tile_h,
+    mode and residency re-solved by the family's selector inside the pin
+    (``select_mbconv_schedule`` or ``select_fusedmb_schedule``; the
+    fusedmb entry is replicated-only, so a sharded arrival repays at the
+    boundary and the DP sees that price).  Byte ties prefer replicated
+    boundaries (candidates are enumerated replicated-first and only a
+    STRICT improvement replaces a state), so the plan shards exactly the
+    boundaries that pay.
 
     After the byte DP, ``_annotate_overlap`` marks the boundaries that
     can pipeline (upstream pass 2 overlapping the consumer's pass 1) —
-    bytes first, then hide what latency the calibration says can hide."""
-    shapes = _chain_shapes(rows, b, se_ratio, dtype_bytes)
-    if not shapes:
+    bytes first, then hide what latency the calibration says can hide;
+    a single-pass producer's boundary never pipelines (zero pass 2)."""
+    chain = _chain_shapes(rows, b, se_ratio, dtype_bytes)
+    if not chain:
         raise ValueError("network solve needs at least one block row")
-    h0, w0, c0 = shapes[0].h, shapes[0].w, shapes[0].c_in
+    first = chain[0][0]
+    h0, w0, c0 = first.h, first.w, first.c_in
     _dp0, mp0 = shard_factors(b, c0, mesh_shape)
     stem_opts = [DEFAULT_LAYOUT] + (["model_sharded"] if mp0 > 1 else [])
     # state: boundary layout -> (cost bytes, stem layout, block plans)
@@ -1385,26 +1747,34 @@ def solve_network_schedule(
         if cur is None or cost < cur[0]:
             states[lay] = (cost, lay, ())
     prev_dims = (h0, w0, c0)
-    for i, shape in enumerate(shapes):
+    for i, (shape, family, act) in enumerate(chain):
+        in_lays = ((DEFAULT_LAYOUT,) if family == "fusedmb"
+                   else _allowed_in_layouts(shape, mesh_shape))
         new_states: Dict[str, tuple] = {}
         for prev_lay, (cost, stem_lay, plans) in states.items():
-            for in_lay in _allowed_in_layouts(shape, mesh_shape):
+            for in_lay in in_lays:
                 bwords = layout_transition_words(
                     b, prev_dims[0], prev_dims[1], prev_dims[2],
                     mesh_shape, prev_lay, in_lay)
                 for out_lay in _allowed_out_layouts(shape, mesh_shape):
                     coll = ("psum_scatter" if out_lay == "model_sharded"
                             else DEFAULT_COLLECTIVE)
-                    sch = select_mbconv_schedule(
-                        shape, tpu, mesh_shape, collective=coll,
-                        in_layout=in_lay)
+                    if family == "fusedmb":
+                        sch = select_fusedmb_schedule(
+                            shape, tpu, mesh_shape, collective=coll)
+                    else:
+                        sch = select_mbconv_schedule(
+                            shape, tpu, mesh_shape, collective=coll,
+                            in_layout=in_lay)
                     total = (cost + bwords * dtype_bytes + sch.total_bytes)
                     plan = BlockPlan(
                         index=i, shape=shape, in_layout=sch.in_layout,
                         out_layout=sch.out_layout, schedule=sch,
                         boundary_words=bwords,
                         pass_costs=_block_pass_costs(shape, sch,
-                                                     mesh_shape, tpu))
+                                                     mesh_shape, tpu,
+                                                     family),
+                        family=family, act=act)
                     cur = new_states.get(sch.out_layout)
                     if cur is None or total < cur[0]:
                         new_states[sch.out_layout] = (
@@ -1441,14 +1811,18 @@ def greedy_network_schedule(
     chosen per layer, so every on-mesh block flips to psum_scatter), the
     stem replicated, and every sharded exit silently repaying its
     all-gather at the next (replicated) entry."""
-    shapes = _chain_shapes(rows, b, se_ratio, dtype_bytes)
-    if not shapes:
+    chain = _chain_shapes(rows, b, se_ratio, dtype_bytes)
+    if not chain:
         raise ValueError("network solve needs at least one block row")
-    h0, w0, c0 = shapes[0].h, shapes[0].w, shapes[0].c_in
+    first = chain[0][0]
+    h0, w0, c0 = first.h, first.w, first.c_in
     plans = []
     prev_lay, prev_dims = DEFAULT_LAYOUT, (h0, w0, c0)
-    for i, shape in enumerate(shapes):
-        sch = select_mbconv_schedule(shape, tpu, mesh_shape)
+    for i, (shape, family, act) in enumerate(chain):
+        if family == "fusedmb":
+            sch = select_fusedmb_schedule(shape, tpu, mesh_shape)
+        else:
+            sch = select_mbconv_schedule(shape, tpu, mesh_shape)
         bwords = layout_transition_words(
             b, prev_dims[0], prev_dims[1], prev_dims[2], mesh_shape,
             prev_lay, DEFAULT_LAYOUT)
@@ -1456,7 +1830,9 @@ def greedy_network_schedule(
             index=i, shape=shape, in_layout=DEFAULT_LAYOUT,
             out_layout=sch.out_layout, schedule=sch,
             boundary_words=bwords,
-            pass_costs=_block_pass_costs(shape, sch, mesh_shape, tpu)))
+            pass_costs=_block_pass_costs(shape, sch, mesh_shape, tpu,
+                                         family),
+            family=family, act=act))
         prev_lay = sch.out_layout
         prev_dims = (shape.out_h, shape.out_w, shape.c_out)
     head_words = layout_transition_words(
@@ -1490,9 +1866,10 @@ def get_network_plan(
     being the steady state (one solve per resolution bucket, then every
     batch of that bucket replays it)."""
     misses_before = _network_plan_cached.cache_info().misses
-    plan = _network_plan_cached(tuple(tuple(r) for r in rows), b,
-                                tuple(mesh_shape), dtype_bytes, se_ratio,
-                                tpu)
+    frozen_rows = tuple(r if isinstance(r, BlockRow) else tuple(r)
+                        for r in rows)
+    plan = _network_plan_cached(frozen_rows, b, tuple(mesh_shape),
+                                dtype_bytes, se_ratio, tpu)
     solved = _network_plan_cached.cache_info().misses > misses_before
     telemetry.counter("autotune.network_plan.solve" if solved
                       else "autotune.network_plan.reuse")

@@ -644,9 +644,19 @@ class MBConvShape:
         return (self.out_h - 1) * self.s + self.k
 
     @property
+    def has_se(self) -> bool:
+        """``se_ratio <= 0`` means NO squeeze-excite at all (the V3 blocks
+        that skip it, and every Fused-MBConv block): no pool, no MLP, no
+        gate — the kernels skip those stages outright and the model must
+        price zero words for them."""
+        return self.se_ratio > 0
+
+    @property
     def c_se(self) -> int:
         """SE bottleneck width — EfficientNet sizes it off the BLOCK INPUT
-        channels, not the expanded width."""
+        channels, not the expanded width.  Zero when the block has no SE."""
+        if not self.has_se:
+            return 0
         return max(1, int(self.c_in * self.se_ratio))
 
     @property
@@ -655,7 +665,9 @@ class MBConvShape:
 
     @property
     def se_words(self) -> int:
-        """SE MLP parameter words (two FCs + biases)."""
+        """SE MLP parameter words (two FCs + biases); zero without SE."""
+        if not self.has_se:
+            return 0
         return 2 * self.c_mid * self.c_se + self.c_se + self.c_mid
 
 
@@ -697,6 +709,12 @@ def mbconv_pass_traffic(
       recompute re-read of strips + expand/DW weights), the SE scale +
       projection-weight reads, and the block's only activation write.
 
+    A no-SE block (``shape.has_se == False``) has no pool barrier: the
+    kernels drop every pool/scale/MLP word, and under ``recompute`` pass
+    1 is skipped ENTIRELY (it would produce nothing), so its pass-1
+    figures here are exactly zero — the single remaining launch does all
+    the work and is priced on pass 2.
+
     The split is what cross-block pipelining prices: pass 2 of block i
     and pass 1 of block i+1 touch disjoint buffers (pass 2 reads DW_i /
     scale_i and writes act_{i+1}; pass 1 of i+1 reads act_{i+1} strips as
@@ -713,20 +731,26 @@ def mbconv_pass_traffic(
     x_full = shape.b * _covered_rows(shape, tile_h) * shape.padded_w \
         * shape.c_in
     resident = residency == "resident"
-    scale = pool                                   # SE gate, (B, C_mid) words
-    # pass 1: strips per c_mid block + per-strip weight refetches + pool
+    se = shape.has_se
+    scale = pool if se else 0                      # SE gate, (B, C_mid) words
+    # pass 1: strips per c_mid block + per-strip weight refetches + pool.
+    # se=off + recompute: the kernel skips pass 1 outright — zero words.
     issues1 = 0
-    if resident:
-        reads1 = x_full * (n_cm * n_th if n_ci > 1 else 1)
-    else:
-        reads1 = strips * n_cm
-        issues1 += shape.b * n_cm * n_th * n_ci
-    reads1 += (w_exp + w_dw) * n_th
-    writes1 = pool
-    # SE MLP between passes (host-side; tiny but accounted with pass 1 —
-    # it consumes the pass-1 pool and must finish before pass 2 gates)
-    reads1 += pool + shape.se_words
-    writes1 += scale
+    reads1 = 0
+    writes1 = 0
+    if se or mode == "retain":
+        if resident:
+            reads1 = x_full * (n_cm * n_th if n_ci > 1 else 1)
+        else:
+            reads1 = strips * n_cm
+            issues1 += shape.b * n_cm * n_th * n_ci
+        reads1 += (w_exp + w_dw) * n_th
+    if se:
+        writes1 += pool
+        # SE MLP between passes (host-side; tiny but accounted with pass 1
+        # — it consumes the pass-1 pool and must finish before pass 2 gates)
+        reads1 += pool + shape.se_words
+        writes1 += scale
     # pass 2
     issues2 = 0
     if mode == "retain":
@@ -824,12 +848,14 @@ def mbconv_staged_traffic(
     1. expand PW: read x + w_exp, write the expanded map,
     2. stage_row_strips over the expanded map (halo rows duplicated in HBM),
     3. DW kernel: read strips + taps, write the DW output,
-    4. SE: read the DW output for the pool, run the MLP, then re-read AND
-       re-write the DW output applying the gate,
-    5. projection PW: re-read the scaled DW output + w_proj, write out.
+    4. SE (when the block has one): read the DW output for the pool, run
+       the MLP, then re-read AND re-write the DW output applying the gate,
+    5. projection PW: re-read the (scaled) DW output + w_proj, write out.
 
     Exactly the weight-stationary-baseline behaviour the paper criticizes:
     the squeeze forces the whole DW tensor through HBM four more times.
+    A no-SE block skips stage 4 entirely — the staged baseline saves its
+    gate round-trips too, so the fused-vs-staged margin stays honest.
     """
     (n_th, _n_cm, _n_co, _strips, e_rows, out, w_exp, w_dw, w_proj,
      pool) = _mbconv_common(shape, tile_h, c_block)
@@ -843,18 +869,138 @@ def mbconv_staged_traffic(
     reads = (x_words + w_exp                      # expand
              + xe_pad                             # staging read
              + strips_e + w_dw                    # DW kernel
-             + e_rows + shape.se_words            # SE pool + MLP params
-             + e_rows + pool                      # gate apply read
              + e_rows + w_proj)                   # projection read
     writes = ((xe if shape.has_expand else 0)     # expanded map
               + strips_e                          # staged strips
               + e_rows                            # DW output
-              + pool                              # gate
-              + e_rows                            # scaled DW output
               + out)
+    if shape.has_se:
+        reads += (e_rows + shape.se_words         # SE pool + MLP params
+                  + e_rows + pool)                # gate apply read
+        writes += (pool                           # gate
+                   + e_rows)                      # scaled DW output
     if not shape.has_expand:
         reads -= x_words                          # no expand stage: DW stages
     return HBMTraffic(reads, writes, shape.dtype_bytes)
+
+
+# ---------------------------------------------------------------------------
+# Fused-MBConv (EfficientNet-V2) single-pass traffic model
+#
+# Fused-MBConv collapses the expand-PW + DW pair into ONE dense k x k
+# convolution (C_in -> C_mid) and never carries SE, so nothing forces a
+# pool barrier: the whole block — dense conv, activation, 1x1 projection —
+# runs as a SINGLE pass in one VMEM residency.  The family reuses the
+# MBConvShape vocabulary (c_mid is the dense conv's output width) with
+# ``se_ratio == 0`` REQUIRED; its weights differ though: one dense
+# k*k*c_in*c_mid tensor instead of expand + DW taps.
+#
+# Pass-split convention: the family is priced through the same
+# ``(pass1, pass2)`` interface as MBConv so the network solver and the
+# pipelining model stay family-generic — pass 1 carries the ENTIRE block
+# and pass 2 is EXACTLY zero (property-tested).  A zero pass 2 is what
+# keeps ``boundary_overlap_us`` honest at a single-pass producer: there
+# is no pass-2 compute for the next block's pass-1 DMA to hide behind, so
+# the boundary prices serial automatically (min(p2, p1) == 0).
+# ---------------------------------------------------------------------------
+
+
+def _require_no_se(shape: MBConvShape) -> None:
+    if shape.has_se:
+        raise ValueError(
+            f"Fused-MBConv never carries SE; got se_ratio="
+            f"{shape.se_ratio!r} — build the shape with se_ratio=0")
+
+
+def fusedmb_pass_traffic(
+    shape: MBConvShape, tile_h: int, c_block: int = 128,
+    residency: str = DEFAULT_RESIDENCY,
+) -> Tuple[HBMTraffic, HBMTraffic]:
+    """Per-pass HBM traffic of the single-pass Fused-MBConv pipeline:
+    ``(whole_block, exactly_zero)``.
+
+    The one launch reads each input strip once per (c_mid, c_out) block
+    pair (the dense-conv c_in reduction is innermost, the projection's
+    c_mid reduction next), refetches the dense conv weight per revisiting
+    (strip, c_out) cell and the projection weight per strip, and writes
+    only the block output — the expanded map lives and dies in VMEM,
+    exactly the separable fusion story at MBConv widths.
+    """
+    _require_no_se(shape)
+    validate_residency(residency)
+    (n_th, n_cm, n_co, strips, _e_rows, out, _w_exp, _w_dw, w_proj,
+     _pool) = _mbconv_common(shape, tile_h, c_block)
+    n_ci = _n_chan_blocks(shape.c_in, c_block)
+    w_conv = shape.k * shape.k * shape.c_in * shape.c_mid
+    # launched height incl. height-cover padding (see _covered_rows)
+    x_full = shape.b * _covered_rows(shape, tile_h) * shape.padded_w \
+        * shape.c_in
+    issues = 0
+    if residency == "resident":
+        reads = x_full * (n_co * n_th * n_cm if n_ci > 1 else 1)
+    else:
+        reads = strips * n_cm * n_co
+        issues += shape.b * n_co * n_th * n_cm * n_ci
+    reads += w_conv * n_th * n_co + w_proj * n_th
+    return (HBMTraffic(reads, out, shape.dtype_bytes, issues),
+            HBMTraffic(0, 0, shape.dtype_bytes, 0))
+
+
+def fusedmb_fused_traffic(
+    shape: MBConvShape, tile_h: int, c_block: int = 128,
+    residency: str = DEFAULT_RESIDENCY,
+) -> HBMTraffic:
+    """HBM traffic of the single-pass Fused-MBConv pipeline.  Defined as
+    the sum of ``fusedmb_pass_traffic`` (whose pass 2 is exactly zero) —
+    the whole-block total and the per-pass split cannot diverge."""
+    p1, p2 = fusedmb_pass_traffic(shape, tile_h, c_block, residency)
+    return HBMTraffic(p1.read_words + p2.read_words,
+                      p1.write_words + p2.write_words,
+                      shape.dtype_bytes, p1.dma_issues + p2.dma_issues)
+
+
+def fusedmb_staged_traffic(
+    shape: MBConvShape, tile_h: int, c_block: int = 128
+) -> HBMTraffic:
+    """HBM traffic of the staged Fused-MBConv pipeline (what
+    ``convdk_fusedmb_staged`` actually runs):
+
+    1. dense conv: read the input + w_conv, write the expanded map,
+    2. projection PW: re-read the expanded map + w_proj, write out.
+
+    The expanded map (c_mid = expand * c_in wide) makes the HBM
+    round-trip the fusion deletes — the same story as the separable
+    baseline, at Fused-MBConv widths."""
+    _require_no_se(shape)
+    del tile_h, c_block
+    x_words = shape.b * shape.h * shape.w * shape.c_in
+    xe = shape.b * shape.out_h * shape.out_w * shape.c_mid
+    out = shape.b * shape.out_h * shape.out_w * shape.c_out
+    w_conv = shape.k * shape.k * shape.c_in * shape.c_mid
+    w_proj = shape.c_mid * shape.c_out
+    reads = x_words + w_conv + xe + w_proj
+    writes = xe + out
+    return HBMTraffic(reads, writes, shape.dtype_bytes)
+
+
+def fusedmb_staging_bytes(
+    shape: MBConvShape, tile_h: int,
+    residency: str = DEFAULT_RESIDENCY, c_block: int = 128,
+) -> int:
+    """VMEM bytes the Fused-MBConv kernel's INPUT stream occupies under
+    one residency (single pass, no retained stream — the input window is
+    the only staged tensor)."""
+    _require_no_se(shape)
+    validate_residency(residency)
+    tile_h_eff = max(1, min(tile_h, shape.out_h))
+    in_rows = (tile_h_eff - 1) * shape.s + shape.k
+    ci = pick_channel_block(shape.c_in, c_block)
+    if residency == "resident":
+        # the launched (height-cover-padded) block, not just padded_h
+        return (_covered_rows(shape, tile_h) * shape.padded_w * ci
+                * shape.dtype_bytes)
+    return (staging_slots(residency) * in_rows * shape.padded_w * ci
+            * shape.dtype_bytes)
 
 
 # ---------------------------------------------------------------------------
@@ -1173,6 +1319,8 @@ def _mbconv_collective_split(
     if mp <= 1:
         return 0, 0
     b_local = shape.b // dp
+    # c_se is 0 for a no-SE block, so the squeeze ring vanishes exactly
+    # when the kernel emits no squeeze psum
     squeeze = b_local * shape.c_se
     proj = b_local * shape.out_h * shape.out_w * shape.c_out
     if collective == "psum_scatter":
@@ -1242,6 +1390,84 @@ def sharded_mbconv_staged_traffic(
         in_layout=eff_layout,
         transition_words=_mbconv_entry_transition_words(
             shape, dp, mp, eff_layout))
+
+
+def fusedmb_shard(
+    shape: MBConvShape, mesh_shape: Tuple[int, int],
+) -> Tuple[MBConvShape, Tuple[int, int]]:
+    """(per-device shard shape, effective factors) for the Fused-MBConv
+    partitioning: batch over "data", c_mid over "model".  c_in NEVER
+    shards — the dense k x k conv contracts over all of it on every
+    device, so the input must arrive replicated (the kernel rejects
+    anything else)."""
+    _require_no_se(shape)
+    dp, mp = shard_factors(shape.b, shape.c_mid, mesh_shape)
+    return replace(shape, b=shape.b // dp, c_mid=shape.c_mid // mp), (dp, mp)
+
+
+def _fusedmb_collective_words(shape: MBConvShape, dp: int, mp: int,
+                              collective: str) -> int:
+    """Interconnect words of the sharded Fused-MBConv: ONE reduction — the
+    (B_local, H', W', C_out) projection partial over the c_mid shards —
+    priced per ``collective`` exactly like the MBConv projection.  No SE
+    means no squeeze ring: the projection collective is the family's
+    entire wire bill."""
+    validate_collective(collective)
+    if mp <= 1:
+        return 0
+    b_local = shape.b // dp
+    if collective == "psum_scatter":
+        return dp * (mp - 1) * (b_local * shape.out_h * shape.out_w
+                                * scatter_c_out(shape.c_out, mp))
+    out = b_local * shape.out_h * shape.out_w * shape.c_out
+    return dp * 2 * (mp - 1) * out
+
+
+def sharded_fusedmb_traffic(
+    shape: MBConvShape, tile_h: int, mesh_shape: Tuple[int, int] = (1, 1),
+    c_block: int = 128, residency: str = DEFAULT_RESIDENCY,
+    collective: str = DEFAULT_COLLECTIVE,
+    in_layout: str = DEFAULT_LAYOUT,
+) -> ShardedTraffic:
+    """Per-device traffic + collective bytes of the sharded single-pass
+    Fused-MBConv: batch on "data", c_mid on "model", projection partial
+    reduced per ``collective``.
+
+    ``in_layout`` must be ``replicated`` — mirroring the kernel, which
+    raises for a sharded arrival (the dense conv needs all of c_in).  A
+    sharded producer feeding this family repays its layout at the
+    BOUNDARY (``layout_transition_words``), never inside the block."""
+    validate_layout(in_layout)
+    if in_layout != DEFAULT_LAYOUT:
+        raise ValueError(
+            f"fusedmb consumes replicated arrivals only, got {in_layout!r}")
+    local, (dp, mp) = fusedmb_shard(shape, mesh_shape)
+    return ShardedTraffic(
+        device=fusedmb_fused_traffic(local, tile_h, c_block, residency),
+        collective_words=_fusedmb_collective_words(shape, dp, mp, collective),
+        n_devices=dp * mp, mesh_shape=(dp, mp), collective=collective,
+        in_layout=DEFAULT_LAYOUT)
+
+
+def sharded_fusedmb_staged_traffic(
+    shape: MBConvShape, tile_h: int, mesh_shape: Tuple[int, int] = (1, 1),
+    c_block: int = 128, collective: str = DEFAULT_COLLECTIVE,
+    in_layout: str = DEFAULT_LAYOUT,
+) -> ShardedTraffic:
+    """The staged Fused-MBConv pipeline under the SAME partitioning — its
+    projection also reduces over the c_mid shards, so it pays the
+    identical collective and the fused-vs-staged margin is decided by the
+    HBM side, per partition."""
+    validate_layout(in_layout)
+    if in_layout != DEFAULT_LAYOUT:
+        raise ValueError(
+            f"fusedmb consumes replicated arrivals only, got {in_layout!r}")
+    local, (dp, mp) = fusedmb_shard(shape, mesh_shape)
+    return ShardedTraffic(
+        device=fusedmb_staged_traffic(local, tile_h, c_block),
+        collective_words=_fusedmb_collective_words(shape, dp, mp, collective),
+        n_devices=dp * mp, mesh_shape=(dp, mp), collective=collective,
+        in_layout=DEFAULT_LAYOUT)
 
 
 # ---------------------------------------------------------------------------
@@ -1318,6 +1544,32 @@ def sharded_mbconv_pass_costs(
     return MBConvPassCosts(pass1=p1, pass2=p2,
                            pass1_collective_words=squeeze + entry,
                            pass2_collective_words=proj)
+
+
+def sharded_fusedmb_pass_costs(
+    shape: MBConvShape, tile_h: int,
+    mesh_shape: Tuple[int, int] = (1, 1), c_block: int = 128,
+    residency: str = DEFAULT_RESIDENCY,
+    collective: str = DEFAULT_COLLECTIVE,
+    in_layout: str = DEFAULT_LAYOUT,
+) -> MBConvPassCosts:
+    """Per-pass split of ``sharded_fusedmb_traffic`` at the same point:
+    the whole single-pass block (HBM AND the projection collective) lands
+    on pass 1, pass 2 is exactly zero.  ``boundary_overlap_us`` then
+    prices a boundary BEHIND this block as serial automatically — a
+    single-pass producer has no pass-2 compute for the next block's
+    pass-1 DMA to hide behind, and the model must never pretend it does.
+    """
+    validate_layout(in_layout)
+    if in_layout != DEFAULT_LAYOUT:
+        raise ValueError(
+            f"fusedmb consumes replicated arrivals only, got {in_layout!r}")
+    local, (dp, mp) = fusedmb_shard(shape, mesh_shape)
+    p1, p2 = fusedmb_pass_traffic(local, tile_h, c_block, residency)
+    proj = _fusedmb_collective_words(shape, dp, mp, collective)
+    return MBConvPassCosts(pass1=p1, pass2=p2,
+                           pass1_collective_words=proj,
+                           pass2_collective_words=0)
 
 
 # ---------------------------------------------------------------------------

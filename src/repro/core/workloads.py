@@ -162,6 +162,107 @@ assert [(k, ci * e, s, hw) for ci, _co, e, k, s, hw
         in EFFICIENTNET_B0_MBCONV] == _EFFB0
 
 
+# MobileNet-V3 per-row block metadata: (c_in, c_out, SE, act) aligned
+# with the DW tables above [arXiv:1905.02244, Tables 1-2].  The DW table
+# alone prices only the depthwise stage; the full two-pass fused block
+# additionally needs the projection width and the per-row SE/act facts
+# (V3 runs relu early stages, hard_swish late, SE on SOME blocks — a
+# no-SE row must be priced with zero SE bytes).
+MOBILENET_V3_LARGE_META: List[Tuple[int, int, bool, str]] = [
+    (16, 16, False, "relu"),
+    (16, 24, False, "relu"),
+    (24, 24, False, "relu"),
+    (24, 40, True, "relu"),
+    (40, 40, True, "relu"),
+    (40, 40, True, "relu"),
+    (40, 80, False, "hard_swish"),
+    (80, 80, False, "hard_swish"),
+    (80, 80, False, "hard_swish"),
+    (80, 80, False, "hard_swish"),
+    (80, 112, True, "hard_swish"),
+    (112, 112, True, "hard_swish"),
+    (112, 160, True, "hard_swish"),
+    (160, 160, True, "hard_swish"),
+    (160, 160, True, "hard_swish"),
+]
+assert len(MOBILENET_V3_LARGE_META) == len(MOBILENET_V3_LARGE)
+
+MOBILENET_V3_SMALL_META: List[Tuple[int, int, bool, str]] = [
+    (16, 16, True, "relu"),
+    (16, 24, False, "relu"),
+    (24, 24, False, "relu"),
+    (24, 40, True, "hard_swish"),
+    (40, 40, True, "hard_swish"),
+    (40, 40, True, "hard_swish"),
+    (40, 48, True, "hard_swish"),
+    (48, 48, True, "hard_swish"),
+    (48, 96, True, "hard_swish"),
+    (96, 96, True, "hard_swish"),
+    (96, 96, True, "hard_swish"),
+]
+assert len(MOBILENET_V3_SMALL_META) == len(MOBILENET_V3_SMALL)
+
+
+def mobilenet_v3_chain_rows(variant: str = "large", se_ratio: float = 0.25
+                            ) -> tuple:
+    """Family-generic ``core.autotune.BlockRow`` chain of MobileNet-V3
+    for the network-level layout solver — the analogue of
+    ``models.mbconv.effnet_chain_rows`` built from the canonical workload
+    tables: each row carries its DW stage (expanded width, hw, k, s)
+    plus the per-row projection width, SE flag and act from the META
+    tables above."""
+    dw_rows, meta = {
+        "large": (MOBILENET_V3_LARGE, MOBILENET_V3_LARGE_META),
+        "small": (MOBILENET_V3_SMALL, MOBILENET_V3_SMALL_META),
+    }[variant]
+    from .autotune import BlockRow
+    return tuple(
+        BlockRow(dw.h, dw.w, c_in, dw.c, c_out, dw.k, dw.s,
+                 family="mbconv", act=act,
+                 se_ratio=se_ratio if se else 0.0)
+        for dw, (c_in, c_out, se, act) in zip(dw_rows, meta))
+
+
+# EfficientNet-V2-S body stages [arXiv:2104.00298, Table 2]:
+# (family, expand_ratio, k, s, c_out, repeats) — Fused-MBConv stages 1-3
+# (dense expand+DW collapse, no SE), MBConv tail with SE 0.25.  Mirrors
+# ``models.mbconv.EFFNET_V2_S_STAGES`` (a test pins the two views
+# together; core cannot import models).
+EFFICIENTNET_V2_S_STAGES: List[Tuple[str, int, int, int, int, int]] = [
+    ("fusedmb", 1, 3, 1, 24, 2),
+    ("fusedmb", 4, 3, 2, 48, 4),
+    ("fusedmb", 4, 3, 2, 64, 4),
+    ("mbconv", 4, 3, 2, 128, 6),
+    ("mbconv", 6, 3, 1, 160, 9),
+    ("mbconv", 6, 3, 2, 256, 15),
+]
+
+
+def effnet_v2_chain_rows(h: int = 112, w: int = 112,
+                         se_ratio: float = 0.25, stem_c: int = 24
+                         ) -> tuple:
+    """The EfficientNet-V2-S ``BlockRow`` chain (40 blocks) at
+    stem-output spatial dims ``h`` x ``w`` — a MIXED-FAMILY chain: the
+    fused head's rows carry ``family="fusedmb"`` (always-replicated
+    entries, zero pass-2 traffic), the tail ``family="mbconv"`` with SE.
+    The expansion-1 fused stage widens c_mid to c_out so the single-pass
+    projection stays well-formed (matching the model builder)."""
+    from .autotune import BlockRow
+    rows, c_in, hh, ww = [], stem_c, h, w
+    for family, expand, k, s, c_out, repeats in EFFICIENTNET_V2_S_STAGES:
+        for i in range(repeats):
+            si = s if i == 0 else 1
+            c_mid = max(c_in * expand, c_out) if family == "fusedmb" \
+                else c_in * expand
+            rows.append(BlockRow(
+                hh, ww, c_in, c_mid, c_out, k, si, family=family,
+                act="silu",
+                se_ratio=0.0 if family == "fusedmb" else se_ratio))
+            hh, ww = -(-hh // si), -(-ww // si)
+            c_in = c_out
+    return tuple(rows)
+
+
 # EfficientNet-V2-style k=7 stem probes (ROADMAP "stride/kernel
 # generality"): the fused-MBConv heads of the V2 family push the DW kernel
 # to 7x7 at stem resolutions.  The ConvDK tap loop, the staging engine and

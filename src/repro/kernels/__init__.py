@@ -3,11 +3,17 @@ convolution) re-designed for the TPU memory hierarchy (DESIGN.md §Pillar B).
 """
 
 from .convdk_fused import convdk_fused_separable, fused_separable_pallas
+from .convdk_fusedmb import (
+    convdk_fusedmb_fused,
+    convdk_fusedmb_staged,
+    fusedmb_pallas,
+)
 from .convdk_mbconv import convdk_mbconv_fused, convdk_mbconv_staged
 from .convdk_sharded import (
     can_shard_fused,
     conv_mesh_shape,
     convdk_fused_separable_sharded,
+    convdk_fusedmb_fused_sharded,
     convdk_mbconv_fused_sharded,
 )
 from .staging import (
@@ -28,6 +34,7 @@ from .ref import (
     causal_conv1d_ref,
     causal_conv1d_update_ref,
     depthwise2d_ref,
+    fusedmb_ref,
     mbconv_ref,
     separable_ref,
 )
@@ -44,16 +51,21 @@ __all__ = [
     "convdk_depthwise2d",
     "convdk_fused_separable",
     "convdk_fused_separable_sharded",
+    "convdk_fusedmb_fused",
+    "convdk_fusedmb_fused_sharded",
+    "convdk_fusedmb_staged",
     "convdk_mbconv_fused",
     "convdk_mbconv_fused_sharded",
     "convdk_mbconv_staged",
     "convdk_separable_staged",
     "fused_separable_pallas",
+    "fusedmb_pallas",
     "stage_row_strips",
     "stage_seq_strips",
     "causal_conv1d_ref",
     "causal_conv1d_update_ref",
     "depthwise2d_ref",
+    "fusedmb_ref",
     "mbconv_ref",
     "separable_ref",
 ]

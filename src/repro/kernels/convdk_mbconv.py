@@ -115,23 +115,26 @@ def _expand_accumulate(win, wexp_ref, acc_ref, *, ci):
         acc_ref[...] = acc_ref[...] + partial
 
 
-def _mbconv_pass1_kernel(x_ref, wexp_ref, wdw_ref, pool_ref, *rest,
+def _mbconv_pass1_kernel(x_ref, wexp_ref, wdw_ref, *rest,
                          plan: StripPlan, k_h, k_w, stride, tile_h, out_w,
                          out_h, exp_act: Optional[str],
-                         dw_act: Optional[str], retain: bool):
+                         dw_act: Optional[str], se: bool, retain: bool):
     """One (batch, c_mid-block, row-strip, c_in-block) grid cell of pass 1.
 
     x_ref    : unstaged input (engine-staged per ``plan``)
     wexp_ref : (CI, CM)               expand-PW block
     wdw_ref  : (k_h, k_w, CM)         depthwise taps
-    pool_ref : (1, 1, CM)             on-chip SE pool accumulator (sums)
-    rest     : (dw_out_ref,) if retain, then acc_ref + staging refs
+    rest     : (pool_ref,) if se — the (1, 1, CM) on-chip SE pool
+               accumulator (sums) — then (dw_out_ref,) if retain, then
+               acc_ref + staging refs.  An se=off launch carries NO pool
+               output at all: the no-SE block pays zero pool VMEM/HBM.
     """
+    rest = tuple(rest)
+    if se:
+        pool_ref, *rest = rest
     if retain:
-        dwo_ref, *scratch = rest
-    else:
-        scratch = rest
-    stage_refs, (acc_ref,) = plan.take_scratch(tuple(scratch))
+        dwo_ref, *rest = rest
+    stage_refs, (acc_ref,) = plan.take_scratch(tuple(rest))
     ti = pl.program_id(2)
     ci = pl.program_id(3)
     n_ci = pl.num_programs(3)
@@ -144,36 +147,41 @@ def _mbconv_pass1_kernel(x_ref, wexp_ref, wdw_ref, pool_ref, *rest,
         dw = _dw_taps(e, wdw_ref, k_h=k_h, k_w=k_w, stride=stride,
                       tile_h=tile_h, out_w=out_w)
         dw = _act_ref(dw, dw_act)
-        # mask strip rows past out_h so they never enter the global pool
-        rows = jax.lax.broadcasted_iota(jnp.int32, (tile_h, out_w), 0) \
-            + ti * tile_h
-        masked = jnp.where((rows < out_h)[..., None], dw, 0.0)
-        sums = jnp.sum(masked, axis=(0, 1), keepdims=True)   # (1, 1, CM)
+        if se:
+            # mask strip rows past out_h so they never enter the pool
+            rows = jax.lax.broadcasted_iota(jnp.int32, (tile_h, out_w), 0) \
+                + ti * tile_h
+            masked = jnp.where((rows < out_h)[..., None], dw, 0.0)
+            sums = jnp.sum(masked, axis=(0, 1), keepdims=True)  # (1, 1, CM)
 
-        @pl.when(ti == 0)
-        def _pool_init():
-            pool_ref[...] = sums
+            @pl.when(ti == 0)
+            def _pool_init():
+                pool_ref[...] = sums
 
-        @pl.when(ti > 0)
-        def _pool_accumulate():
-            pool_ref[...] = pool_ref[...] + sums
+            @pl.when(ti > 0)
+            def _pool_accumulate():
+                pool_ref[...] = pool_ref[...] + sums
 
         if retain:
             dwo_ref[0] = dw.astype(dwo_ref.dtype)
 
 
-def _mbconv_pass2_recompute_kernel(x_ref, wexp_ref, wdw_ref, scale_ref,
-                                   wproj_ref, o_ref, *scratch,
+def _mbconv_pass2_recompute_kernel(x_ref, wexp_ref, wdw_ref, *rest,
                                    plan: StripPlan, k_h, k_w, stride,
                                    tile_h, out_w, exp_act: Optional[str],
-                                   dw_act: Optional[str]):
+                                   dw_act: Optional[str], se: bool):
     """One (batch, c_out-block, row-strip, c_mid-block, c_in-block) cell.
 
     Recomputes expand+DW exactly as pass 1 (the DW tensor never existed in
-    HBM), multiplies by the SE gate and contracts with the projection block
-    — partial projection sums carried across the c_mid grid dimension.
+    HBM), multiplies by the SE gate (when ``se`` — an se=off launch carries
+    no scale input at all) and contracts with the projection block —
+    partial projection sums carried across the c_mid grid dimension.
     """
-    stage_refs, (acc_ref, proj_ref) = plan.take_scratch(scratch)
+    rest = tuple(rest)
+    if se:
+        scale_ref, *rest = rest
+    wproj_ref, o_ref, *scratch = rest
+    stage_refs, (acc_ref, proj_ref) = plan.take_scratch(tuple(scratch))
     cm = pl.program_id(3)
     ci = pl.program_id(4)
     n_cm = pl.num_programs(3)
@@ -186,7 +194,9 @@ def _mbconv_pass2_recompute_kernel(x_ref, wexp_ref, wdw_ref, scale_ref,
         e = _act_ref(acc_ref[...], exp_act)
         dw = _dw_taps(e, wdw_ref, k_h=k_h, k_w=k_w, stride=stride,
                       tile_h=tile_h, out_w=out_w)
-        dw = _act_ref(dw, dw_act) * scale_ref[0, 0].astype(jnp.float32)
+        dw = _act_ref(dw, dw_act)
+        if se:
+            dw = dw * scale_ref[0, 0].astype(jnp.float32)
         partial = jax.lax.dot_general(
             dw.reshape(tile_h * out_w, dw.shape[-1]),
             wproj_ref[:, :].astype(jnp.float32),
@@ -207,17 +217,24 @@ def _mbconv_pass2_recompute_kernel(x_ref, wexp_ref, wdw_ref, scale_ref,
             o_ref[0] = proj_ref[...].astype(o_ref.dtype)
 
 
-def _mbconv_pass2_retain_kernel(dw_ref, scale_ref, wproj_ref, o_ref,
-                                *scratch, plan: StripPlan, tile_h, out_w):
+def _mbconv_pass2_retain_kernel(dw_ref, *rest, plan: StripPlan, tile_h,
+                                out_w, se: bool):
     """One (batch, c_out-block, row-strip, c_mid-block) cell: stage the
     retained DW block back (a non-overlapping row-block stream — double-
-    buffered DMA under ``strip_dma_db``), fold in the SE gate, contract
-    with the projection block (partial sums across the c_mid grid dim)."""
-    stage_refs, (proj_ref,) = plan.take_scratch(scratch)
+    buffered DMA under ``strip_dma_db``), fold in the SE gate (when ``se``
+    — an se=off launch carries no scale input), contract with the
+    projection block (partial sums across the c_mid grid dim)."""
+    rest = tuple(rest)
+    if se:
+        scale_ref, *rest = rest
+    wproj_ref, o_ref, *scratch = rest
+    stage_refs, (proj_ref,) = plan.take_scratch(tuple(scratch))
     cm = pl.program_id(3)
     n_cm = pl.num_programs(3)
     dw_win = StripStream(plan, dw_ref, stage_refs).get()
-    dw = dw_win.astype(jnp.float32) * scale_ref[0, 0].astype(jnp.float32)
+    dw = dw_win.astype(jnp.float32)
+    if se:
+        dw = dw * scale_ref[0, 0].astype(jnp.float32)
     partial = jax.lax.dot_general(
         dw.reshape(tile_h * out_w, dw.shape[-1]),
         wproj_ref[:, :].astype(jnp.float32),
@@ -240,8 +257,13 @@ def _mbconv_pass2_retain_kernel(dw_ref, scale_ref, wproj_ref, o_ref,
 
 def mbconv_pass1_pallas(x_pad, w_exp, w_dw, *, stride, out_w, out_h, tile_h,
                         n_th, ci_block, cm_block, exp_act, dw_act, retain,
-                        interpret, residency=DEFAULT_RESIDENCY):
-    """Raw pass-1 launch: (pool_sums, dw_retained-or-None)."""
+                        interpret, se=True, residency=DEFAULT_RESIDENCY):
+    """Raw pass-1 launch: (pool_sums-or-None, dw_retained-or-None).
+
+    ``se=False`` drops the pool output (and its VMEM accumulator) from the
+    launch entirely — an se=off retain pass writes only the DW tensor.
+    """
+    assert se or retain, "se=off + recompute has no pass 1 at all"
     b, h_tot, w_pad, ci_pad = x_pad.shape
     k_h, k_w, cm_pad = w_dw.shape
     grid = (b, cm_pad // cm_block, n_th, ci_pad // ci_block)
@@ -255,10 +277,13 @@ def mbconv_pass1_pallas(x_pad, w_exp, w_dw, *, stride, out_w, out_h, tile_h,
     kernel = functools.partial(
         _mbconv_pass1_kernel, plan=plan, k_h=k_h, k_w=k_w, stride=stride,
         tile_h=tile_h, out_w=out_w, out_h=out_h, exp_act=exp_act,
-        dw_act=dw_act, retain=retain)
-    out_shape = [jax.ShapeDtypeStruct((b, 1, cm_pad), jnp.float32)]
-    out_specs = [pl.BlockSpec((1, 1, cm_block),
-                              lambda bi, cm, ti, ci: (bi, 0, cm))]
+        dw_act=dw_act, se=se, retain=retain)
+    out_shape = []
+    out_specs = []
+    if se:
+        out_shape.append(jax.ShapeDtypeStruct((b, 1, cm_pad), jnp.float32))
+        out_specs.append(pl.BlockSpec((1, 1, cm_block),
+                                      lambda bi, cm, ti, ci: (bi, 0, cm)))
     if retain:
         out_shape.append(jax.ShapeDtypeStruct(
             (b, n_th * tile_h, out_w, cm_pad), x_pad.dtype))
@@ -281,13 +306,19 @@ def mbconv_pass1_pallas(x_pad, w_exp, w_dw, *, stride, out_w, out_h, tile_h,
                         *plan.scratch_shapes(x_pad.dtype)],
         interpret=interpret,
     )(x_pad, w_exp, w_dw)
-    return (outs[0], outs[1]) if retain else (outs[0], None)
+    outs = list(outs)
+    pool = outs.pop(0) if se else None
+    dw_ret = outs.pop(0) if retain else None
+    return pool, dw_ret
 
 
 def mbconv_pass2_recompute_pallas(x_pad, w_exp, w_dw, scale, w_proj, *,
                                   stride, out_w, tile_h, n_th, ci_block,
                                   cm_block, co_block, exp_act, dw_act,
                                   interpret, residency=DEFAULT_RESIDENCY):
+    """``scale=None`` launches the se=off variant: no gate input, no gate
+    multiply — the no-SE block pays zero scale bytes."""
+    se = scale is not None
     b, h_tot, w_pad, ci_pad = x_pad.shape
     k_h, k_w, cm_pad = w_dw.shape
     co_pad = w_proj.shape[1]
@@ -303,21 +334,26 @@ def mbconv_pass2_recompute_pallas(x_pad, w_exp, w_dw, scale, w_proj, *,
     kernel = functools.partial(
         _mbconv_pass2_recompute_kernel, plan=plan, k_h=k_h, k_w=k_w,
         stride=stride, tile_h=tile_h, out_w=out_w, exp_act=exp_act,
-        dw_act=dw_act)
+        dw_act=dw_act, se=se)
+    in_specs = [
+        plan.in_spec(lambda bi, co, ti, cm, ci: (bi, 0, 0, ci)),
+        pl.BlockSpec((ci_block, cm_block),
+                     lambda bi, co, ti, cm, ci: (ci, cm)),
+        pl.BlockSpec((k_h, k_w, cm_block),
+                     lambda bi, co, ti, cm, ci: (0, 0, cm)),
+    ]
+    operands = [x_pad, w_exp, w_dw]
+    if se:
+        in_specs.append(pl.BlockSpec((1, 1, cm_block),
+                                     lambda bi, co, ti, cm, ci: (bi, 0, cm)))
+        operands.append(scale)
+    in_specs.append(pl.BlockSpec((cm_block, co_block),
+                                 lambda bi, co, ti, cm, ci: (cm, co)))
+    operands.append(w_proj)
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            plan.in_spec(lambda bi, co, ti, cm, ci: (bi, 0, 0, ci)),
-            pl.BlockSpec((ci_block, cm_block),
-                         lambda bi, co, ti, cm, ci: (ci, cm)),
-            pl.BlockSpec((k_h, k_w, cm_block),
-                         lambda bi, co, ti, cm, ci: (0, 0, cm)),
-            pl.BlockSpec((1, 1, cm_block),
-                         lambda bi, co, ti, cm, ci: (bi, 0, cm)),
-            pl.BlockSpec((cm_block, co_block),
-                         lambda bi, co, ti, cm, ci: (cm, co)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(
             (1, tile_h, out_w, co_block),
             lambda bi, co, ti, cm, ci: (bi, ti, 0, co)),
@@ -329,7 +365,7 @@ def mbconv_pass2_recompute_pallas(x_pad, w_exp, w_dw, scale, w_proj, *,
             *plan.scratch_shapes(x_pad.dtype),
         ],
         interpret=interpret,
-    )(x_pad, w_exp, w_dw, scale, w_proj)
+    )(*operands)
 
 
 def mbconv_pass2_retain_pallas(dw_ret, scale, w_proj, *, out_w, tile_h,
@@ -342,22 +378,26 @@ def mbconv_pass2_retain_pallas(dw_ret, scale, w_proj, *, out_w, tile_h,
 
     # The retained-DW re-read: non-overlapping tile_h-row blocks (k_h=1,
     # stride=1 geometry) — the double-buffered DMA stream of the tentpole.
+    se = scale is not None
     plan = strip_plan(
         h_tot=dw_ret.shape[1], w_tot=dw_ret.shape[2], w_span=out_w,
         c_block=cm_block, tile_h=tile_h, grid=grid, window_dims=(0, 2, 3),
         residency=residency)
     kernel = functools.partial(_mbconv_pass2_retain_kernel, plan=plan,
-                               tile_h=tile_h, out_w=out_w)
+                               tile_h=tile_h, out_w=out_w, se=se)
+    in_specs = [plan.in_spec(lambda bi, co, ti, cm: (bi, ti, 0, cm))]
+    operands = [dw_ret]
+    if se:
+        in_specs.append(pl.BlockSpec((1, 1, cm_block),
+                                     lambda bi, co, ti, cm: (bi, 0, cm)))
+        operands.append(scale)
+    in_specs.append(pl.BlockSpec((cm_block, co_block),
+                                 lambda bi, co, ti, cm: (cm, co)))
+    operands.append(w_proj)
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            plan.in_spec(lambda bi, co, ti, cm: (bi, ti, 0, cm)),
-            pl.BlockSpec((1, 1, cm_block),
-                         lambda bi, co, ti, cm: (bi, 0, cm)),
-            pl.BlockSpec((cm_block, co_block),
-                         lambda bi, co, ti, cm: (cm, co)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(
             (1, tile_h, out_w, co_block),
             lambda bi, co, ti, cm: (bi, ti, 0, co)),
@@ -366,12 +406,14 @@ def mbconv_pass2_retain_pallas(dw_ret, scale, w_proj, *, out_w, tile_h,
         scratch_shapes=[pltpu.VMEM((tile_h, out_w, co_block), jnp.float32),
                         *plan.scratch_shapes(dw_ret.dtype)],
         interpret=interpret,
-    )(dw_ret, scale, w_proj)
+    )(*operands)
 
 
 def _mbconv_impl(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj, stride,
                  padding, tile_h, mode, exp_act, dw_act, interpret,
                  residency=DEFAULT_RESIDENCY,
+                 se_act: Optional[str] = "silu",
+                 gate_act: Optional[str] = "sigmoid",
                  axis_name: Optional[str] = None,
                  collective: str = DEFAULT_COLLECTIVE,
                  scatter_width: int = 0):
@@ -395,8 +437,15 @@ def _mbconv_impl(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj, stride,
 
     Everything else (expand columns, DW taps, the excite FC rows, the
     retained DW tensor) is local to the shard.
+
+    ``w_se1 is None`` switches SE off (MobileNet-V3's no-SE blocks): the
+    pass-1 pool output, the host MLP, the squeeze psum and the pass-2
+    scale input all disappear — and under ``mode="recompute"`` pass 1 is
+    skipped ENTIRELY (it would produce nothing).  ``se_act``/``gate_act``
+    parameterize the SE MLP's nonlinearities (V3 uses relu/hard_sigmoid).
     """
     validate_collective(collective)
+    se = w_se1 is not None
     b, h, w_in, c_in = x.shape
     k_h, k_w, c_mid = w_dw.shape
     assert w_exp.shape == (c_in, c_mid), (w_exp.shape, c_in, c_mid)
@@ -431,24 +480,31 @@ def _mbconv_impl(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj, stride,
     if need_h > xp.shape[1]:
         xp = jnp.pad(xp, ((0, 0), (0, need_h - xp.shape[1]), (0, 0), (0, 0)))
 
-    pool, dw_ret = mbconv_pass1_pallas(
-        xp, wexp_p, wdw_p, stride=s, out_w=out_w, out_h=out_h, tile_h=tile_h,
-        n_th=n_th, ci_block=ci_block, cm_block=cm_block, exp_act=exp_act,
-        dw_act=dw_act, retain=(mode == "retain"), interpret=interpret,
-        residency=residency)
+    if se or mode == "retain":
+        pool, dw_ret = mbconv_pass1_pallas(
+            xp, wexp_p, wdw_p, stride=s, out_w=out_w, out_h=out_h,
+            tile_h=tile_h, n_th=n_th, ci_block=ci_block, cm_block=cm_block,
+            exp_act=exp_act, dw_act=dw_act, retain=(mode == "retain"),
+            interpret=interpret, se=se, residency=residency)
+    else:
+        # se=off + recompute: pass 1 would produce nothing — skip it.
+        pool, dw_ret = None, None
 
-    # SE MLP on the on-chip-accumulated pool (masked rows excluded; the
-    # mean uses the true output element count).  The squeeze FC reduces
-    # over C_mid, so under c_mid sharding its partial product is psum'd
-    # across the mesh axis before the bias + nonlinearity.
-    mean = pool[:, 0, :c_mid] / float(out_h * out_w)          # (B, C_mid) f32
-    squeeze = mean @ w_se1.astype(jnp.float32)
-    if axis_name is not None:
-        squeeze = jax.lax.psum(squeeze, axis_name)
-    s1 = _act_ref(squeeze + b_se1.astype(jnp.float32), "silu")
-    gate = _act_ref(s1 @ w_se2.astype(jnp.float32)
-                    + b_se2.astype(jnp.float32), "sigmoid")
-    scale = jnp.pad(gate, ((0, 0), (0, cm_pad - c_mid)))[:, None, :]
+    if se:
+        # SE MLP on the on-chip-accumulated pool (masked rows excluded; the
+        # mean uses the true output element count).  The squeeze FC reduces
+        # over C_mid, so under c_mid sharding its partial product is psum'd
+        # across the mesh axis before the bias + nonlinearity.
+        mean = pool[:, 0, :c_mid] / float(out_h * out_w)      # (B, C_mid) f32
+        squeeze = mean @ w_se1.astype(jnp.float32)
+        if axis_name is not None:
+            squeeze = jax.lax.psum(squeeze, axis_name)
+        s1 = _act_ref(squeeze + b_se1.astype(jnp.float32), se_act)
+        gate = _act_ref(s1 @ w_se2.astype(jnp.float32)
+                        + b_se2.astype(jnp.float32), gate_act)
+        scale = jnp.pad(gate, ((0, 0), (0, cm_pad - c_mid)))[:, None, :]
+    else:
+        scale = None
 
     if mode == "retain":
         out = mbconv_pass2_retain_pallas(
@@ -486,30 +542,36 @@ def _mbconv_impl(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj, stride,
 
 
 @functools.partial(jax.custom_vjp,
-                   nondiff_argnums=(8, 9, 10, 11, 12, 13, 14, 15))
+                   nondiff_argnums=(8, 9, 10, 11, 12, 13, 14, 15, 16, 17))
 def _mbconv_op(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj, stride,
-               padding, tile_h, mode, exp_act, dw_act, interpret, residency):
+               padding, tile_h, mode, exp_act, dw_act, interpret, residency,
+               se_act="silu", gate_act="sigmoid"):
     return _mbconv_impl(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj,
                         stride, padding, tile_h, mode, exp_act, dw_act,
-                        interpret, residency)
+                        interpret, residency, se_act=se_act,
+                        gate_act=gate_act)
 
 
 def _mbconv_fwd(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj, stride,
-                padding, tile_h, mode, exp_act, dw_act, interpret, residency):
+                padding, tile_h, mode, exp_act, dw_act, interpret, residency,
+                se_act="silu", gate_act="sigmoid"):
     out = _mbconv_op(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj,
                      stride, padding, tile_h, mode, exp_act, dw_act,
-                     interpret, residency)
+                     interpret, residency, se_act, gate_act)
     return out, (x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj)
 
 
 def _mbconv_bwd(stride, padding, tile_h, mode, exp_act, dw_act, interpret,
-                residency, res, g):
+                residency, se_act, gate_act, res, g):
     # Backward through the mathematically identical reference composition —
     # the two-pass kernel computes the same MBConv block, so the VJP is
-    # exact (same pattern as convdk_fused's VJP).
+    # exact (same pattern as convdk_fused's VJP).  mbconv_ref skips the SE
+    # stage for w_se1=None, matching the se=off kernel path; the SE-param
+    # cotangents come back as None there, as custom_vjp expects.
     _, vjp = jax.vjp(
         lambda *p: mbconv_ref(*p, stride=stride, padding=padding,
-                              exp_act=exp_act, dw_act=dw_act),
+                              exp_act=exp_act, dw_act=dw_act,
+                              se_act=se_act, gate_act=gate_act),
         *res,
     )
     return vjp(g)
@@ -521,16 +583,17 @@ _mbconv_op.defvjp(_mbconv_fwd, _mbconv_bwd)
 @functools.partial(
     jax.jit,
     static_argnames=("stride", "padding", "tile_h", "mode", "exp_act",
-                     "dw_act", "interpret", "residency"),
+                     "dw_act", "se_act", "gate_act", "interpret",
+                     "residency"),
 )
 def convdk_mbconv_fused(
     x: jax.Array,
     w_exp: jax.Array,
     w_dw: jax.Array,
-    w_se1: jax.Array,
-    b_se1: jax.Array,
-    w_se2: jax.Array,
-    b_se2: jax.Array,
+    w_se1: Optional[jax.Array],
+    b_se1: Optional[jax.Array],
+    w_se2: Optional[jax.Array],
+    b_se2: Optional[jax.Array],
     w_proj: jax.Array,
     *,
     stride: int = 1,
@@ -539,6 +602,8 @@ def convdk_mbconv_fused(
     mode: str = "retain",
     exp_act: Optional[str] = "silu",
     dw_act: Optional[str] = "silu",
+    se_act: Optional[str] = "silu",
+    gate_act: Optional[str] = "sigmoid",
     interpret: Optional[bool] = None,
     residency: Optional[str] = None,
 ) -> jax.Array:
@@ -549,10 +614,16 @@ def convdk_mbconv_fused(
     w_exp  : (C_in, C_mid) expand PW (identity + ``exp_act=None`` for
              expansion ratio 1)
     w_dw   : (k_h, k_w, C_mid) depthwise taps
-    w_se1/b_se1, w_se2/b_se2 : SE squeeze/excite FCs
+    w_se1/b_se1, w_se2/b_se2 : SE squeeze/excite FCs — pass ALL FOUR as
+             ``None`` for a no-SE block (MobileNet-V3's early/middle
+             stages): the pass-1 pool, the host MLP and the pass-2 gate
+             disappear and under ``mode="recompute"`` pass 1 is skipped
+             entirely.
     w_proj : (C_mid, C_out) projection PW (linear)
     mode   : "retain" | "recompute" — pass-2 DW source (see module doc;
              ``core.autotune.get_mbconv_schedule`` picks per layer shape).
+    se_act/gate_act : SE MLP nonlinearities — (silu, sigmoid) for
+             EfficientNet, (relu, hard_sigmoid) for MobileNet-V3.
     residency : "resident" | "strip_dma" | "strip_dma_db" (default) — how
              the input / retained-DW streams are staged (``kernels.staging``).
     Returns (B, H', W', C_out).
@@ -563,22 +634,22 @@ def convdk_mbconv_fused(
         residency = DEFAULT_RESIDENCY
     return _mbconv_op(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj,
                       stride, padding, tile_h, mode, exp_act, dw_act,
-                      interpret, residency)
+                      interpret, residency, se_act, gate_act)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("stride", "padding", "tile_h", "exp_act", "dw_act",
-                     "interpret"),
+                     "se_act", "gate_act", "interpret"),
 )
 def convdk_mbconv_staged(
     x: jax.Array,
     w_exp: jax.Array,
     w_dw: jax.Array,
-    w_se1: jax.Array,
-    b_se1: jax.Array,
-    w_se2: jax.Array,
-    b_se2: jax.Array,
+    w_se1: Optional[jax.Array],
+    b_se1: Optional[jax.Array],
+    w_se2: Optional[jax.Array],
+    b_se2: Optional[jax.Array],
     w_proj: jax.Array,
     *,
     stride: int = 1,
@@ -586,6 +657,8 @@ def convdk_mbconv_staged(
     tile_h: int = 8,
     exp_act: Optional[str] = "silu",
     dw_act: Optional[str] = "silu",
+    se_act: Optional[str] = "silu",
+    gate_act: Optional[str] = "sigmoid",
     interpret: Optional[bool] = None,
 ) -> jax.Array:
     """The STAGED MBConv pipeline (comparison baseline, differentiable).
@@ -607,11 +680,12 @@ def convdk_mbconv_staged(
                            padding=padding, tile_h=tile_h,
                            interpret=interpret)
     d = _act_ref(d.astype(jnp.float32), dw_act)
-    pooled = jnp.mean(d, axis=(1, 2))
-    s1 = _act_ref(pooled @ w_se1.astype(jnp.float32)
-                  + b_se1.astype(jnp.float32), "silu")
-    gate = _act_ref(s1 @ w_se2.astype(jnp.float32)
-                    + b_se2.astype(jnp.float32), "sigmoid")
-    out = jnp.einsum("bhwc,cd->bhwd", d * gate[:, None, None, :],
-                     w_proj.astype(jnp.float32))
+    if w_se1 is not None:
+        pooled = jnp.mean(d, axis=(1, 2))
+        s1 = _act_ref(pooled @ w_se1.astype(jnp.float32)
+                      + b_se1.astype(jnp.float32), se_act)
+        gate = _act_ref(s1 @ w_se2.astype(jnp.float32)
+                        + b_se2.astype(jnp.float32), gate_act)
+        d = d * gate[:, None, None, :]
+    out = jnp.einsum("bhwc,cd->bhwd", d, w_proj.astype(jnp.float32))
     return out.astype(x.dtype)

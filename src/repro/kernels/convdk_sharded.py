@@ -71,8 +71,9 @@ from ..core.perfmodel import (
 )
 from .common import default_interpret
 from .convdk_fused import _fused_impl
+from .convdk_fusedmb import _fusedmb_impl
 from .convdk_mbconv import _mbconv_impl
-from .ref import _act_ref, mbconv_ref, separable_ref
+from .ref import _act_ref, fusedmb_ref, mbconv_ref, separable_ref
 
 POD_AXIS = "pod"
 DATA_AXIS = "data"
@@ -81,7 +82,7 @@ MODEL_AXIS = "model"
 # Times each sharded impl body was TRACED (not called) — a jit-cache hit
 # leaves these untouched.  tests/test_distributed_fused.py pins the
 # serving-rate contract: N calls at one (mesh, schedule, shapes) == 1 trace.
-TRACE_COUNTS: Dict[str, int] = {"separable": 0, "mbconv": 0}
+TRACE_COUNTS: Dict[str, int] = {"separable": 0, "mbconv": 0, "fusedmb": 0}
 
 
 def conv_mesh_shape(mesh) -> Tuple[int, int]:
@@ -315,7 +316,7 @@ def convdk_fused_separable_sharded(
 def _mbconv_sharded_impl(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj,
                          mesh, stride, padding, tile_h, mode, exp_act,
                          dw_act, interpret, residency, collective,
-                         in_layout):
+                         in_layout, se_act="silu", gate_act="sigmoid"):
     _require_shardable(mesh, x.shape[0], w_dw.shape[-1], "c_mid")
     validate_layout(in_layout)
     _dp, mp = conv_mesh_shape(mesh)
@@ -352,7 +353,8 @@ def _mbconv_sharded_impl(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj,
                 xl = jax.lax.all_gather(xl, MODEL_AXIS, axis=3, tiled=True)
         return _mbconv_impl(xl, wel, wdl, s1l, b1l, s2l, b2l, wpl, stride,
                             padding, tile_h, mode, exp_act, dw_act,
-                            interpret, residency, axis_name=MODEL_AXIS,
+                            interpret, residency, se_act=se_act,
+                            gate_act=gate_act, axis_name=MODEL_AXIS,
                             collective=collective, scatter_width=cw)
 
     batch = _batch_axes(mesh)
@@ -387,23 +389,26 @@ def _mbconv_sharded_impl(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj,
 
 
 @functools.partial(jax.custom_vjp,
-                   nondiff_argnums=(8, 9, 10, 11, 12, 13, 14, 15, 16, 17, 18))
+                   nondiff_argnums=(8, 9, 10, 11, 12, 13, 14, 15, 16, 17, 18,
+                                    19, 20))
 def _mbconv_sharded_op(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj,
                        mesh, stride, padding, tile_h, mode, exp_act, dw_act,
-                       interpret, residency, collective, in_layout):
+                       interpret, residency, collective, in_layout,
+                       se_act="silu", gate_act="sigmoid"):
     return _mbconv_sharded_impl(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2,
                                 w_proj, mesh, stride, padding, tile_h, mode,
                                 exp_act, dw_act, interpret, residency,
-                                collective, in_layout)
+                                collective, in_layout, se_act, gate_act)
 
 
 def _mbconv_sharded_fwd(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj,
                         mesh, stride, padding, tile_h, mode, exp_act, dw_act,
-                        interpret, residency, collective, in_layout):
+                        interpret, residency, collective, in_layout,
+                        se_act="silu", gate_act="sigmoid"):
     out = _mbconv_sharded_op(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2,
                              w_proj, mesh, stride, padding, tile_h, mode,
                              exp_act, dw_act, interpret, residency,
-                             collective, in_layout)
+                             collective, in_layout, se_act, gate_act)
     # barrier: under the jitted entry, raw-input residuals get forwarded
     # and the w_dw cotangent double-counts (see compat.residual_barrier —
     # probe-gated, so it auto-disables on fixed JAX builds)
@@ -413,10 +418,11 @@ def _mbconv_sharded_fwd(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj,
 
 def _mbconv_sharded_bwd(mesh, stride, padding, tile_h, mode, exp_act,
                         dw_act, interpret, residency, collective, in_layout,
-                        res, g):
+                        se_act, gate_act, res, g):
     _, vjp = jax.vjp(
         lambda *p: mbconv_ref(*p, stride=stride, padding=padding,
-                              exp_act=exp_act, dw_act=dw_act),
+                              exp_act=exp_act, dw_act=dw_act,
+                              se_act=se_act, gate_act=gate_act),
         *res,
     )
     return vjp(g)
@@ -428,18 +434,28 @@ _mbconv_sharded_op.defvjp(_mbconv_sharded_fwd, _mbconv_sharded_bwd)
 @functools.lru_cache(maxsize=256)
 def _mbconv_sharded_entry(mesh, stride, padding, tile_h, mode, exp_act,
                           dw_act, interpret, residency, collective,
-                          in_layout):
+                          in_layout, se_act, gate_act, se):
     """One jitted entry point per (mesh, static schedule) — see
     ``_sep_sharded_entry``.  The collective AND entry layouts are part of
     the static schedule: ring/scatter and replicated/sharded-in variants
-    are distinct entries."""
+    are distinct entries, as are se=on/off (different arg pytrees)."""
 
-    @jax.jit
-    def entry(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj):
-        return _mbconv_sharded_op(x, w_exp, w_dw, w_se1, b_se1, w_se2,
-                                  b_se2, w_proj, mesh, stride, padding,
-                                  tile_h, mode, exp_act, dw_act, interpret,
-                                  residency, collective, in_layout)
+    if se:
+        @jax.jit
+        def entry(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj):
+            return _mbconv_sharded_op(x, w_exp, w_dw, w_se1, b_se1, w_se2,
+                                      b_se2, w_proj, mesh, stride, padding,
+                                      tile_h, mode, exp_act, dw_act,
+                                      interpret, residency, collective,
+                                      in_layout, se_act, gate_act)
+    else:
+        @jax.jit
+        def entry(x, w_exp, w_dw, w_proj):
+            return _mbconv_sharded_op(x, w_exp, w_dw, None, None, None,
+                                      None, w_proj, mesh, stride, padding,
+                                      tile_h, mode, exp_act, dw_act,
+                                      interpret, residency, collective,
+                                      in_layout, se_act, gate_act)
 
     return entry
 
@@ -448,10 +464,10 @@ def convdk_mbconv_fused_sharded(
     x: jax.Array,
     w_exp: jax.Array,
     w_dw: jax.Array,
-    w_se1: jax.Array,
-    b_se1: jax.Array,
-    w_se2: jax.Array,
-    b_se2: jax.Array,
+    w_se1: Optional[jax.Array],
+    b_se1: Optional[jax.Array],
+    w_se2: Optional[jax.Array],
+    b_se2: Optional[jax.Array],
     w_proj: jax.Array,
     *,
     mesh,
@@ -461,6 +477,8 @@ def convdk_mbconv_fused_sharded(
     mode: str = "retain",
     exp_act: Optional[str] = "silu",
     dw_act: Optional[str] = "silu",
+    se_act: Optional[str] = "silu",
+    gate_act: Optional[str] = "sigmoid",
     interpret: Optional[bool] = None,
     residency: Optional[str] = None,
     collective: Optional[str] = None,
@@ -497,6 +515,12 @@ def convdk_mbconv_fused_sharded(
     Collective + transition bytes are priced by
     ``core.perfmodel.sharded_mbconv_traffic`` under the same axes.
 
+    Pass ALL FOUR SE params as ``None`` for a no-SE block (MobileNet-V3's
+    early/middle stages): the pass-1 pool, the host MLP, the pass-2 gate
+    AND the squeeze ``psum`` all disappear — an se=off block emits zero
+    squeeze collectives on the mesh.  ``se_act``/``gate_act`` select the
+    SE MLP nonlinearities ((relu, hard_sigmoid) for MobileNet-V3).
+
     Requires ``b % (pod*data) == 0`` and ``c_mid % model == 0``.
     Dispatches through a cached jitted entry point (no per-call
     re-tracing).
@@ -509,13 +533,157 @@ def convdk_mbconv_fused_sharded(
         collective = DEFAULT_COLLECTIVE
     if in_layout is None:
         in_layout = DEFAULT_LAYOUT
+    se = w_se1 is not None
     # resolve the residual-forwarding probe EAGERLY (see the separable
     # wrapper): the probe itself dispatches through _mbconv_sharded_op
     # with the probing flag set, so this never recurses
     residual_barrier_needed()
     telemetry.counter("sharded.dispatch.mbconv")
     telemetry.counter(f"sharded.collective.{collective}")
-    return _mbconv_sharded_entry(mesh, stride, padding, tile_h, mode,
-                                 exp_act, dw_act, interpret, residency,
-                                 collective, in_layout)(
-        x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj)
+    entry = _mbconv_sharded_entry(mesh, stride, padding, tile_h, mode,
+                                  exp_act, dw_act, interpret, residency,
+                                  collective, in_layout, se_act, gate_act,
+                                  se)
+    if se:
+        return entry(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj)
+    return entry(x, w_exp, w_dw, w_proj)
+
+
+# ---------------------------------------------------------------------------
+# Fused-MBConv: batch on "data", c_mid on "model" (projection psum only)
+# ---------------------------------------------------------------------------
+
+def _fusedmb_sharded_impl(x, w_conv, w_proj, mesh, stride, padding, tile_h,
+                          act, interpret, residency, collective, in_layout):
+    _require_shardable(mesh, x.shape[0], w_conv.shape[-1], "c_mid")
+    validate_layout(in_layout)
+    if in_layout != "replicated":
+        # a dense conv consumes EVERY input channel of every pixel — there
+        # is no channel-local entry for a c_in-sharded arrival (unlike the
+        # identity-expand MBConv), so the solver never offers one
+        raise ValueError(
+            f"fusedmb consumes replicated arrivals only, got {in_layout!r}")
+    _dp, mp = conv_mesh_shape(mesh)
+    c_out = w_proj.shape[1]
+    cw = scatter_c_out(c_out, mp) if collective == "psum_scatter" else c_out
+    TRACE_COUNTS["fusedmb"] += 1
+
+    def local(xl, wcl, wpl):
+        return _fusedmb_impl(xl, wcl, wpl, stride, padding, tile_h, act,
+                             interpret, residency, axis_name=MODEL_AXIS,
+                             collective=collective, scatter_width=cw)
+
+    batch = _batch_axes(mesh)
+    out_spec = P(batch, None, None,
+                 MODEL_AXIS if collective == "psum_scatter" else None)
+    out = shard_map_compat(
+        local, mesh,
+        in_specs=(P(batch, None, None, None),       # batch slice, full C_in
+                  P(None, None, None, MODEL_AXIS),  # conv c_mid planes
+                  P(MODEL_AXIS, None)),             # projection rows
+        out_specs=out_spec,
+    )(x, w_conv, w_proj)
+    if cw != c_out:
+        out = out[..., :c_out]
+    return out
+
+
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(3, 4, 5, 6, 7, 8, 9, 10, 11))
+def _fusedmb_sharded_op(x, w_conv, w_proj, mesh, stride, padding, tile_h,
+                        act, interpret, residency, collective, in_layout):
+    return _fusedmb_sharded_impl(x, w_conv, w_proj, mesh, stride, padding,
+                                 tile_h, act, interpret, residency,
+                                 collective, in_layout)
+
+
+def _fusedmb_sharded_fwd(x, w_conv, w_proj, mesh, stride, padding, tile_h,
+                         act, interpret, residency, collective, in_layout):
+    out = _fusedmb_sharded_op(x, w_conv, w_proj, mesh, stride, padding,
+                              tile_h, act, interpret, residency, collective,
+                              in_layout)
+    # barrier: under the jitted entry, raw-input residuals get forwarded
+    # and a cotangent double-counts (see compat.residual_barrier)
+    return out, residual_barrier((x, w_conv, w_proj))
+
+
+def _fusedmb_sharded_bwd(mesh, stride, padding, tile_h, act, interpret,
+                         residency, collective, in_layout, res, g):
+    x, w_conv, w_proj = res
+    _, vjp = jax.vjp(
+        lambda x_, wc_, wp_: fusedmb_ref(
+            x_, wc_, wp_, stride=stride, padding=padding, act=act),
+        x, w_conv, w_proj,
+    )
+    return vjp(g)
+
+
+_fusedmb_sharded_op.defvjp(_fusedmb_sharded_fwd, _fusedmb_sharded_bwd)
+
+
+@functools.lru_cache(maxsize=256)
+def _fusedmb_sharded_entry(mesh, stride, padding, tile_h, act, interpret,
+                           residency, collective, in_layout):
+    """One jitted entry point per (mesh, static schedule) — see
+    ``_sep_sharded_entry``."""
+
+    @jax.jit
+    def entry(x, w_conv, w_proj):
+        return _fusedmb_sharded_op(x, w_conv, w_proj, mesh, stride, padding,
+                                   tile_h, act, interpret, residency,
+                                   collective, in_layout)
+
+    return entry
+
+
+def convdk_fusedmb_fused_sharded(
+    x: jax.Array,
+    w_conv: jax.Array,
+    w_proj: jax.Array,
+    *,
+    mesh,
+    stride: int = 1,
+    padding: str = "SAME",
+    tile_h: int = 8,
+    act: Optional[str] = "silu",
+    interpret: Optional[bool] = None,
+    residency: Optional[str] = None,
+    collective: Optional[str] = None,
+    in_layout: Optional[str] = None,
+) -> jax.Array:
+    """Mesh-sharded single-pass Fused-MBConv block (differentiable).
+
+    ``shard_map`` over ``mesh``: batch on "data" (jointly with "pod" when
+    the mesh carries one), the expanded c_mid grid on "model".  Each
+    device runs the single-pass kernel on its channel slice of the dense
+    conv — staged per ``residency`` by the shared engine — and the
+    projection's c_mid reduction crosses devices per ``collective``
+    (``psum`` replicated output, ``psum_scatter`` c_out-sharded exit at
+    half the wire words; non-dividing c_out zero-pads and slices back,
+    exact).  There is NO SE stage, so the block's only collective is the
+    projection reduction — and no pass 2 at all: a pipelined consumer
+    cannot hide behind this block (``core.autotune`` prices that
+    honestly).
+
+    ``in_layout`` must be ``"replicated"``: a dense conv consumes every
+    input channel, so there is no channel-local entry for a sharded
+    arrival (the network solver never offers fusedmb one).
+
+    Requires ``b % (pod*data) == 0`` and ``c_mid % model == 0``.
+    Dispatches through a cached jitted entry point (no per-call
+    re-tracing).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    if residency is None:
+        residency = DEFAULT_RESIDENCY
+    if collective is None:
+        collective = DEFAULT_COLLECTIVE
+    if in_layout is None:
+        in_layout = DEFAULT_LAYOUT
+    residual_barrier_needed()
+    telemetry.counter("sharded.dispatch.fusedmb")
+    telemetry.counter(f"sharded.collective.{collective}")
+    return _fusedmb_sharded_entry(mesh, stride, padding, tile_h, act,
+                                  interpret, residency, collective,
+                                  in_layout)(x, w_conv, w_proj)

@@ -39,6 +39,10 @@ def _act_ref(x: jax.Array, act: Optional[str]) -> jax.Array:
         return x * jax.nn.sigmoid(x)
     if act == "sigmoid":
         return jax.nn.sigmoid(x)
+    if act == "hard_swish":
+        return x * jnp.clip(x + 3.0, 0.0, 6.0) * (1.0 / 6.0)
+    if act == "hard_sigmoid":
+        return jnp.clip(x + 3.0, 0.0, 6.0) * (1.0 / 6.0)
     raise ValueError(f"unsupported activation: {act}")
 
 
@@ -71,27 +75,35 @@ def mbconv_ref(
     x: jax.Array,
     w_exp: jax.Array,
     w_dw: jax.Array,
-    w_se1: jax.Array,
-    b_se1: jax.Array,
-    w_se2: jax.Array,
-    b_se2: jax.Array,
+    w_se1: Optional[jax.Array],
+    b_se1: Optional[jax.Array],
+    w_se2: Optional[jax.Array],
+    b_se2: Optional[jax.Array],
     w_proj: jax.Array,
     stride: int = 1,
     padding: str = "SAME",
     exp_act: Optional[str] = "silu",
     dw_act: Optional[str] = "silu",
+    se_act: Optional[str] = "silu",
+    gate_act: Optional[str] = "sigmoid",
 ) -> jax.Array:
-    """MBConv (EfficientNet) block oracle, WITHOUT the residual add:
+    """MBConv (EfficientNet / MobileNet-V3) block oracle, WITHOUT the
+    residual add:
 
         expand 1x1 -> exp_act -> depthwise k x k / s -> dw_act
-        -> SE (global mean pool -> FC -> silu -> FC -> sigmoid, scales the
-           DW output) -> project 1x1 (linear).
+        -> SE (global mean pool -> FC -> se_act -> FC -> gate_act, scales
+           the DW output; skipped entirely when ``w_se1 is None``)
+        -> project 1x1 (linear).
 
     x: (B, H, W, C_in); w_exp: (C_in, C_mid); w_dw: (k, k, C_mid);
     w_se1/b_se1: (C_mid, C_se)/(C_se,); w_se2/b_se2: (C_se, C_mid)/(C_mid,);
     w_proj: (C_mid, C_out).  For expand_ratio == 1 blocks pass the identity
-    as ``w_exp`` with ``exp_act=None`` (the kernel does the same).  All
-    contractions run in f32, matching the fused kernel's accumulators.
+    as ``w_exp`` with ``exp_act=None`` (the kernel does the same).  For
+    no-SE blocks (MobileNet-V3's early/middle stages) pass ``w_se1=None``
+    — the pool, both FCs and the gate multiply disappear, exactly like the
+    se=off kernel path.  EfficientNet keeps the (silu, sigmoid) defaults;
+    MobileNet-V3's SE uses ``se_act="relu"``/``gate_act="hard_sigmoid"``.
+    All contractions run in f32, matching the fused kernel's accumulators.
     """
     e = jax.lax.dot_general(
         x.astype(jnp.float32), w_exp.astype(jnp.float32),
@@ -102,13 +114,48 @@ def mbconv_ref(
     d = depthwise2d_ref(e, w_dw.astype(jnp.float32), stride=stride,
                         padding=padding)
     d = _act_ref(d.astype(jnp.float32), dw_act)
-    pooled = jnp.mean(d, axis=(1, 2))                       # (B, C_mid)
-    s1 = _act_ref(pooled @ w_se1.astype(jnp.float32)
-                  + b_se1.astype(jnp.float32), "silu")
-    gate = _act_ref(s1 @ w_se2.astype(jnp.float32)
-                    + b_se2.astype(jnp.float32), "sigmoid")
+    if w_se1 is not None:
+        pooled = jnp.mean(d, axis=(1, 2))                   # (B, C_mid)
+        s1 = _act_ref(pooled @ w_se1.astype(jnp.float32)
+                      + b_se1.astype(jnp.float32), se_act)
+        gate = _act_ref(s1 @ w_se2.astype(jnp.float32)
+                        + b_se2.astype(jnp.float32), gate_act)
+        d = d * gate[:, None, None, :]
     out = jax.lax.dot_general(
-        d * gate[:, None, None, :], w_proj.astype(jnp.float32),
+        d, w_proj.astype(jnp.float32),
+        dimension_numbers=(((3,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    return out.astype(x.dtype)
+
+
+def fusedmb_ref(
+    x: jax.Array,
+    w_conv: jax.Array,
+    w_proj: jax.Array,
+    stride: int = 1,
+    padding: str = "SAME",
+    act: Optional[str] = "silu",
+) -> jax.Array:
+    """Fused-MBConv (EfficientNet-V2) block oracle, WITHOUT the residual:
+
+        dense k x k / s conv (C_in -> C_mid) -> act -> project 1x1 (linear).
+
+    The expand-PW and the depthwise conv of a classic MBConv collapse into
+    ONE dense convolution; there is no SE stage (V2's fused stages run
+    without it).  x: (B, H, W, C_in); w_conv: (k, k, C_in, C_mid) HWIO;
+    w_proj: (C_mid, C_out).  All contractions run in f32, matching the
+    single-pass fused kernel's accumulators.
+    """
+    e = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32), w_conv.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    e = _act_ref(e, act)
+    out = jax.lax.dot_general(
+        e, w_proj.astype(jnp.float32),
         dimension_numbers=(((3,), (0,)), ((), ())),
         preferred_element_type=jnp.float32,
     )

@@ -1,9 +1,18 @@
 from .mbconv import (
     EffNetConfig,
+    EffNetV2Config,
+    MobileNetV3Config,
+    block_def,
     efficientnet_b0_apply,
     efficientnet_b0_def,
+    efficientnet_v2_s_apply,
+    efficientnet_v2_s_def,
+    fusedmb_block,
+    fusedmb_def,
     mbconv_block,
     mbconv_def,
+    mobilenet_v3_apply,
+    mobilenet_v3_def,
 )
 from .model import (
     ModelConfig,
@@ -17,6 +26,9 @@ from .param import abstract, count_params, logical_axes, materialize
 __all__ = [
     "ModelConfig", "decode_step", "forward", "init_decode_state",
     "model_def", "abstract", "count_params", "logical_axes", "materialize",
-    "EffNetConfig", "efficientnet_b0_apply", "efficientnet_b0_def",
-    "mbconv_block", "mbconv_def",
+    "EffNetConfig", "EffNetV2Config", "MobileNetV3Config", "block_def",
+    "efficientnet_b0_apply", "efficientnet_b0_def",
+    "efficientnet_v2_s_apply", "efficientnet_v2_s_def",
+    "fusedmb_block", "fusedmb_def", "mbconv_block", "mbconv_def",
+    "mobilenet_v3_apply", "mobilenet_v3_def",
 ]

@@ -87,9 +87,16 @@ class BlockNode:
     def output_buffer(self) -> str:
         return f"act{self.index + 1}"
 
+    @property
+    def one_pass(self) -> bool:
+        """True for single-pass families (Fused-MBConv): the whole block
+        is pass 1 and pass 2 touches nothing."""
+        return not (self.pass2.reads or self.pass2.writes)
+
 
 def mbconv_stage_io(index: int, mode: str = "retain",
-                    residual: bool = False) -> Tuple[StageIO, StageIO]:
+                    residual: bool = False, se: bool = True
+                    ) -> Tuple[StageIO, StageIO]:
     """The canonical (pass1, pass2) buffer sets of one two-pass fused
     MBConv block, matching the kernel's dataflow:
 
@@ -101,9 +108,24 @@ def mbconv_stage_io(index: int, mode: str = "retain",
       (retain) or the entry activation again (recompute re-runs the
       front end), plus the entry activation for the identity residual
       when present, and writes the exit activation.
+
+    ``se=False`` (a no-SE block, MobileNet-V3's early/middle stages)
+    drops the pool and gate-scale buffers from both passes.
     """
     a_in, a_out = f"act{index}", f"act{index + 1}"
     dw, pool, scale = f"dw{index}", f"pool{index}", f"scale{index}"
+    if not se:
+        # no-SE block: no pool, no gate scale.  retain still stages the
+        # DW tensor between the passes; recompute's pass 1 writes NOTHING
+        # (the kernel skips it entirely) — the node degenerates toward
+        # one-pass, but keeps the two-pass form because the kernel still
+        # runs the projection as pass 2.
+        p1_writes = {dw} if mode == "retain" else set()
+        p2_reads = {dw} if mode == "retain" else {a_in}
+        if residual:
+            p2_reads = set(p2_reads) | {a_in}
+        return (StageIO.of({a_in}, p1_writes),
+                StageIO.of(p2_reads, {a_out}))
     p1_writes = {pool, scale}
     p2_reads = {scale}
     if mode == "retain":
@@ -115,6 +137,21 @@ def mbconv_stage_io(index: int, mode: str = "retain",
         p2_reads.add(a_in)
     return (StageIO.of({a_in}, p1_writes),
             StageIO.of(p2_reads, {a_out}))
+
+
+def fusedmb_stage_io(index: int) -> Tuple[StageIO, StageIO]:
+    """The (pass1, pass2) buffer sets of one SINGLE-PASS Fused-MBConv
+    block: the whole block is pass 1 (entry activation in, exit
+    activation out — the expanded tensor never touches HBM, there is no
+    SE side buffer), and pass 2 is EMPTY.  ``validate()`` recognizes the
+    empty pass 2 as the one-pass form: the exit activation must then be
+    written by pass 1, and a downstream consumer can never pipeline its
+    entry against this node (nothing flows producer-pass-2 ->
+    consumer-pass-1) — matching ``core.autotune``'s serial pricing of
+    boundaries behind a one-pass producer.  The identity residual reads
+    the same entry activation pass 1 already reads."""
+    a_in, a_out = f"act{index}", f"act{index + 1}"
+    return (StageIO.of({a_in}, {a_out}), StageIO.of((), ()))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -155,10 +192,12 @@ class BlockGraph:
                 raise GraphValidationError(
                     f"{node.name}: pass 1 does not read its entry "
                     f"activation {node.input_buffer!r}")
-            if node.output_buffer not in node.pass2.writes:
+            writer = node.pass1 if node.one_pass else node.pass2
+            if node.output_buffer not in writer.writes:
                 raise GraphValidationError(
-                    f"{node.name}: pass 2 does not write its exit "
-                    f"activation {node.output_buffer!r}")
+                    f"{node.name}: "
+                    f"{'pass 1' if node.one_pass else 'pass 2'} does not "
+                    f"write its exit activation {node.output_buffer!r}")
         if self.nodes and self.nodes[0].entry_overlap == "pipelined":
             raise GraphValidationError(
                 f"{self.nodes[0].name}: the first node has no producer "
@@ -167,6 +206,11 @@ class BlockGraph:
             if node.entry_overlap != "pipelined":
                 continue
             prev = self.nodes[node.index - 1]
+            if prev.one_pass:
+                raise GraphValidationError(
+                    f"boundary {prev.name}->{node.name}: the producer is "
+                    "single-pass (no pass 2 to overlap with); the entry "
+                    "must be serial")
             streamed = prev.pass2.writes & node.pass1.reads
             if streamed != {node.input_buffer}:
                 raise GraphValidationError(
@@ -204,22 +248,25 @@ class BlockGraph:
         return x
 
 
-def build_mbconv_graph(specs, params, *, kcfg=None, mesh=None,
-                       plan=None) -> BlockGraph:
-    """The ``BlockGraph`` of an MBConv chain (the 16 B0 blocks; stem and
-    head stay in the caller).  Each node's apply closure performs the
-    exact block call the sequential loop in ``efficientnet_b0_apply``
-    used to make — same ``SchedulePin``, same ``in_layout`` — so
-    ``graph.lower(x)`` is bit-exact with the loop; with a ``plan``, each
-    node additionally inherits the plan's solved ``entry_overlap`` and
-    per-pass buffer sets reflect the solved mode (retain vs recompute).
+def build_block_graph(specs, params, *, kcfg=None, mesh=None,
+                      plan=None) -> BlockGraph:
+    """The ``BlockGraph`` of a block chain (stem and head stay in the
+    caller).  Family-generic: each spec's ``family`` picks the node form
+    — two-pass ``mbconv`` nodes (per-pass buffer sets reflecting the
+    solved mode and the spec's SE presence) or one-pass ``fusedmb``
+    nodes (empty pass 2, categorically serial exits).  Each node's apply
+    closure performs the exact block call the sequential loop used to
+    make — same ``SchedulePin``, same ``in_layout``, the spec's own
+    act/SE routing — so ``graph.lower(x)`` is bit-exact with the loop;
+    with a ``plan``, each node additionally inherits the plan's solved
+    ``entry_overlap``.
 
     Without a plan every boundary is serial and the buffer sets use the
     nodes' default retain dataflow — the graph is then purely the
     structural form of the loop.
     """
     from ..configs.base import SchedulePin
-    from .mbconv import mbconv_block
+    from .mbconv import fusedmb_block, mbconv_block
 
     if plan is not None and len(plan.blocks) != len(specs):
         raise GraphValidationError(
@@ -227,30 +274,53 @@ def build_mbconv_graph(specs, params, *, kcfg=None, mesh=None,
             f"{len(specs)}")
     nodes = []
     for i, sp in enumerate(specs):
+        family = getattr(sp, "family", "mbconv")
         if plan is not None:
             bp = plan.blocks[i]
-            pin = SchedulePin(mode=bp.schedule.mode,
+            # FusedMBSchedule has no mode axis (single pass)
+            mode = getattr(bp.schedule, "mode", "retain")
+            pin = SchedulePin(mode=getattr(bp.schedule, "mode", None),
                               residency=bp.schedule.residency,
                               collective=bp.schedule.collective)
-            mode = bp.schedule.mode
             overlap = bp.entry_overlap
             in_layout = bp.in_layout
-
-            def apply(x, _p=params[f"block{i}"], _s=sp.s, _pin=pin,
-                      _lay=in_layout, _ov=overlap):
-                y, _ = mbconv_block(x, _p, stride=_s, cfg=kcfg, mesh=mesh,
-                                    pin=_pin, in_layout=_lay,
-                                    overlap=_ov)
-                return y
         else:
             mode, overlap = "retain", DEFAULT_OVERLAP
+            pin, in_layout = None, "replicated"
 
-            def apply(x, _p=params[f"block{i}"], _s=sp.s):
-                y, _ = mbconv_block(x, _p, stride=_s, cfg=kcfg, mesh=mesh)
+        if family == "fusedmb":
+            def apply(x, _p=params[f"block{i}"], _sp=sp, _pin=pin,
+                      _ov=overlap if plan is not None else None):
+                y, _ = fusedmb_block(x, _p, stride=_sp.s, act=_sp.act,
+                                     cfg=kcfg, mesh=mesh, pin=_pin,
+                                     overlap=_ov)
                 return y
 
-        p1, p2 = mbconv_stage_io(i, mode=mode, residual=sp.has_residual)
-        nodes.append(BlockNode(index=i, name=f"mbconv{i}", pass1=p1,
+            p1, p2 = fusedmb_stage_io(i)
+            name = f"fusedmb{i}"
+        else:
+            def apply(x, _p=params[f"block{i}"], _sp=sp, _pin=pin,
+                      _lay=in_layout,
+                      _ov=overlap if plan is not None else None):
+                y, _ = mbconv_block(
+                    x, _p, stride=_sp.s, cfg=kcfg, mesh=mesh, pin=_pin,
+                    in_layout=_lay, overlap=_ov,
+                    exp_act=getattr(_sp, "act", "silu"),
+                    dw_act=getattr(_sp, "act", "silu"),
+                    se_act=getattr(_sp, "se_act", "silu"),
+                    gate_act=getattr(_sp, "gate_act", "sigmoid"))
+                return y
+
+            p1, p2 = mbconv_stage_io(
+                i, mode=mode, residual=sp.has_residual,
+                se=getattr(sp, "has_se", True))
+            name = f"mbconv{i}"
+        nodes.append(BlockNode(index=i, name=name, pass1=p1,
                                pass2=p2, entry_overlap=overlap,
                                apply=apply))
     return BlockGraph(nodes=tuple(nodes))
+
+
+# legacy name — the builder grew family dispatch and kept its behavior
+# for all-MBConv chains bit-for-bit
+build_mbconv_graph = build_block_graph

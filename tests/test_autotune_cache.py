@@ -315,6 +315,65 @@ def test_legacy_pre_overlap_keys_migrate(cache_dir):
     assert sep_keys and all("ov=" not in k for k in sep_keys)
 
 
+def test_legacy_pre_family_keys_migrate(cache_dir):
+    """MBConv entries persisted before the family axes (no ``act=`` /
+    ``se=`` segments) were all silu + SE-on picks — the only variant that
+    existed — so they must be honored as the ``act=silu|se=on`` entries
+    after a disk round-trip (no cold re-solve of a measured schedule),
+    while se=off and hard_swish solves cache under their OWN keys instead
+    of echoing the migrated pick."""
+    tmp_path, cache = cache_dir
+    sch = get_mbconv_schedule(8, 14, 14, 80, 480, 112, 5, 1,
+                              mesh_shape=(2, 4))
+    (key,) = list(_entries(tmp_path))
+    assert "|act=silu|se=on|" in key
+    legacy_key = key.replace("|act=silu|se=on|", "|")    # pre-family era
+    assert "act=" not in legacy_key and "se=" not in legacy_key
+    edited_th = 1 if sch.tile_h != 1 else 2
+    (tmp_path / "convdk_schedules.json").write_text(json.dumps(
+        {"version": 1,
+         "entries": {legacy_key: {"tile_h": edited_th, "mode": "recompute",
+                                  "source": "measured"}}}))
+    cache.clear_memory()                                 # "new process"
+    again = get_mbconv_schedule(8, 14, 14, 80, 480, 112, 5, 1,
+                                mesh_shape=(2, 4))
+    assert (again.tile_h, again.mode) == (edited_th, "recompute")
+
+    # the se=off and hard_swish variants must NOT hit the migrated silu
+    # se-on entry: they solve fresh and persist under their own segments
+    no_se = get_mbconv_schedule(8, 14, 14, 80, 480, 112, 5, 1,
+                                mesh_shape=(2, 4), se_ratio=0.0)
+    hs = get_mbconv_schedule(8, 14, 14, 80, 480, 112, 5, 1,
+                             mesh_shape=(2, 4), act="hard_swish")
+    assert no_se.traffic.total_bytes <= again.traffic.total_bytes
+    keys = list(_entries(tmp_path))
+    assert any("|act=silu|se=off|" in k for k in keys)
+    assert any("|act=hard_swish|se=on|" in k for k in keys)
+    assert hs.tile_h >= 1
+
+    # the CHAIN end to end: a key from the original (pre-mesh, pre-res,
+    # pre-coll, pre-layout, pre-overlap, pre-family) era walks all six
+    # migrations and still lands on the modern entry
+    oldest = key
+    for seg in ("|mesh2x4|", "|res=auto|", "|coll=auto|",
+                "|layout=replicated|", "|ov=serial|", "|act=silu|se=on|"):
+        oldest = oldest.replace(seg, "|")
+    assert len(oldest.split("|")) < len(key.split("|"))
+    (tmp_path / "convdk_schedules.json").write_text(json.dumps(
+        {"version": 1,
+         "entries": {oldest: {"tile_h": edited_th, "mode": "recompute",
+                              "source": "measured"}}}))
+    cache.clear_memory()
+    chained = get_mbconv_schedule(8, 14, 14, 80, 480, 112, 5, 1)
+    assert (chained.tile_h, chained.mode) == (edited_th, "recompute")
+
+    # separable keys never grow the family segments
+    get_fused_schedule(8, 28, 28, 64, 64, 3, 1)
+    sep_keys = [k for k in _entries(tmp_path) if k.startswith("sep|")]
+    assert sep_keys and all("act=" not in k and "se=" not in k
+                            for k in sep_keys)
+
+
 def test_corrupt_cache_file_is_ignored(cache_dir):
     tmp_path, _cache = cache_dir
     (tmp_path / "convdk_schedules.json").write_text("{not json")

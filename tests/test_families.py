@@ -1,0 +1,494 @@
+"""Family-generic block stack: no-SE MBConv and MobileNet-V3 act
+variants vs independent oracles, the single-pass Fused-MBConv kernel vs
+a dense-conv oracle (fwd + grad), the se=off collective contract, the
+fusedmb pass-split property, and the MobileNet-V3-Large /
+EfficientNet-V2-S models end to end through the family-generic network
+solver — sequential-oracle parity single-device and sharded."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.autotune import (
+    BlockRow,
+    get_fusedmb_schedule,
+    get_mbconv_schedule,
+)
+from repro.core.perfmodel import (
+    MBConvShape,
+    fusedmb_pass_traffic,
+)
+from repro.kernels import (
+    convdk_fusedmb_fused,
+    convdk_fusedmb_staged,
+    convdk_mbconv_fused,
+)
+
+TOL = dict(rtol=1e-4, atol=1e-4)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+HAVE_8 = jax.device_count() >= 8
+
+
+def _rand(rng, shape, scale=1.0):
+    return jnp.asarray(rng.normal(size=shape) * scale, jnp.float32)
+
+
+def _act(x, name):
+    if name is None:
+        return x
+    return {"silu": jax.nn.silu, "relu": jax.nn.relu,
+            "hard_swish": jax.nn.hard_swish, "sigmoid": jax.nn.sigmoid,
+            "hard_sigmoid": jax.nn.hard_sigmoid}[name](x)
+
+
+def _dw(x, w_dw, stride):
+    k_h, k_w, c_mid = w_dw.shape
+    return jax.lax.conv_general_dilated(
+        x, jnp.transpose(w_dw, (2, 0, 1))[:, None],
+        window_strides=(stride, stride), padding="SAME",
+        feature_group_count=c_mid,
+        dimension_numbers=("NHWC", "OIHW", "NHWC"))
+
+
+def _mbconv_oracle(x, w_exp, w_dw, w_se1, b_se1, w_se2, b_se2, w_proj,
+                   stride, exp_act="silu", dw_act="silu", se_act="silu",
+                   gate_act="sigmoid"):
+    """Independent MBConv oracle (explicit lax convs, explicit optional
+    SE — NOT the repo's mbconv_ref), covering the family axes: per-block
+    act, no-SE when ``w_se1 is None``, V3's (relu, hard_sigmoid) SE."""
+    d = _act(_dw(_act(x @ w_exp, exp_act), w_dw, stride), dw_act)
+    if w_se1 is not None:
+        gate = _act(_act(d.mean(axis=(1, 2)) @ w_se1 + b_se1, se_act)
+                    @ w_se2 + b_se2, gate_act)
+        d = d * gate[:, None, None, :]
+    return d @ w_proj
+
+
+def _fusedmb_oracle(x, w_conv, w_proj, stride, act="silu"):
+    """Independent Fused-MBConv oracle: ONE dense lax conv, act,
+    projection einsum (NOT the repo's fusedmb_ref)."""
+    e = jax.lax.conv_general_dilated(
+        x, w_conv, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return jnp.einsum("bhwc,cd->bhwd", _act(e, act), w_proj)
+
+
+# ---------------------------------------------------------------------------
+# kernel numerics: the family axes vs independent oracles
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k", [3, 5])
+@pytest.mark.parametrize("stride", [1, 2])
+@pytest.mark.parametrize("mode", ["retain", "recompute"])
+def test_mbconv_no_se_matches_oracle(k, stride, mode):
+    """se=off (ALL SE weights None): the pool, both FCs and the gate
+    disappear from the two-pass kernel, matching the SE-less oracle."""
+    rng = np.random.default_rng(k * 10 + stride)
+    b, h, w_in, ci, e, co = 2, 13, 11, 8, 3, 16
+    x = _rand(rng, (b, h, w_in, ci))
+    w_exp = _rand(rng, (ci, ci * e))
+    w_dw = _rand(rng, (k, k, ci * e), 0.3)
+    w_proj = _rand(rng, (ci * e, co))
+    got = convdk_mbconv_fused(x, w_exp, w_dw, None, None, None, None,
+                              w_proj, stride=stride, mode=mode, tile_h=4,
+                              interpret=True)
+    want = _mbconv_oracle(x, w_exp, w_dw, None, None, None, None, w_proj,
+                          stride)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+@pytest.mark.parametrize("k", [3, 5])
+@pytest.mark.parametrize("stride", [1, 2])
+@pytest.mark.parametrize("mode", ["retain", "recompute"])
+def test_mbconv_v3_flavor_matches_oracle(k, stride, mode):
+    """MobileNet-V3's late stages: hard_swish expand/DW with the (relu,
+    hard_sigmoid) SE MLP, against the explicit oracle."""
+    rng = np.random.default_rng(k * 100 + stride)
+    b, h, w_in, ci, e, co = 2, 11, 9, 8, 2, 12
+    c_mid, c_se = ci * e, max(1, ci // 4)
+    x = _rand(rng, (b, h, w_in, ci))
+    weights = (_rand(rng, (ci, c_mid)), _rand(rng, (k, k, c_mid), 0.3),
+               _rand(rng, (c_mid, c_se)), _rand(rng, (c_se,), 0.1),
+               _rand(rng, (c_se, c_mid)), _rand(rng, (c_mid,), 0.1),
+               _rand(rng, (c_mid, co)))
+    got = convdk_mbconv_fused(
+        x, *weights, stride=stride, mode=mode, tile_h=4,
+        exp_act="hard_swish", dw_act="hard_swish", se_act="relu",
+        gate_act="hard_sigmoid", interpret=True)
+    want = _mbconv_oracle(x, *weights, stride, exp_act="hard_swish",
+                          dw_act="hard_swish", se_act="relu",
+                          gate_act="hard_sigmoid")
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+@pytest.mark.parametrize("k", [3, 5])
+@pytest.mark.parametrize("stride", [1, 2])
+def test_fusedmb_matches_dense_conv_oracle(k, stride):
+    """The single-pass Fused-MBConv kernel == dense conv -> act ->
+    projection, and the staged baseline computes the identical block."""
+    rng = np.random.default_rng(k + stride)
+    b, h, w_in, ci, cm, co = 2, 13, 11, 8, 24, 16
+    x = _rand(rng, (b, h, w_in, ci))
+    w_conv = _rand(rng, (k, k, ci, cm), 0.3)
+    w_proj = _rand(rng, (cm, co))
+    want = _fusedmb_oracle(x, w_conv, w_proj, stride)
+    for tile_h in (1, 4):
+        got = convdk_fusedmb_fused(x, w_conv, w_proj, stride=stride,
+                                   tile_h=tile_h, interpret=True)
+        assert got.shape == want.shape
+        np.testing.assert_allclose(got, want, **TOL)
+    staged = convdk_fusedmb_staged(x, w_conv, w_proj, stride=stride,
+                                   interpret=True)
+    np.testing.assert_allclose(staged, want, **TOL)
+
+
+def test_fusedmb_grad_matches_oracle():
+    rng = np.random.default_rng(17)
+    x = _rand(rng, (1, 10, 9, 8))
+    w_conv = _rand(rng, (3, 3, 8, 16), 0.3)
+    w_proj = _rand(rng, (16, 12))
+
+    def loss(fn):
+        return lambda *p: (fn(*p) ** 2).sum()
+
+    f = loss(lambda *p: convdk_fusedmb_fused(*p, stride=2, interpret=True))
+    r = loss(lambda *p: _fusedmb_oracle(*p, 2))
+    g = jax.grad(f, argnums=(0, 1, 2))(x, w_conv, w_proj)
+    g_ref = jax.grad(r, argnums=(0, 1, 2))(x, w_conv, w_proj)
+    for got, want in zip(g, g_ref):
+        np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# pass-split property + family-generic rows
+# ---------------------------------------------------------------------------
+
+def test_fusedmb_pass2_traffic_is_exactly_zero():
+    """The one-pass family's pass-2 figures are identically zero at EVERY
+    (shape, tile_h, residency) — the structural fact the pipeliner leans
+    on when it refuses to hide a consumer behind a fusedmb block."""
+    for (ci, cm, co, hw, k, s) in [(24, 24, 24, 56, 3, 1),
+                                   (24, 96, 48, 56, 3, 2),
+                                   (64, 256, 128, 14, 3, 2)]:
+        shape = MBConvShape(b=1, h=hw, w=hw, c_in=ci, c_mid=cm, c_out=co,
+                            k=k, s=s, se_ratio=0.0)
+        for tile_h in (1, 4, 8):
+            for res in ("resident", "strip_dma", "strip_dma_db"):
+                p1, p2 = fusedmb_pass_traffic(shape, tile_h, 128, res)
+                assert p2.total_bytes == 0, (shape, tile_h, res, p2)
+                assert p1.total_bytes > 0
+        sch = get_fusedmb_schedule(1, hw, hw, ci, cm, co, k, s)
+        assert sch.total_bytes < sch.staged_total_bytes
+
+
+def test_blockrow_legacy_tuple_compat():
+    """Legacy 7-tuples ARE BlockRows: same positional head, mbconv/silu
+    defaults — the solver accepts mixed row vocabularies."""
+    r = BlockRow(56, 56, 24, 144, 40, 5, 2)
+    assert (r.family, r.act, r.se_ratio) == ("mbconv", "silu", 0.25)
+    f = BlockRow(56, 56, 24, 96, 24, 3, 1, family="fusedmb", act="silu",
+                 se_ratio=0.25)
+    assert f.se_ratio == 0.0                 # fusedmb never carries SE
+
+
+def test_model_tables_match_workload_tables():
+    """The model builders' spec tables and the core workload tables are
+    two views of the same networks — row for row, family, act and SE
+    included."""
+    from repro.core.workloads import (
+        effnet_v2_chain_rows, mobilenet_v3_chain_rows)
+    from repro.models.mbconv import (
+        EffNetV2Config, MobileNetV3Config, block_chain_rows,
+        effnet_v2_block_specs, mobilenet_v3_specs)
+
+    v3 = block_chain_rows(mobilenet_v3_specs(MobileNetV3Config()), 112, 112)
+    assert v3 == mobilenet_v3_chain_rows("large")
+    assert {r.act for r in v3} == {"relu", "hard_swish"}
+    assert any(r.se_ratio == 0.0 for r in v3)
+    assert any(r.se_ratio > 0.0 for r in v3)
+
+    v2s = block_chain_rows(effnet_v2_block_specs(EffNetV2Config()), 112, 112)
+    assert v2s == effnet_v2_chain_rows()
+    assert len(v2s) == 40
+    assert [r.family for r in v2s][:10] == ["fusedmb"] * 10
+    assert all(r.family == "mbconv" for r in v2s[10:])
+
+
+def test_family_axes_in_schedule_cache_keys():
+    """act/se are schedule-cache axes: a no-SE or hard_swish solve never
+    collides with the silu/se-on pick for the same layer shape."""
+    base = get_mbconv_schedule(1, 14, 14, 16, 64, 24, 3, 1)
+    no_se = get_mbconv_schedule(1, 14, 14, 16, 64, 24, 3, 1, se_ratio=0.0)
+    hs = get_mbconv_schedule(1, 14, 14, 16, 64, 24, 3, 1, act="hard_swish")
+    assert base.traffic.total_bytes >= no_se.traffic.total_bytes
+    assert no_se.traffic.total_bytes < base.staged_traffic.total_bytes
+    assert hs.tile_h >= 1
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: V3-Large and V2-S vs sequential oracles
+# ---------------------------------------------------------------------------
+
+def _sequential_blocks(x, specs, params):
+    """Sequential oracle for the block chain: repo refs (lax math) +
+    identity residuals, one block at a time — the graph path must match."""
+    from repro.kernels import fusedmb_ref, mbconv_ref
+
+    for i, sp in enumerate(specs):
+        p = params[f"block{i}"]
+        if sp.family == "fusedmb":
+            y = fusedmb_ref(x, p["conv"], p["proj"], stride=sp.s,
+                            act=sp.act)
+        else:
+            if "exp" in p:
+                w_exp, exp_act = p["exp"], sp.act
+            else:
+                w_exp, exp_act = jnp.eye(sp.c_mid, dtype=x.dtype), None
+            y = mbconv_ref(x, w_exp, p["dw"], p.get("se_w1"),
+                           p.get("se_b1"), p.get("se_w2"), p.get("se_b2"),
+                           p["proj"], stride=sp.s, exp_act=exp_act,
+                           dw_act=sp.act, se_act=sp.se_act,
+                           gate_act=sp.gate_act)
+        if sp.has_residual:
+            y = y + x
+        x = y
+    return x
+
+
+def _v3_oracle(params, images, cfg):
+    from repro.models.mbconv import mobilenet_v3_specs
+
+    x = jax.lax.conv_general_dilated(
+        images, params["stem"], (2, 2), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    x = _sequential_blocks(jax.nn.hard_swish(x), mobilenet_v3_specs(cfg),
+                           params)
+    x = jax.nn.hard_swish(jnp.einsum("bhwc,cd->bhwd", x, params["head"]))
+    x = jax.nn.hard_swish(x.mean(axis=(1, 2)) @ params["fc"])
+    return x @ params["cls_w"] + params["cls_b"]
+
+
+def _v2s_oracle(params, images, cfg):
+    from repro.models.mbconv import effnet_v2_block_specs
+
+    x = jax.lax.conv_general_dilated(
+        images, params["stem"], (2, 2), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    x = _sequential_blocks(jax.nn.silu(x), effnet_v2_block_specs(cfg),
+                           params)
+    x = jax.nn.silu(jnp.einsum("bhwc,cd->bhwd", x, params["head"]))
+    return x.mean(axis=(1, 2)) @ params["cls_w"] + params["cls_b"]
+
+
+def test_mobilenet_v3_matches_sequential_oracle():
+    """V3-Large (width-scaled) through blockgraph == the sequential
+    per-block ref loop, forward AND gradient, on the fused kernel path."""
+    from repro.configs.base import ConvKernelConfig
+    from repro.models.mbconv import MobileNetV3Config, mobilenet_v3_def
+    from repro.models.mbconv import mobilenet_v3_apply
+    from repro.models.param import materialize
+
+    cfg = MobileNetV3Config(num_classes=4, width_mult=0.125)
+    params = materialize(mobilenet_v3_def(cfg), jax.random.key(0))
+    rng = np.random.default_rng(0)
+    x = _rand(rng, (1, 16, 16, 3), 0.5)
+    kcfg = ConvKernelConfig(interpret=True)
+    logits = mobilenet_v3_apply(params, x, cfg, kcfg=kcfg)
+    want = _v3_oracle(params, x, cfg)
+    assert logits.shape == (1, 4)
+    np.testing.assert_allclose(logits, want, **TOL)
+
+    g = jax.grad(lambda p: (mobilenet_v3_apply(p, x, cfg, kcfg=kcfg)
+                            ** 2).sum())(params)
+    g_ref = jax.grad(lambda p: (_v3_oracle(p, x, cfg) ** 2).sum())(params)
+    for got, want in zip(jax.tree.leaves(g), jax.tree.leaves(g_ref)):
+        np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_efficientnet_v2_s_matches_sequential_oracle():
+    """V2-S (truncated stages: fused head + MBConv tail) through the
+    mixed-family blockgraph == the sequential ref loop, fwd + grad."""
+    from repro.configs.base import ConvKernelConfig
+    from repro.models.mbconv import (
+        EffNetV2Config, efficientnet_v2_s_apply, efficientnet_v2_s_def)
+    from repro.models.param import materialize
+
+    cfg = EffNetV2Config(num_classes=4, width_mult=0.25, head_c=128,
+                         stages=(("fusedmb", 1, 3, 1, 24, 1),
+                                 ("fusedmb", 4, 3, 2, 48, 2),
+                                 ("mbconv", 4, 3, 2, 64, 2)))
+    params = materialize(efficientnet_v2_s_def(cfg), jax.random.key(1))
+    rng = np.random.default_rng(1)
+    x = _rand(rng, (1, 16, 16, 3), 0.5)
+    kcfg = ConvKernelConfig(interpret=True)
+    logits = efficientnet_v2_s_apply(params, x, cfg, kcfg=kcfg)
+    want = _v2s_oracle(params, x, cfg)
+    assert logits.shape == (1, 4)
+    np.testing.assert_allclose(logits, want, **TOL)
+
+    g = jax.grad(lambda p: (efficientnet_v2_s_apply(p, x, cfg, kcfg=kcfg)
+                            ** 2).sum())(params)
+    g_ref = jax.grad(lambda p: (_v2s_oracle(p, x, cfg) ** 2).sum())(params)
+    for got, want in zip(jax.tree.leaves(g), jax.tree.leaves(g_ref)):
+        np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_one_pass_nodes_validate_and_refuse_phantom_overlap():
+    """Graph contract: fusedmb nodes carry an EMPTY pass 2, validate as
+    one-pass producers, and a pipelined entry directly behind one is a
+    validation error (there is no pass-2 compute to hide the DMA in)."""
+    from repro.models.blockgraph import (
+        BlockGraph, BlockNode, GraphValidationError, fusedmb_stage_io,
+        mbconv_stage_io)
+
+    p1, p2 = fusedmb_stage_io(3)
+    assert "act3" in p1.reads and "act4" in p1.writes
+    assert not p2.reads and not p2.writes
+
+    from repro.configs.base import ConvKernelConfig
+    from repro.models.blockgraph import build_block_graph
+    from repro.models.mbconv import (
+        EffNetV2Config, effnet_v2_block_specs, efficientnet_v2_s_def)
+    from repro.models.param import materialize
+
+    cfg = EffNetV2Config(num_classes=4, width_mult=0.25, head_c=64,
+                         stages=(("fusedmb", 2, 3, 1, 24, 2),))
+    params = materialize(efficientnet_v2_s_def(cfg), jax.random.key(0))
+    specs = effnet_v2_block_specs(cfg)
+    graph = build_block_graph(specs, params,
+                              kcfg=ConvKernelConfig(interpret=True))
+    graph.validate()                         # one-pass chain is well-formed
+    assert all(n.one_pass for n in graph.nodes)
+
+    # a pipelined entry behind the one-pass producer must refuse
+    p1b, p2b = mbconv_stage_io(1, mode="retain")
+    bad = BlockGraph(nodes=(
+        BlockNode(0, "fusedmb0", *fusedmb_stage_io(0)),
+        BlockNode(1, "mbconv1", p1b, p2b, entry_overlap="pipelined")))
+    with pytest.raises(GraphValidationError, match="single-pass"):
+        bad.validate()
+
+
+# ---------------------------------------------------------------------------
+# sharded: the se=off collective contract + end-to-end model parity
+# (8-virtual-device harness, in-process when available, else subprocess)
+# ---------------------------------------------------------------------------
+
+_PREAMBLE = textwrap.dedent("""
+    import os
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.compat import make_mesh
+
+    assert jax.device_count() >= 8, jax.devices()
+
+    def rand(rng, shape, scale=1.0):
+        return jnp.asarray(rng.normal(size=shape) * scale, jnp.float32)
+
+    mesh = make_mesh((2, 4), ("data", "model"))
+""")
+
+
+def run_case(body: str) -> None:
+    src = _PREAMBLE + textwrap.dedent(body)
+    if HAVE_8:
+        exec(compile(src, "<families-sharded-case>", "exec"),
+             {"__name__": "__families_sharded__"})
+        return
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"),
+               XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    env.setdefault("CONVDK_RESIDUAL_BARRIER", "on")
+    res = subprocess.run([sys.executable, "-c", src], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert res.returncode == 0, res.stderr[-4000:]
+
+
+def test_no_se_block_emits_zero_squeeze_collectives():
+    """Intercept ``jax.lax.psum`` during the sharded se=off MBConv trace
+    under the (2,4) mesh: the ONLY collective over "model" is the
+    projection partial — the SE squeeze psum is GONE, in both pass-2
+    modes (the modeled se=off collective saving is structural, not just
+    an accounting delta)."""
+    run_case("""
+    from repro import compat
+    from repro.kernels import convdk_mbconv_fused_sharded, mbconv_ref
+    from repro.kernels.convdk_sharded import _mbconv_sharded_entry
+    compat.residual_barrier_needed()
+    _mbconv_sharded_entry.cache_clear()
+    rng = np.random.default_rng(4)
+    b, h, w_in, ci, e, co, k, s = 8, 9, 9, 8, 2, 16, 3, 1
+    x = rand(rng, (b, h, w_in, ci))
+    w_exp = rand(rng, (ci, ci * e))
+    w_dw = rand(rng, (k, k, ci * e), 0.3)
+    w_proj = rand(rng, (ci * e, co))
+    weights = (w_exp, w_dw, None, None, None, None, w_proj)
+    want = mbconv_ref(x, *weights, stride=s)
+
+    calls = []
+    orig_psum = jax.lax.psum
+
+    def counting_psum(val, axis_name, **kw):
+        calls.append((jnp.shape(val), axis_name))
+        return orig_psum(val, axis_name, **kw)
+
+    jax.lax.psum = counting_psum
+    try:
+        for mode in ("retain", "recompute"):
+            calls.clear()
+            got = convdk_mbconv_fused_sharded(
+                x, *weights, mesh=mesh, stride=s, tile_h=3, mode=mode,
+                interpret=True)
+            np.testing.assert_allclose(got, want, err_msg=mode,
+                                       rtol=1e-4, atol=1e-4)
+            model_calls = [c for c in calls if c[1] == "model"]
+            # exactly ONE model-axis collective: the projection partial.
+            # ZERO squeeze psums — there is no SE pool to reduce.
+            assert len(model_calls) == 1, (mode, calls)
+            assert model_calls[0][0] == (b // 2, h, w_in, co), model_calls
+    finally:
+        jax.lax.psum = orig_psum
+    print("NO_SE_ZERO_SQUEEZE_OK")
+    """)
+
+
+def test_sharded_models_match_single_device():
+    """V3-Large and V2-S end to end on the (2,4) mesh at b=8: the
+    solver-planned sharded run equals the single-device run (which the
+    oracle tests above pin to the sequential refs)."""
+    run_case("""
+    from repro.configs.base import ConvKernelConfig
+    from repro.models.mbconv import (
+        EffNetV2Config, MobileNetV3Config, efficientnet_v2_s_apply,
+        efficientnet_v2_s_def, mobilenet_v3_apply, mobilenet_v3_def)
+    from repro.models.param import materialize
+
+    kcfg = ConvKernelConfig(interpret=True)
+    rng = np.random.default_rng(5)
+    x = rand(rng, (8, 16, 16, 3), 0.5)
+
+    cfg = MobileNetV3Config(num_classes=4, width_mult=0.125)
+    params = materialize(mobilenet_v3_def(cfg), jax.random.key(0))
+    single = mobilenet_v3_apply(params, x, cfg, kcfg=kcfg)
+    sharded = mobilenet_v3_apply(params, x, cfg, kcfg=kcfg, mesh=mesh)
+    np.testing.assert_allclose(sharded, single, rtol=1e-4, atol=1e-4)
+
+    v2cfg = EffNetV2Config(num_classes=4, width_mult=0.25, head_c=128,
+                           stages=(("fusedmb", 1, 3, 1, 24, 1),
+                                   ("fusedmb", 4, 3, 2, 48, 2),
+                                   ("mbconv", 4, 3, 2, 64, 2)))
+    v2params = materialize(efficientnet_v2_s_def(v2cfg), jax.random.key(1))
+    single2 = efficientnet_v2_s_apply(v2params, x, v2cfg, kcfg=kcfg)
+    sharded2 = efficientnet_v2_s_apply(v2params, x, v2cfg, kcfg=kcfg,
+                                       mesh=mesh)
+    np.testing.assert_allclose(sharded2, single2, rtol=1e-4, atol=1e-4)
+    print("SHARDED_MODELS_OK")
+    """)
